@@ -1,0 +1,80 @@
+"""Shared benchmark utilities: timing, dataset builders, method registry.
+
+CPU-scaled sizes: the paper benches up to 2M×256 on a 64-core node; this
+container has 6 cores, so default sizes are scaled down (documented per
+table in EXPERIMENTS.md) while keeping every RATIO the paper reports
+(ProHD-vs-sampling error, speedup-vs-exact) measurable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ProHDConfig, prohd
+from repro.core.exact import hausdorff_tiled
+from repro.core.sampling import random_sampling_hd, systematic_sampling_hd
+from repro.data.pointclouds import make_dataset
+
+KEY = jax.random.PRNGKey(20250717)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 2, **kw):
+    """Median wall time (s) + last result, fully blocking."""
+    for _ in range(warmup):
+        res = fn(*args, **kw)
+        jax.block_until_ready(res)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        res = fn(*args, **kw)
+        jax.block_until_ready(res)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], res
+
+
+def timed_once(fn, *args, **kw):
+    """Two-call timing for expensive exact baselines: the first call pays
+    compile, the SECOND call's time is reported — so speedup claims never
+    benefit from the baseline's compile time."""
+    res = fn(*args, **kw)
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    res = fn(*args, **kw)
+    jax.block_until_ready(res)
+    return time.perf_counter() - t0, res
+
+
+def rel_err(approx: float, exact: float) -> float:
+    return abs(approx - exact) / max(exact, 1e-12) * 100.0
+
+
+def exact_hd(a, b) -> float:
+    return float(hausdorff_tiled(a, b, block=4096))
+
+
+def run_method(name: str, a, b, alpha: float, key=KEY, **kw):
+    """Dispatch one approximate method; returns (hd, subset_size)."""
+    if name == "prohd":
+        est = prohd(a, b, ProHDConfig(alpha=alpha, **kw))
+        return float(est.hd), int(est.n_sel_a) + int(est.n_sel_b)
+    if name == "prohd_subset":
+        est = prohd(a, b, ProHDConfig(alpha=alpha, inner="subset", **kw))
+        return float(est.hd), int(est.n_sel_a) + int(est.n_sel_b)
+    if name == "random":
+        hd, n = random_sampling_hd(key, a, b, alpha)
+        return float(hd), n
+    if name == "systematic":
+        hd, n = systematic_sampling_hd(key, a, b, alpha)
+        return float(hd), n
+    raise KeyError(name)
+
+
+def dataset(name: str, n_a: int, n_b: int, d: int, seed: int = 0):
+    return make_dataset(name, jax.random.fold_in(KEY, seed), n_a, n_b, d)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,57 @@
+"""Benchmark entry point (deliverable d): one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows, then a findings summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases")
+    ap.add_argument("--quick", action="store_true", help="fig1 + phases only")
+    args = ap.parse_args()
+
+    from benchmarks import tables
+
+    benches = {
+        "fig1": tables.fig1_overall_effectiveness,
+        "table2": tables.table2_sample_efficiency,
+        "fig2": tables.fig2_param_sensitivity,
+        "fig3": tables.fig3_dim_scalability,
+        "fig4": tables.fig4_ratio_scalability,
+        "fig5": tables.fig5_size_scalability,
+        "phases": tables.bench_prohd_phases,
+        "backends": tables.bench_backends,
+    }
+    if args.quick:
+        selected = ["fig1", "phases"]
+    elif args.only:
+        selected = [s.strip() for s in args.only.split(",")]
+    else:
+        selected = list(benches)
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            for row in benches[name]():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if tables.REPORT:
+        print("\n# ==== findings ====")
+        for line in tables.REPORT:
+            print(f"# {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end training driver: a small GQA transformer LM for a few hundred
+steps on CPU, with async checkpointing, fault-tolerant resume, and ProHD
+drift monitoring of the model's own hidden states (the paper's technique as
+a first-class training feature).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core import ProHDConfig, prohd
+from repro.data.synth import lm_batch
+from repro.models import transformer as T
+from repro.train import optimizer as opt_mod
+from repro.train.loop import TrainConfig, fit
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--d-model", type=int, default=128)
+args = ap.parse_args()
+
+cfg = LMConfig(
+    name="demo-lm", n_layers=4, d_model=args.d_model, n_heads=8, n_kv_heads=2,
+    d_ff=4 * args.d_model, vocab=512, dtype=jnp.float32, attn_chunk=32, remat=False,
+)
+key = jax.random.PRNGKey(0)
+params = T.init_lm_params(key, cfg)
+n_params = sum(p.size for p in jax.tree.leaves(params))
+print(f"model: {n_params/1e6:.1f}M params")
+
+SEQ, BATCH = 64, 16
+reference_hidden = {}
+
+
+def data_iter(start):
+    i = start
+    while True:
+        yield lm_batch(jax.random.fold_in(key, i), cfg, BATCH, SEQ)
+        i += 1
+
+
+def drift_hook(p, info):
+    """ProHD between current hidden states and the step-0 reference set."""
+    batch = lm_batch(jax.random.fold_in(key, 999983), cfg, BATCH, SEQ)
+    hidden, _ = T.lm_forward(p, batch["tokens"][:, :-1], cfg)
+    flat = hidden.reshape(-1, cfg.d_model)
+    if "ref" not in reference_hidden:
+        reference_hidden["ref"] = flat
+        return
+    est = prohd(reference_hidden["ref"], flat, ProHDConfig(alpha=0.05))
+    print(f"  [drift@{info['step']}] ProHD(hidden_t, hidden_0) = {float(est.hd):.4f} "
+          f"certified ≥ {float(est.hd_proj):.4f}")
+
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    tc = TrainConfig(steps=args.steps, log_every=25, ckpt_every=50,
+                     ckpt_dir=ckpt_dir, drift_every=50)
+    params, _, logs = fit(
+        params=params,
+        optimizer=opt_mod.adamw(lr=3e-4, weight_decay=0.01),
+        loss_fn=lambda p, b: T.lm_loss(p, b, cfg),
+        data_iter_fn=data_iter,
+        cfg=tc,
+        drift_hook=drift_hook,
+        log_fn=lambda s, r: print(f"step {s:4d}: loss={r['loss']:.4f} ce={r['ce_loss']:.4f} dt={r['dt']*1e3:.0f}ms"),
+    )
+print(f"final loss: {logs[-1]['loss']:.4f} (from {logs[0]['loss']:.4f})")

@@ -1,0 +1,191 @@
+"""Three-term roofline from a compiled dry-run artifact (assignment §ROOFLINE).
+
+Terms (seconds), all per-device — equivalent to the assignment's
+"aggregate / (chips × unit-rate)" since HLO cost_analysis and the parsed
+collective bytes are already per-device for an SPMD module:
+
+    compute    = HLO_FLOPs_per_device        / PEAK_FLOPS      (197 TF bf16)
+    memory     = HLO_bytes_per_device        / HBM_BW          (819 GB/s)
+    collective = wire_bytes_per_device       / LINK_BW         (50 GB/s)
+
+cost_analysis() gives FLOPs and bytes; collective bytes are NOT in
+cost_analysis — we parse the post-partitioning optimized HLO text and sum
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with per-op wire factors:
+
+    all-gather ×1        (each device receives ≈ the full result)
+    all-reduce ×2        (ring: reduce-scatter + all-gather phases)
+    reduce-scatter ×G    (sends ≈ the operand = result × group size)
+    all-to-all ×1, collective-permute ×1
+
+Group size G is parsed from replica_groups (both the explicit {{0,1,…}}
+and the iota [G,S]<=[N] forms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+# TPU v5e (assignment hardware constants)
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes / s / chip
+LINK_BW = 50e9          # bytes / s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<async>-start|-done)?\("
+)
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, op: str, nbytes: float):
+        self.wire_bytes += nbytes
+        rec = self.by_op.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+
+
+def parse_collectives(hlo_text: str | Iterable[str]) -> CollectiveStats:
+    """Sum per-device wire bytes of all collective ops in optimized HLO."""
+    stats = CollectiveStats()
+    lines = hlo_text.splitlines() if isinstance(hlo_text, str) else hlo_text
+    for line in lines:
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # async pairs: count -start, skip -done (same transfer)
+        if m.group("async") == "-done":
+            continue
+        result_bytes = _shape_bytes(m.group("result"))
+        if m.group("async") == "-start":
+            # -start results are (operand, result[, scratch]) tuples that
+            # alias the transfer buffers — halve to avoid double counting
+            result_bytes //= 2
+        if op == "all-reduce":
+            factor = 2.0
+        elif op == "reduce-scatter":
+            factor = float(_group_size(line))
+        else:
+            factor = 1.0
+        stats.add(op, result_bytes * factor)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    collectives_by_op: dict
+    model_flops: float
+    n_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time lower bound (perfect overlap of all three engines)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/dispatch/padding waste shows
+        up here as a fraction < 1."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model-FLOPs utilisation at the roofline step time."""
+        if self.t_bound <= 0:
+            return float("nan")
+        return (self.model_flops / self.n_devices / self.t_bound) / PEAK_FLOPS
+
+    def summary(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "collectives": self.collectives_by_op,
+        }
+
+
+def analyze(compiled, model_flops: float, n_devices: int, hlo_text: str | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = parse_collectives(text)
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        wire_bytes_per_device=stats.wire_bytes,
+        collectives_by_op=stats.by_op,
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )

@@ -1,0 +1,258 @@
+"""Config system: architecture dataclasses + shape cells + the registry.
+
+Every assigned architecture is a module ``repro/configs/<id>.py`` exporting
+``CONFIG`` (exact published hyperparameters) and ``SHAPES`` (its shape set).
+``registry()`` maps arch-id → ArchSpec; the launcher, dry-run, smoke tests
+and benchmarks all resolve architectures through it (``--arch <id>``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shape cells
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape × step-kind) cell of the dry-run matrix."""
+
+    name: str
+    kind: str  # "train" | "prefill" | "decode" | "serve" | "retrieval" | ...
+    # free-form dims, interpreted by the arch family's input_specs():
+    dims: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    skip_reason: str | None = None  # e.g. long_500k on full-attention archs
+
+    def dim(self, key: str) -> int:
+        return int(self.dims[key])
+
+
+LM_SHAPES = (
+    ShapeCell("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+    ShapeCell("prefill_32k", "prefill", {"seq_len": 32768, "global_batch": 32}),
+    ShapeCell("decode_32k", "decode", {"seq_len": 32768, "global_batch": 128}),
+    ShapeCell(
+        "long_500k",
+        "decode",
+        {"seq_len": 524288, "global_batch": 1},
+        skip_reason=(
+            "pure full-attention arch: long_500k requires sub-quadratic "
+            "attention per the assignment; see DESIGN.md §4"
+        ),
+    ),
+)
+
+GNN_SHAPES = (
+    ShapeCell("full_graph_sm", "train", {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433}),
+    ShapeCell(
+        "minibatch_lg",
+        "train",
+        {"n_nodes": 232965, "n_edges": 114615892, "batch_nodes": 1024,
+         "fanout0": 15, "fanout1": 10, "d_feat": 602},
+    ),
+    ShapeCell("ogb_products", "train", {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100}),
+    ShapeCell("molecule", "train", {"n_nodes": 30, "n_edges": 64, "batch": 128, "d_feat": 16}),
+)
+
+RECSYS_SHAPES = (
+    ShapeCell("train_batch", "train", {"batch": 65536}),
+    ShapeCell("serve_p99", "serve", {"batch": 512}),
+    ShapeCell("serve_bulk", "serve", {"batch": 262144}),
+    ShapeCell("retrieval_cand", "retrieval", {"batch": 1, "n_candidates": 1_000_000}),
+)
+
+
+# ---------------------------------------------------------------------------
+# Architecture configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only transformer LM (dense or MoE), GQA attention."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    moe_experts: int = 0       # 0 → dense FFN
+    moe_top_k: int = 0
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # distribution
+    fsdp: bool = False          # shard params over "data" too (ZeRO-3 style)
+    remat: bool = True
+    attn_chunk: int = 512       # kv-chunk for the online-softmax attention
+    capacity_factor: float = 1.25
+    # beyond-spec extra: sliding-window attention (None = full)
+    window: int | None = None
+    # unroll scans (layer stack + attention chunks): used by the dry-run's
+    # cost-calibration variants — XLA cost_analysis counts while-bodies once,
+    # so roofline FLOPs/bytes are extrapolated from unrolled 1- and 2-layer
+    # compiles (see launch/specs.calibration_variants)
+    unroll: bool = False
+    # §Perf hillclimb knob: what the mesh's "model" axis does for this arch.
+    #   "tensor" — Megatron TP/SP (default; right for d_model ≥ 4-8k)
+    #   "batch"  — extra data parallelism + ZeRO-1 optimizer sharding
+    #              (right for small models where TP collectives dominate)
+    model_axis_role: str = "tensor"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def family(self) -> str:
+        return "lm"
+
+    def params_billions(self) -> float:
+        """Total parameter count (for roofline MODEL_FLOPS)."""
+        d, f, v, h = self.d_model, self.d_ff, self.vocab, self.head_dim
+        attn = self.d_model * (self.n_heads * h) + 2 * self.d_model * (self.n_kv_heads * h) + (self.n_heads * h) * d
+        if self.moe_experts:
+            ffn = self.moe_experts * (3 * d * f) + d * self.moe_experts
+        else:
+            ffn = 3 * d * f  # SwiGLU: gate, up, down
+        per_layer = attn + ffn + 2 * d
+        return (self.n_layers * per_layer + 2 * v * d + d) / 1e9
+
+    def active_params_billions(self) -> float:
+        """Active (per-token) params — MoE counts only top-k experts."""
+        if not self.moe_experts:
+            return self.params_billions()
+        d, f = self.d_model, self.d_ff
+        attn = self.d_model * (self.n_heads * self.head_dim) + 2 * self.d_model * (
+            self.n_kv_heads * self.head_dim
+        ) + (self.n_heads * self.head_dim) * d
+        ffn = self.moe_top_k * (3 * d * f) + d * self.moe_experts
+        per_layer = attn + ffn + 2 * d
+        return (self.n_layers * per_layer + 2 * self.vocab * d + d) / 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    """Graph attention network (GAT) — SDDMM / segment-softmax regime."""
+
+    name: str
+    n_layers: int
+    d_hidden: int       # per-head hidden dim
+    n_heads: int
+    aggregator: str = "attn"
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+    negative_slope: float = 0.2
+
+    @property
+    def family(self) -> str:
+        return "gnn"
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    """Sparse-embedding recsys model; ``interaction`` picks the tower."""
+
+    name: str
+    interaction: str            # "augru" | "bidir-seq" | "transformer-seq" | "fm-2way"
+    embed_dim: int
+    seq_len: int = 0            # behaviour-sequence length (0 = none)
+    n_sparse: int = 0           # # of categorical fields (FM)
+    gru_dim: int = 0
+    n_blocks: int = 0
+    n_heads: int = 0
+    mlp_dims: tuple[int, ...] = ()
+    vocab_sizes: tuple[int, ...] = ()   # per-field hash sizes
+    item_vocab: int = 2_000_000
+    dtype: Any = jnp.float32
+    unroll: bool = False   # unroll GRU scans (dry-run cost calibration)
+
+    @property
+    def family(self) -> str:
+        return "recsys"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: Any
+    shapes: tuple[ShapeCell, ...]
+
+
+_ARCH_MODULES = {
+    "stablelm-3b": "stablelm_3b",
+    "deepseek-67b": "deepseek_67b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "grok-1-314b": "grok1_314b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "gat-cora": "gat_cora",
+    "dien": "dien",
+    "bert4rec": "bert4rec",
+    "bst": "bst",
+    "fm": "fm",
+}
+
+
+def arch_ids() -> tuple[str, ...]:
+    return tuple(_ARCH_MODULES)
+
+
+def load_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return ArchSpec(arch_id=arch_id, config=mod.CONFIG, shapes=tuple(mod.SHAPES))
+
+
+def registry() -> dict[str, ArchSpec]:
+    return {aid: load_arch(aid) for aid in _ARCH_MODULES}
+
+
+# ---------------------------------------------------------------------------
+# Reduced ("smoke") configs — same family traits, tiny dims
+# ---------------------------------------------------------------------------
+
+
+def smoke_lm_config(cfg: LMConfig) -> LMConfig:
+    """Shrink while preserving family traits (GQA ratio, MoE-ness)."""
+    gqa = cfg.n_kv_heads < cfg.n_heads
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if gqa else 4,
+        d_ff=96,
+        vocab=256,
+        moe_experts=4 if cfg.moe_experts else 0,
+        moe_top_k=2 if cfg.moe_experts else 0,
+        attn_chunk=16,
+        remat=False,
+        fsdp=False,
+        dtype=jnp.float32,
+    )
+
+
+def smoke_recsys_config(cfg: RecsysConfig) -> RecsysConfig:
+    kw: dict = dict(item_vocab=512)
+    if cfg.vocab_sizes:
+        kw["vocab_sizes"] = tuple(min(v, 512) for v in cfg.vocab_sizes)
+    if cfg.interaction == "augru":
+        kw["seq_len"] = 12
+    if cfg.interaction == "bidir-seq":
+        kw["seq_len"] = 24
+    if cfg.mlp_dims:
+        kw["mlp_dims"] = tuple(min(m, 64) for m in cfg.mlp_dims)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,13 @@
+"""bert4rec [recsys] — bidirectional seq rec (arXiv:1904.06690)."""
+from repro.configs.base import RecsysConfig, RECSYS_SHAPES
+
+CONFIG = RecsysConfig(
+    name="bert4rec",
+    interaction="bidir-seq",
+    embed_dim=64,
+    seq_len=200,
+    n_blocks=2,
+    n_heads=2,
+    item_vocab=1_048_576,
+)
+SHAPES = RECSYS_SHAPES

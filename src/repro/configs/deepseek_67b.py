@@ -1,0 +1,14 @@
+"""deepseek-67b [dense] — llama-arch (arXiv:2401.02954)."""
+from repro.configs.base import LMConfig, LM_SHAPES
+
+CONFIG = LMConfig(
+    name="deepseek-67b",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,    # GQA
+    d_ff=22016,
+    vocab=102400,
+    fsdp=True,       # 67B: params+optimizer must shard over data axes too
+)
+SHAPES = LM_SHAPES

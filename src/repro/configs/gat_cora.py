@@ -1,0 +1,11 @@
+"""gat-cora [gnn] — GAT (arXiv:1710.10903): 2 layers, 8 heads x 8 hidden."""
+from repro.configs.base import GNNConfig, GNN_SHAPES
+
+CONFIG = GNNConfig(
+    name="gat-cora",
+    n_layers=2,
+    d_hidden=8,
+    n_heads=8,
+    aggregator="attn",
+)
+SHAPES = GNN_SHAPES

@@ -1,0 +1,32 @@
+"""ProHD core: the paper's contribution as composable JAX modules."""
+from repro.core.prohd import ProHDConfig, ProHDEstimate, prohd, prohd_masks
+from repro.core.exact import (
+    directed_hd_dense,
+    directed_hd_earlybreak,
+    directed_hd_tiled,
+    hausdorff_dense,
+    hausdorff_earlybreak,
+    hausdorff_tiled,
+)
+from repro.core.sampling import random_sampling_hd, systematic_sampling_hd
+from repro.core.variants import chamfer, partial_hausdorff
+from repro.core.adaptive import AdaptiveResult, prohd_with_budget
+
+__all__ = [
+    "ProHDConfig",
+    "ProHDEstimate",
+    "prohd",
+    "prohd_masks",
+    "directed_hd_dense",
+    "directed_hd_tiled",
+    "directed_hd_earlybreak",
+    "hausdorff_dense",
+    "hausdorff_tiled",
+    "hausdorff_earlybreak",
+    "random_sampling_hd",
+    "systematic_sampling_hd",
+    "chamfer",
+    "partial_hausdorff",
+    "AdaptiveResult",
+    "prohd_with_budget",
+]

@@ -1,0 +1,73 @@
+"""Adaptive-α ProHD under a strict error budget (paper §IV future work).
+
+The certified interval makes this trivial to do SOUNDLY: grow α (and m)
+until the certificate `H ≤ hd_proj + 2·min_u δ(u)` is tight enough, or the
+subset stops growing.  Returns the estimate WITH its certificate, so the
+caller can verify the budget was met rather than trusting a heuristic.
+
+Two budget modes:
+  absolute   — require (upper - lower) ≤ budget
+  relative   — require (upper - lower) / lower ≤ budget
+
+Note the certificate depends on min_u δ(u) (how one-dimensional the data
+is), not on α — growing α alone cannot shrink it, but growing m (more
+directions) can.  The schedule therefore interleaves: α doubles (tightens
+the point estimate / selection coverage), m grows by √D steps (tightens
+the certificate).  If the certificate cannot reach the budget (isotropic
+data), the loop reports failure honestly instead of looping forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+
+from repro.core.prohd import ProHDConfig, ProHDEstimate, prohd
+
+__all__ = ["AdaptiveResult", "prohd_with_budget"]
+
+
+class AdaptiveResult(NamedTuple):
+    estimate: ProHDEstimate
+    alpha: float
+    m: int
+    certified_gap: float     # upper - lower at the final step
+    met_budget: bool
+    steps: int
+
+
+def prohd_with_budget(
+    a,
+    b,
+    *,
+    budget: float,
+    relative: bool = True,
+    alpha0: float = 0.005,
+    max_alpha: float = 0.5,
+    max_steps: int = 8,
+    key: jax.Array | None = None,
+) -> AdaptiveResult:
+    d = a.shape[1]
+    m = max(1, int(d**0.5))
+    alpha = alpha0
+    est = None
+    for step in range(1, max_steps + 1):
+        cfg = ProHDConfig(alpha=alpha, num_pca_directions=min(m, d))
+        est = prohd(a, b, cfg, key=key)
+        lower = float(est.hd_proj)
+        upper = lower + float(est.bound)
+        gap = upper - lower
+        target = budget * max(lower, 1e-12) if relative else budget
+        if gap <= target:
+            return AdaptiveResult(est, alpha, min(m, d), gap, True, step)
+        # interleave: α tightens selection, m tightens the certificate
+        if step % 2 == 1 and m < d:
+            m = min(d, m + max(1, int(d**0.5)))
+        else:
+            alpha = min(max_alpha, alpha * 2)
+            if alpha >= max_alpha and m >= d:
+                break
+    lower = float(est.hd_proj)
+    gap = float(est.bound)
+    return AdaptiveResult(est, alpha, min(m, d), gap, False, max_steps)

@@ -1,0 +1,46 @@
+"""Theoretical error bounds from §II-E.
+
+``delta(u) = max_{p in A∪B} || p - (pᵀu) u ||`` — the max orthogonal
+deviation of any point from the line spanned by u.  The paper guarantees
+
+    Ĥ(A,B) ≤ H(A,B) ≤ Ĥ(A,B) + 2 · min_u delta(u).
+
+These functions are cheap (O(n·m·D) with the trick below) and let callers
+attach a *certified* upper bound to every ProHD estimate — which is what
+makes the method usable inside systems that need an error budget
+(paper §IV "adaptive α schedules ... strict error budgets").
+
+Implementation note: ||p - (pᵀu)u||² = ||p||² - (pᵀu)² for unit u, so delta
+needs only the projections (already computed for selection) plus one row-norm
+pass — no (n, m, D) intermediate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["delta_per_direction", "additive_bound"]
+
+
+def delta_per_direction(points: jnp.ndarray, projs: jnp.ndarray) -> jnp.ndarray:
+    """delta(u) for each direction.
+
+    points: (n, D); projs: (n, m) projections of those points onto unit
+    directions.  Returns (m,) fp32: max_p sqrt(||p||² - proj²).
+    """
+    p32 = points.astype(jnp.float32)
+    sq_norms = jnp.sum(p32 * p32, axis=1, keepdims=True)  # (n, 1)
+    orth_sq = jnp.maximum(sq_norms - projs.astype(jnp.float32) ** 2, 0.0)
+    return jnp.sqrt(jnp.max(orth_sq, axis=0))
+
+
+def additive_bound(
+    points_a: jnp.ndarray,
+    points_b: jnp.ndarray,
+    proj_a: jnp.ndarray,
+    proj_b: jnp.ndarray,
+) -> jnp.ndarray:
+    """2 · min_u delta(u) over A ∪ B — the certified worst-case underestimate."""
+    da = delta_per_direction(points_a, proj_a)
+    db = delta_per_direction(points_b, proj_b)
+    delta = jnp.maximum(da, db)  # max over the union, per direction
+    return 2.0 * jnp.min(delta)

@@ -1,0 +1,149 @@
+"""Exact Hausdorff distance oracles.
+
+Three implementations, by role:
+
+- ``directed_hd_dense``: one-shot (n_a, n_b) distance matrix.  O(n_a n_b)
+  memory — reference oracle for tests and tiny inputs.
+- ``directed_hd_tiled``: lax.scan over B-tiles with a running min.  O(n_a · T)
+  memory, GEMM-formulated — this is the "ANN-Exact" (Faiss-Flat) analogue and
+  the production fallback where the Pallas kernel is not used.
+- ``directed_hd_earlybreak``: EBHD-style early-break double loop via
+  lax.while_loop.  Branch-heavy; exists to reproduce the paper's exact
+  baselines (EBHD/ZHD family) on CPU, not as a TPU fast path.
+
+All support optional validity masks so they can run on ProHD's padded
+fixed-capacity subsets: invalid A-rows are excluded from the outer max,
+invalid B-rows from the inner min.
+
+Distances are computed as ``||a||² - 2 a·b + ||b||²`` in fp32 and clamped at
+zero (the GEMM form can go slightly negative under fp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pairwise_sqdist",
+    "directed_hd_dense",
+    "directed_hd_tiled",
+    "directed_hd_earlybreak",
+    "hausdorff_dense",
+    "hausdorff_tiled",
+    "hausdorff_earlybreak",
+]
+
+_NEG = -jnp.inf
+_POS = jnp.inf
+
+
+def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distances, (n_a, n_b), fp32, clamped ≥ 0."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True)
+    d2 = a2 - 2.0 * jnp.matmul(a, b.T, preferred_element_type=jnp.float32) + b2.T
+    return jnp.maximum(d2, 0.0)
+
+
+def _apply_masks(d2, valid_a, valid_b):
+    if valid_b is not None:
+        d2 = jnp.where(valid_b[None, :], d2, _POS)
+    mins = jnp.min(d2, axis=1)
+    if valid_a is not None:
+        mins = jnp.where(valid_a, mins, _NEG)
+    return mins
+
+
+def directed_hd_dense(a, b, *, valid_a=None, valid_b=None) -> jnp.ndarray:
+    """h(A,B) = max_a min_b ||a-b||, full distance matrix."""
+    mins = _apply_masks(pairwise_sqdist(a, b), valid_a, valid_b)
+    return jnp.sqrt(jnp.max(mins))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def directed_hd_tiled(a, b, *, valid_a=None, valid_b=None, block: int = 2048) -> jnp.ndarray:
+    """h(A,B) via a scan over B tiles with a running per-row min.
+
+    Memory: O(n_a * block).  ``block`` is padded so n_b need not divide it.
+    """
+    n_a = a.shape[0]
+    n_b, d = b.shape
+    block = min(block, n_b)
+    n_tiles = -(-n_b // block)
+    pad = n_tiles * block - n_b
+    b_pad = jnp.pad(b, ((0, pad), (0, 0)))
+    vb = valid_b if valid_b is not None else jnp.ones((n_b,), jnp.bool_)
+    vb_pad = jnp.pad(vb, (0, pad), constant_values=False)
+    b_tiles = b_pad.reshape(n_tiles, block, d)
+    vb_tiles = vb_pad.reshape(n_tiles, block)
+
+    a32 = a.astype(jnp.float32)
+    a2 = jnp.sum(a32 * a32, axis=1)
+
+    def body(carry_min, tile):
+        bt, vt = tile
+        bt = bt.astype(jnp.float32)
+        b2 = jnp.sum(bt * bt, axis=1)
+        d2 = a2[:, None] - 2.0 * jnp.matmul(a32, bt.T, preferred_element_type=jnp.float32) + b2[None, :]
+        d2 = jnp.maximum(d2, 0.0)
+        d2 = jnp.where(vt[None, :], d2, _POS)
+        return jnp.minimum(carry_min, jnp.min(d2, axis=1)), None
+
+    init = jnp.full((n_a,), _POS, dtype=jnp.float32)
+    mins, _ = jax.lax.scan(body, init, (b_tiles, vb_tiles))
+    if valid_a is not None:
+        mins = jnp.where(valid_a, mins, _NEG)
+    return jnp.sqrt(jnp.max(mins))
+
+
+def directed_hd_earlybreak(a, b) -> jnp.ndarray:
+    """EBHD-flavoured exact directed HD (Taha & Hanbury 2015).
+
+    Outer fori over A; inner while_loop over B breaks as soon as a b closer
+    than the current global max is found (that a cannot raise the max).
+    Correct on any backend; intended as a CPU baseline only.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    n_a, n_b = a.shape[0], b.shape[0]
+
+    def outer(i, cmax):
+        ai = a[i]
+
+        def cond(state):
+            j, best = state
+            return (j < n_b) & (best > cmax)
+
+        def inner(state):
+            j, best = state
+            d2 = jnp.sum((ai - b[j]) ** 2)
+            return j + 1, jnp.minimum(best, d2)
+
+        _, best = jax.lax.while_loop(cond, inner, (0, _POS))
+        # best <= cmax means we early-broke: point i cannot increase the max.
+        return jnp.where(best > cmax, best, cmax)
+
+    cmax = jax.lax.fori_loop(0, n_a, outer, jnp.float32(0.0))
+    return jnp.sqrt(cmax)
+
+
+def hausdorff_dense(a, b, *, valid_a=None, valid_b=None) -> jnp.ndarray:
+    return jnp.maximum(
+        directed_hd_dense(a, b, valid_a=valid_a, valid_b=valid_b),
+        directed_hd_dense(b, a, valid_a=valid_b, valid_b=valid_a),
+    )
+
+
+def hausdorff_tiled(a, b, *, valid_a=None, valid_b=None, block: int = 2048) -> jnp.ndarray:
+    return jnp.maximum(
+        directed_hd_tiled(a, b, valid_a=valid_a, valid_b=valid_b, block=block),
+        directed_hd_tiled(b, a, valid_a=valid_b, valid_b=valid_a, block=block),
+    )
+
+
+def hausdorff_earlybreak(a, b) -> jnp.ndarray:
+    return jnp.maximum(directed_hd_earlybreak(a, b), directed_hd_earlybreak(b, a))

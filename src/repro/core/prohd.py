@@ -1,0 +1,171 @@
+"""ProHD main procedure (paper Alg. 3) as a composable, jit-able JAX module.
+
+Public API:
+
+    cfg = ProHDConfig(alpha=0.01)
+    est = prohd(a, b, cfg, key=key)          # ProHDEstimate
+
+``prohd`` is fully jittable for fixed shapes/config (all data-dependent sizes
+are padded to static capacities derived from (n, D, alpha)).  The subset HD
+backend is pluggable: "tiled" (pure-JAX GEMM scan — default, runs anywhere)
+or "pallas" (the repro.kernels.hausdorff TPU kernel).
+
+Paper ↔ code map:
+    Alg. 1 CentroidIndices   → projections.centroid_direction + selection.extreme_mask
+    Alg. 2 PCAProjIndices    → projections.pca_directions + selection.extreme_mask_multi
+    Alg. 3 ProjHausdorff     → prohd() below
+    Eq. (4)/(5) bound        → bounds.additive_bound (returned in the estimate)
+
+Faithfulness note (full analysis in DESIGN.md §7): the paper's pseudocode,
+theory and experiments are mutually inconsistent about what the final ANN
+step searches over.  Alg. 3 as typeset computes HD *subset-vs-subset*, but
+§II-E.5 ("never overestimates"), Table II subset sizes, and the reported
+errors/runtimes are only consistent with *queries-from-subset vs full-set*
+nearest-neighbour search (h(A_sel → B), a certified underestimate).  We
+implement both (``ProHDConfig.inner``), defaulting to the reading that
+matches the paper's claims and numbers ("full").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds, exact, projected, projections, selection
+
+__all__ = ["ProHDConfig", "ProHDEstimate", "prohd", "prohd_masks"]
+
+SubsetBackend = Literal["tiled", "dense", "pallas"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProHDConfig:
+    """Runtime knobs.  ``alpha`` is the paper's selection fraction; everything
+    else defaults to the paper's choices."""
+
+    alpha: float = 0.01
+    # m = None → paper default floor(sqrt(D)).
+    num_pca_directions: int | None = None
+    # α' = alpha_pca; None → paper default alpha / m.
+    alpha_pca: float | None = None
+    pca_method: projections.PCAMethod = "gram"
+    subset_backend: SubsetBackend = "tiled"
+    subset_block: int = 2048
+    # Inner-min candidate set for the final HD (see module docstring):
+    #   "full"   — queries from the selected subsets, nearest-neighbour search
+    #              against the FULL other cloud.  Certified underestimate
+    #              (max over a subset of true min-distances); this is the only
+    #              reading consistent with the paper's §II-E.5 "never
+    #              overestimates" theorem, its Table II subset sizes and its
+    #              reported runtimes/errors.  Default.
+    #   "subset" — Alg. 3 exactly as typeset (index built on the subset too).
+    #              Cheaper, but the restricted inner min CAN overestimate
+    #              (measured +11% on 100k uniform clouds at D=8).
+    inner: Literal["full", "subset"] = "full"
+    compute_bound: bool = True
+    # Also compute the certified projected estimator max_u H_u (see
+    # repro.core.projected for why this differs from the subset estimator).
+    compute_projected: bool = True
+
+    def resolve_m(self, d: int) -> int:
+        return self.num_pca_directions if self.num_pca_directions is not None else projections.default_num_directions(d)
+
+
+class ProHDEstimate(NamedTuple):
+    """What Alg. 3 returns, plus the §II-E certificate.
+
+    ``hd`` is the paper-faithful subset estimator (Alg. 3 line 6-7); it is
+    usually the better point estimate but carries no one-sided guarantee.
+    ``hd_proj`` is max_u H_u(A,B) — the estimator the paper's theory bounds:
+        hd_proj ≤ H(A,B) ≤ hd_proj + bound.
+    """
+
+    hd: jnp.ndarray          # Ĥ(A,B) scalar fp32 (subset estimator)
+    n_sel_a: jnp.ndarray     # |I^A| (int32)
+    n_sel_b: jnp.ndarray     # |I^B|
+    bound: jnp.ndarray       # 2·min_u δ(u); 0 if compute_bound=False
+    hd_proj: jnp.ndarray     # certified lower bound; 0 if compute_projected=False
+
+
+def _directed(a, b, va, vb, cfg: ProHDConfig) -> jnp.ndarray:
+    if cfg.subset_backend == "dense":
+        return exact.directed_hd_dense(a, b, valid_a=va, valid_b=vb)
+    if cfg.subset_backend == "pallas":
+        from repro.kernels.hausdorff import ops as hd_ops
+
+        return hd_ops.directed_hausdorff(a, b, valid_a=va, valid_b=vb)
+    return exact.directed_hd_tiled(a, b, valid_a=va, valid_b=vb, block=cfg.subset_block)
+
+
+def _queries_vs_full_hd(a_sel, va, b_sel, vb, a_full, b_full, cfg: ProHDConfig) -> jnp.ndarray:
+    """h = max( h(A_sel → B_full), h(B_sel → A_full) ) — certified ≤ H(A,B)."""
+    return jnp.maximum(
+        _directed(a_sel, b_full, va, None, cfg),
+        _directed(b_sel, a_full, vb, None, cfg),
+    )
+
+
+def _subset_hd(a_sel, va, b_sel, vb, cfg: ProHDConfig) -> jnp.ndarray:
+    if cfg.subset_backend == "dense":
+        return exact.hausdorff_dense(a_sel, b_sel, valid_a=va, valid_b=vb)
+    if cfg.subset_backend == "pallas":
+        from repro.kernels.hausdorff import ops as hd_ops
+
+        return hd_ops.hausdorff(a_sel, b_sel, valid_a=va, valid_b=vb)
+    return exact.hausdorff_tiled(a_sel, b_sel, valid_a=va, valid_b=vb, block=cfg.subset_block)
+
+
+def prohd_masks(a, b, cfg: ProHDConfig, *, key: jax.Array | None = None) -> selection.SelectionResult:
+    """Selection step only (Alg. 3 lines 1-4): masks + projections."""
+    d = a.shape[1]
+    m = cfg.resolve_m(d)
+    dirs = projections.direction_set(a, b, m, method=cfg.pca_method, key=key)
+    return selection.select_extremes(a, b, dirs, alpha=cfg.alpha, alpha_pca=cfg.alpha_pca)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def prohd(a: jnp.ndarray, b: jnp.ndarray, cfg: ProHDConfig = ProHDConfig(), *, key: jax.Array | None = None) -> ProHDEstimate:
+    """Full ProHD (Alg. 3): select extremes, exact HD on the selected subsets.
+
+    a: (n_a, D), b: (n_b, D).  Returns a ProHDEstimate; ``hd`` never
+    overestimates the true H(A,B) (§II-E.5) and
+    ``hd + bound`` never underestimates it (Eq. 5).
+    """
+    n_a, d = a.shape
+    n_b = b.shape[0]
+    m = cfg.resolve_m(d)
+    if key is None and cfg.pca_method != "gram":
+        raise ValueError("randomized PCA backends need key=")
+
+    sel = prohd_masks(a, b, cfg, key=key)
+
+    cap_a = selection.selection_capacity(n_a, m, cfg.alpha, cfg.alpha_pca)
+    cap_b = selection.selection_capacity(n_b, m, cfg.alpha, cfg.alpha_pca)
+    a_sel, va = selection.take_selected(a, sel.mask_a, cap_a)
+    b_sel, vb = selection.take_selected(b, sel.mask_b, cap_b)
+
+    if cfg.inner == "full":
+        hd = _queries_vs_full_hd(a_sel, va, b_sel, vb, a, b, cfg)
+    else:
+        hd = _subset_hd(a_sel, va, b_sel, vb, cfg)
+
+    if cfg.compute_bound:
+        bound = bounds.additive_bound(a, b, sel.proj_a, sel.proj_b)
+    else:
+        bound = jnp.float32(0.0)
+
+    if cfg.compute_projected:
+        hd_proj = projected.projected_hd(sel.proj_a, sel.proj_b)
+    else:
+        hd_proj = jnp.float32(0.0)
+
+    return ProHDEstimate(
+        hd=hd,
+        n_sel_a=sel.mask_a.sum().astype(jnp.int32),
+        n_sel_b=sel.mask_b.sum().astype(jnp.int32),
+        bound=bound,
+        hd_proj=hd_proj,
+    )

@@ -1,0 +1,59 @@
+"""Projected (1-D) Hausdorff distances — the estimator §II-E actually bounds.
+
+PAPER DISCREPANCY (documented in DESIGN.md §7): Alg. 3 computes the
+D-dimensional Hausdorff on the selected subsets, ĥ = max_{a∈A_sel}
+min_{b∈B_sel} ||a-b||.  Restricting the *inner min* to B_sel inflates each
+min, so this estimator CAN overestimate H(A,B) — the paper's "never
+overestimates" theorem (§II-E.5) applies to Ĥ = max_u H_u(A,B), the max of
+1-D projected Hausdorff distances, which is what this module computes.
+
+We therefore ship both:
+  - the paper-faithful subset estimator (repro.core.prohd, better point
+    estimate in practice), and
+  - this certified estimator, satisfying
+        H_proj ≤ H(A,B) ≤ H_proj + 2·min_u δ(u)
+    and monotone in the direction set — property-tested in
+    tests/test_properties.py.
+
+1-D directed HD per direction is computed by sorting B's projections and
+binary-searching each point of A: O((n_a + n_b) log n_b) per direction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["directed_hd_1d", "hd_1d", "projected_hd"]
+
+
+def directed_hd_1d(pa: jnp.ndarray, pb: jnp.ndarray) -> jnp.ndarray:
+    """max_i min_j |pa_i - pb_j| for 1-D projections (pb need not be sorted)."""
+    pb_sorted = jnp.sort(pb)
+    return _directed_hd_1d_sorted(pa, pb_sorted)
+
+
+def _directed_hd_1d_sorted(pa: jnp.ndarray, pb_sorted: jnp.ndarray) -> jnp.ndarray:
+    n_b = pb_sorted.shape[0]
+    pos = jnp.searchsorted(pb_sorted, pa)
+    left = pb_sorted[jnp.clip(pos - 1, 0, n_b - 1)]
+    right = pb_sorted[jnp.clip(pos, 0, n_b - 1)]
+    nearest = jnp.minimum(jnp.abs(pa - left), jnp.abs(pa - right))
+    return jnp.max(nearest)
+
+
+def hd_1d(pa: jnp.ndarray, pb: jnp.ndarray) -> jnp.ndarray:
+    """Undirected 1-D Hausdorff H_u for one direction."""
+    pa_s, pb_s = jnp.sort(pa), jnp.sort(pb)
+    return jnp.maximum(_directed_hd_1d_sorted(pa_s, pb_s), _directed_hd_1d_sorted(pb_s, pa_s))
+
+
+@jax.jit
+def projected_hd(proj_a: jnp.ndarray, proj_b: jnp.ndarray) -> jnp.ndarray:
+    """Ĥ = max_u H_u(A,B) over all direction columns.
+
+    proj_a: (n_a, m), proj_b: (n_b, m) — projections of the FULL clouds onto
+    the m unit directions (these are already computed during selection, so
+    this estimator adds only sorts + searches).
+    """
+    per_dir = jax.vmap(hd_1d, in_axes=1)(proj_a, proj_b)  # (m,)
+    return jnp.max(per_dir)

@@ -1,0 +1,140 @@
+"""α-extreme selection (Alg. 1 lines 9-12 / Alg. 2 lines 12-15) — TPU form.
+
+The paper argsorts each projection vector and keeps the smallest/largest
+``k = max(1, floor(α n))`` indices per direction.  On TPU we use
+``jax.lax.top_k`` on the projection and its negation (O(n log k), fusable)
+instead of a full argsort (O(n log n)).
+
+Because downstream code is jitted, "union of index sets" must be expressed
+with static shapes.  We return a boolean membership **mask** of shape (n,):
+unioning masks is an `|` and never reshuffles memory; the subset extraction
+(a gather) happens once at the end.  ``selection_counts`` recovers |I|.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "alpha_count",
+    "extreme_mask",
+    "extreme_mask_multi",
+    "SelectionResult",
+    "select_extremes",
+    "take_selected",
+]
+
+
+def alpha_count(n: int, alpha: float) -> int:
+    """k = max(1, floor(alpha * n)) — Alg. 1 line 9.  Static (python) math."""
+    return max(1, int(alpha * n))
+
+
+def extreme_mask(proj: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k smallest and k largest entries of ``proj`` (n,).
+
+    Ties are broken by top_k's index order, matching the argsort selection
+    up to tie permutation (which never changes the selected *values*, hence
+    never changes H on the subset).
+    """
+    n = proj.shape[0]
+    k = min(k, n)
+    _, top_idx = jax.lax.top_k(proj, k)
+    _, bot_idx = jax.lax.top_k(-proj, k)
+    mask = jnp.zeros((n,), dtype=jnp.bool_)
+    mask = mask.at[top_idx].set(True)
+    mask = mask.at[bot_idx].set(True)
+    return mask
+
+
+def extreme_mask_multi(projs: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Union of extreme masks over multiple directions.
+
+    projs: (n, m) projections onto m directions; k per direction.
+    Returns (n,) bool mask = OR over directions.
+    """
+    n, m = projs.shape
+    k = min(k, n)
+    # vmap over the direction axis, then OR-reduce.
+    masks = jax.vmap(lambda p: extreme_mask(p, k), in_axes=1)(projs)  # (m, n)
+    return jnp.any(masks, axis=0)
+
+
+class SelectionResult(NamedTuple):
+    """Masks + projection matrices for one (A, B) pair."""
+
+    mask_a: jnp.ndarray  # (n_a,) bool
+    mask_b: jnp.ndarray  # (n_b,) bool
+    proj_a: jnp.ndarray  # (n_a, m+1) fp32 projections (centroid col 0)
+    proj_b: jnp.ndarray  # (n_b, m+1)
+
+
+def select_extremes(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    directions: jnp.ndarray,
+    *,
+    alpha: float,
+    alpha_pca: float | None = None,
+) -> SelectionResult:
+    """Alg. 3 lines 2-4: centroid extremes at fraction α, PCA extremes at α'.
+
+    ``directions`` is (D, m+1) with column 0 = centroid direction.
+    ``alpha_pca`` defaults to α/m (the paper's α′).
+    """
+    from repro.core import projections as P
+
+    n_a, n_b = a.shape[0], b.shape[0]
+    m = directions.shape[1] - 1
+    if alpha_pca is None:
+        alpha_pca = alpha / max(1, m)
+
+    proj_a = P.project(a, directions)  # (n_a, m+1)
+    proj_b = P.project(b, directions)
+
+    k_a_c = alpha_count(n_a, alpha)
+    k_b_c = alpha_count(n_b, alpha)
+    mask_a = extreme_mask(proj_a[:, 0], k_a_c)
+    mask_b = extreme_mask(proj_b[:, 0], k_b_c)
+
+    if m > 0:
+        k_a_p = alpha_count(n_a, alpha_pca)
+        k_b_p = alpha_count(n_b, alpha_pca)
+        mask_a = mask_a | extreme_mask_multi(proj_a[:, 1:], k_a_p)
+        mask_b = mask_b | extreme_mask_multi(proj_b[:, 1:], k_b_p)
+
+    return SelectionResult(mask_a, mask_b, proj_a, proj_b)
+
+
+def selection_capacity(n: int, m: int, alpha: float, alpha_pca: float | None = None) -> int:
+    """Static upper bound on |I| for one cloud: 2k_centroid + m * 2k_pca.
+
+    Used to pre-allocate the padded subset buffer under jit.
+    """
+    if alpha_pca is None:
+        alpha_pca = alpha / max(1, m)
+    cap = 2 * alpha_count(n, alpha) + m * 2 * alpha_count(n, alpha_pca)
+    return min(n, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def take_selected(points: jnp.ndarray, mask: jnp.ndarray, capacity: int):
+    """Gather masked rows into a fixed-size (capacity, D) buffer + validity mask.
+
+    Static-shape subset extraction: rows where ``mask`` is True are packed to
+    the front (stable order); the tail is padded with the first selected row
+    (a real point — keeps downstream distance math finite without special
+    cases; padded rows are masked out of the final max anyway).
+    """
+    n = points.shape[0]
+    capacity = min(capacity, n)
+    # Stable pack: indices of selected rows first.  jnp.where with size= pads
+    # with fill_value; we pad with the first selected index.
+    idx = jnp.where(mask, size=capacity, fill_value=-1)[0]
+    first = jnp.argmax(mask)  # first True (0 if none — degenerate, guarded upstream)
+    safe_idx = jnp.where(idx >= 0, idx, first)
+    valid = idx >= 0
+    return points[safe_idx], valid

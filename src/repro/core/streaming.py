@@ -1,0 +1,92 @@
+"""Streaming HD drift monitor — the paper's vector-database use case.
+
+"A quick Hausdorff distance approximation can ... track distributional drift
+in a vector database, supporting data analysis and anomaly detection at
+scale" (§I-A).  This module provides that as a first-class framework
+feature: a fixed reference set plus a reservoir of recent vectors; every
+``check()`` runs ProHD between them and reports the estimate together with
+its certified interval.
+
+Pure-functional state (NamedTuple in / NamedTuple out) so it jits, shards,
+and checkpoints like everything else in the framework.  The train loop
+(repro.train.loop) calls this on intermediate activations to monitor
+embedding drift during training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prohd import ProHDConfig as _ProHDConfig, prohd as _prohd
+
+__all__ = ["DriftMonitorConfig", "DriftState", "init_drift_monitor", "observe", "check_drift"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftMonitorConfig:
+    """Reservoir + ProHD settings for online drift detection."""
+
+    window: int = 4096           # reservoir capacity of "recent" vectors
+    dim: int = 64
+    prohd: _ProHDConfig = _ProHDConfig(alpha=0.05)
+    # Alert when the certified lower bound of H exceeds this.
+    threshold: float = jnp.inf
+
+
+class DriftState(NamedTuple):
+    reference: jnp.ndarray   # (n_ref, dim) frozen reference set
+    buffer: jnp.ndarray      # (window, dim) reservoir
+    count: jnp.ndarray       # total vectors observed (int32)
+    key: jax.Array           # reservoir-sampling randomness
+
+
+def init_drift_monitor(cfg: DriftMonitorConfig, reference: jnp.ndarray, key: jax.Array) -> DriftState:
+    buf = jnp.broadcast_to(reference.mean(axis=0), (cfg.window, cfg.dim)).astype(reference.dtype)
+    return DriftState(reference=reference, buffer=buf, count=jnp.int32(0), key=key)
+
+
+def observe(state: DriftState, batch: jnp.ndarray) -> DriftState:
+    """Fold a batch of vectors into the reservoir (Vitter's Algorithm R).
+
+    jit/scan-friendly: fixed shapes, no data-dependent control flow.
+    """
+    window = state.buffer.shape[0]
+
+    def step(carry, x):
+        buf, count, key = carry
+        key, k_pos, k_keep = jax.random.split(key, 3)
+        # While the buffer is warming up, write sequentially; afterwards
+        # replace a random slot with probability window / (count + 1).
+        warm = count < window
+        pos_warm = count % window
+        pos_cold = jax.random.randint(k_pos, (), 0, window)
+        keep = jax.random.uniform(k_keep) < (window / (count.astype(jnp.float32) + 1.0))
+        pos = jnp.where(warm, pos_warm, pos_cold)
+        do_write = warm | keep
+        buf = jnp.where(do_write, buf.at[pos].set(x), buf)
+        return (buf, count + 1, key), None
+
+    (buf, count, key), _ = jax.lax.scan(step, (state.buffer, state.count, state.key), batch)
+    return state._replace(buffer=buf, count=count, key=key)
+
+
+class DriftReport(NamedTuple):
+    hd: jnp.ndarray        # point estimate (paper-faithful)
+    lower: jnp.ndarray     # certified lower bound on true H
+    upper: jnp.ndarray     # certified upper bound (lower + 2 min_u delta)
+    alert: jnp.ndarray     # bool: certified lower bound crossed threshold
+
+
+def check_drift(state: DriftState, cfg: DriftMonitorConfig, *, key: jax.Array | None = None) -> DriftReport:
+    """ProHD between the reference set and the current reservoir."""
+    est = _prohd(state.reference, state.buffer, cfg.prohd, key=key)
+    lower = jnp.maximum(est.hd_proj, 0.0)
+    return DriftReport(
+        hd=est.hd,
+        lower=lower,
+        upper=est.hd_proj + est.bound,
+        alert=lower > cfg.threshold,
+    )

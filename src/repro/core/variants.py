@@ -1,0 +1,61 @@
+"""Set-distance variants sharing ProHD's machinery.
+
+The paper's §IV names both of these as future directions; they drop out of
+the same substrate:
+
+- **Partial (quantile) Hausdorff** (Huttenlocher et al. 1993, cited as
+  [30]): replace the outer max with the K-th largest min-distance —
+  robust to outliers.  Works with the same blocked min-distance scan; the
+  quantile replaces the final max-reduce.
+- **Chamfer distance**: mean (not max) of min-distances, both directions.
+  Same kernel output, different reduction — useful as a smoother drift
+  signal next to HD in the monitor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hausdorff import ops as hd_ops
+
+__all__ = ["partial_hausdorff", "chamfer"]
+
+
+def partial_hausdorff(a, b, *, quantile: float = 0.95, valid_a=None, valid_b=None):
+    """Directed-partial HD both ways: K-th largest min-distance, K = ⌈q·n⌉.
+
+    quantile=1.0 recovers the standard Hausdorff distance.  Robust to
+    (1-q)·n outliers per cloud — the paper's related work calls this the
+    practically preferred form for noisy scans.
+    """
+
+    def directed(x, y, vx, vy):
+        mins = hd_ops.min_sqdists(x, y, valid_b=vy)
+        if vx is not None:
+            # invalid rows must not enter the quantile: give them -inf so
+            # they sort to the bottom
+            mins = jnp.where(vx, mins, -jnp.inf)
+            n_valid = jnp.sum(vx)
+        else:
+            n_valid = x.shape[0]
+        k = jnp.clip(jnp.ceil(quantile * n_valid).astype(jnp.int32), 1, x.shape[0])
+        sorted_mins = jnp.sort(mins)  # ascending; -inf (invalid) first
+        # index of the k-th largest among the valid suffix
+        idx = x.shape[0] - (n_valid - k) - 1
+        return jnp.sqrt(jnp.maximum(sorted_mins[idx], 0.0))
+
+    return jnp.maximum(
+        directed(a, b, valid_a, valid_b), directed(b, a, valid_b, valid_a)
+    )
+
+
+def chamfer(a, b, *, valid_a=None, valid_b=None):
+    """Symmetric chamfer: mean_a min_b d(a,b) + mean_b min_a d(b,a)."""
+
+    def directed(x, y, vx, vy):
+        mins = jnp.sqrt(jnp.maximum(hd_ops.min_sqdists(x, y, valid_b=vy), 0.0))
+        if vx is not None:
+            return jnp.sum(jnp.where(vx, mins, 0.0)) / jnp.maximum(jnp.sum(vx), 1)
+        return jnp.mean(mins)
+
+    return directed(a, b, valid_a, valid_b) + directed(b, a, valid_b, valid_a)

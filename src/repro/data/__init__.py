@@ -1,0 +1,1 @@
+"""Data pipeline: synthetic generators, token streams, graph samplers, recsys batches."""

@@ -1,0 +1,77 @@
+"""Point-cloud generators for the paper's evaluation datasets.
+
+Real MNIST/CIFAR/Higgs are not fetchable offline; we generate statistically
+matched proxies (documented in DESIGN.md §6) plus the paper's own synthetic
+"Random Clouds" spec, which IS exact: uniform in [0,1]^D with a 0.1 offset
+between the clouds (§III-A).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "random_clouds",
+    "gaussian_mixture_pca",
+    "higgs_like",
+    "make_dataset",
+]
+
+
+def random_clouds(key: jax.Array, n_a: int, n_b: int, d: int, *, offset: float = 0.1, dtype=jnp.float32):
+    """Paper §III-A: uniform in the unit cube, B offset by +0.1 per coord."""
+    ka, kb = jax.random.split(key)
+    a = jax.random.uniform(ka, (n_a, d), dtype=dtype)
+    b = jax.random.uniform(kb, (n_b, d), dtype=dtype) + offset
+    return a, b
+
+
+def gaussian_mixture_pca(
+    key: jax.Array,
+    n_a: int,
+    n_b: int,
+    d: int,
+    *,
+    n_modes: int = 10,
+    spread: float = 4.0,
+    decay: float = 0.85,
+    dtype=jnp.float32,
+):
+    """MNIST/CIFAR-after-PCA proxy: anisotropic Gaussian mixture.
+
+    Image embeddings after PCA have (a) multi-modal class clusters and (b)
+    a fast-decaying spectrum; both matter for ProHD (PCA directions carry
+    most of the spread, which is why the paper's error collapses with D).
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    scales = decay ** jnp.arange(d, dtype=jnp.float32)  # decaying spectrum
+    centers_a = jax.random.normal(k1, (n_modes, d)) * spread * scales
+    centers_b = jax.random.normal(k2, (n_modes, d)) * spread * scales
+    ca = jax.random.randint(k3, (n_a,), 0, n_modes)
+    cb = jax.random.randint(k4, (n_b,), 0, n_modes)
+    na_noise, nb_noise = jax.random.split(k5)
+    a = centers_a[ca] + jax.random.normal(na_noise, (n_a, d)) * scales
+    b = centers_b[cb] + jax.random.normal(nb_noise, (n_b, d)) * scales
+    return a.astype(dtype), b.astype(dtype)
+
+
+def higgs_like(key: jax.Array, n_a: int, n_b: int, *, d: int = 28, dtype=jnp.float32):
+    """Higgs proxy: two overlapping anisotropic clouds at D=28 (signal vs
+    background share most of the feature space; tails differ)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    mixing = jax.random.normal(k1, (d, d)) / jnp.sqrt(d)
+    a = jax.random.normal(k2, (n_a, d)) @ mixing
+    shift = jnp.concatenate([jnp.full((d // 4,), 0.8), jnp.zeros((d - d // 4,))])
+    b = jax.random.normal(k3, (n_b, d)) @ mixing * 1.15 + shift
+    return a.astype(dtype), b.astype(dtype)
+
+
+def make_dataset(name: str, key: jax.Array, n_a: int, n_b: int, d: int, **kw):
+    """Dataset factory used by benchmarks: 'random' | 'image' | 'higgs'."""
+    if name == "random":
+        return random_clouds(key, n_a, n_b, d, **kw)
+    if name == "image":
+        return gaussian_mixture_pca(key, n_a, n_b, d, **kw)
+    if name == "higgs":
+        return higgs_like(key, n_a, n_b, d=d, **kw)
+    raise ValueError(f"unknown dataset {name!r}")

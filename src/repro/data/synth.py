@@ -1,0 +1,92 @@
+"""Synthetic batch generators for every architecture family.
+
+Used by the per-arch smoke tests, the examples, and the train driver when no
+real dataset is mounted.  All generators take explicit PRNG keys and return
+pytrees matching the shapes the launch/specs builders declare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models.recsys import N_PROFILE
+
+
+def lm_batch(key: jax.Array, cfg: LMConfig, batch: int, seq: int) -> dict:
+    return {"tokens": jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab, dtype=jnp.int32)}
+
+
+def gnn_batch(
+    key: jax.Array,
+    cfg: GNNConfig,
+    *,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    n_classes: int,
+    n_graphs: int = 0,
+    pad_edges_to: int | None = None,
+) -> dict:
+    from repro.models.gnn import with_self_loops
+
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    src = jax.random.randint(k1, (n_edges,), 0, n_nodes, dtype=jnp.int32)
+    dst = jax.random.randint(k2, (n_edges,), 0, n_nodes, dtype=jnp.int32)
+    src, dst, mask = with_self_loops(src, dst, n_nodes, pad_to=pad_edges_to)
+    batch = {
+        "feats": jax.random.normal(k3, (n_nodes, d_feat), jnp.float32),
+        "edge_src": src,
+        "edge_dst": dst,
+        "edge_mask": mask,
+        "labels": jax.random.randint(k4, (n_graphs or n_nodes,), 0, n_classes, dtype=jnp.int32),
+    }
+    if n_graphs:
+        batch["graph_ids"] = (jnp.arange(n_nodes) * n_graphs // n_nodes).astype(jnp.int32)
+    else:
+        batch["label_mask"] = jnp.ones((n_nodes,), bool)
+    return batch
+
+
+def recsys_batch(key: jax.Array, cfg: RecsysConfig, batch: int, *, train: bool = True) -> dict:
+    ks = iter(jax.random.split(key, 12))
+    kind = cfg.interaction
+    if kind == "fm-2way":
+        sizes = jnp.asarray(cfg.vocab_sizes, jnp.int32)
+        ids = jax.random.randint(next(ks), (batch, cfg.n_sparse), 0, 1 << 30) % sizes[None, :]
+        out = {"ids": ids.astype(jnp.int32)}
+    elif kind == "augru":
+        v_item, v_cate, v_user = cfg.vocab_sizes
+        lengths = jax.random.randint(next(ks), (batch,), 1, cfg.seq_len + 1)
+        out = {
+            "profile_ids": jax.random.randint(next(ks), (batch, N_PROFILE), 0, v_user, dtype=jnp.int32),
+            "seq_items": jax.random.randint(next(ks), (batch, cfg.seq_len), 0, v_item, dtype=jnp.int32),
+            "seq_cates": jax.random.randint(next(ks), (batch, cfg.seq_len), 0, v_cate, dtype=jnp.int32),
+            "seq_mask": (jnp.arange(cfg.seq_len)[None, :] < lengths[:, None]).astype(jnp.float32),
+            "target_item": jax.random.randint(next(ks), (batch,), 0, v_item, dtype=jnp.int32),
+            "target_cate": jax.random.randint(next(ks), (batch,), 0, v_cate, dtype=jnp.int32),
+        }
+    elif kind == "bidir-seq":
+        out = {
+            "seq": jax.random.randint(next(ks), (batch, cfg.seq_len), 0, cfg.item_vocab, dtype=jnp.int32),
+            "pad_mask": jnp.ones((batch, cfg.seq_len), jnp.float32),
+        }
+        if train:
+            n_mask = max(1, cfg.seq_len // 10)
+            out.update(
+                masked_pos=jax.random.randint(next(ks), (batch, n_mask), 0, cfg.seq_len, dtype=jnp.int32),
+                masked_ids=jax.random.randint(next(ks), (batch, n_mask), 0, cfg.item_vocab, dtype=jnp.int32),
+                neg_ids=jax.random.randint(next(ks), (min(1024, cfg.item_vocab),), 0, cfg.item_vocab, dtype=jnp.int32),
+            )
+        else:
+            out["target_item"] = jax.random.randint(next(ks), (batch,), 0, cfg.item_vocab, dtype=jnp.int32)
+    elif kind == "transformer-seq":
+        out = {
+            "seq_items": jax.random.randint(next(ks), (batch, cfg.seq_len), 0, cfg.item_vocab, dtype=jnp.int32),
+            "target_item": jax.random.randint(next(ks), (batch,), 0, cfg.item_vocab, dtype=jnp.int32),
+        }
+    else:
+        raise KeyError(kind)
+    if train and kind != "bidir-seq":
+        out["label"] = jax.random.bernoulli(next(ks), 0.3, (batch,)).astype(jnp.float32)
+    return out

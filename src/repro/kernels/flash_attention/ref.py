@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive causal attention
+with full (Sq, Sk) score materialisation, fp32 softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.nn
+
+
+def attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, H, hd) (kv already head-expanded)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        k_pos = jnp.arange(sk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

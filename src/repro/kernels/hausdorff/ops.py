@@ -1,0 +1,106 @@
+"""Jitted public wrappers around the Pallas directed-Hausdorff kernel.
+
+Handles everything the kernel requires to be true:
+  - D zero-padded to a multiple of 128 (exact for L2 distances),
+  - n_a / n_b padded to block multiples (padded b-rows masked invalid; padded
+    a-rows dropped from the final max via the valid_a mask),
+  - validity masks carried as f32 {0,1},
+  - final max-reduce + sqrt outside the kernel.
+
+On non-TPU backends ``interpret=True`` executes the kernel body in Python —
+that is how CPU tests validate it against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hausdorff import hausdorff as K
+
+__all__ = ["min_sqdists", "directed_hausdorff", "hausdorff"]
+
+
+def _pad_axis(x, mult, axis, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def min_sqdists(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    valid_b: jnp.ndarray | None = None,
+    block_a: int = 512,
+    block_b: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-row min squared L2 distance from a (n_a, D) to valid rows of b.
+
+    Returns (n_a,) fp32.  The workhorse for ProHD's ANN phase, retrieval
+    scoring, and chamfer-style metrics.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n_a, d = a.shape
+    n_b = b.shape[0]
+    block_a = min(block_a, max(128, 1 << (n_a - 1).bit_length()))
+    block_b = min(block_b, max(128, 1 << (n_b - 1).bit_length()))
+
+    vb = valid_b if valid_b is not None else jnp.ones((n_b,), jnp.bool_)
+    a_p = _pad_axis(_pad_axis(a, 128, 1), block_a, 0)
+    b_p = _pad_axis(_pad_axis(b, 128, 1), block_b, 0)
+    vb_p = _pad_axis(vb.astype(jnp.float32)[None, :], block_b, 1)
+
+    mins = K.min_sqdists_pallas(
+        a_p, b_p, vb_p, block_a=block_a, block_b=block_b, interpret=interpret
+    )
+    return mins[:n_a]
+
+
+def directed_hausdorff(
+    a,
+    b,
+    *,
+    valid_a=None,
+    valid_b=None,
+    block_a: int = 512,
+    block_b: int = 512,
+    interpret: bool | None = None,
+):
+    """h(A,B) = max over valid a-rows of the kernel's min distances."""
+    mins = min_sqdists(
+        a, b, valid_b=valid_b, block_a=block_a, block_b=block_b, interpret=interpret
+    )
+    if valid_a is not None:
+        mins = jnp.where(valid_a, mins, -jnp.inf)
+    return jnp.sqrt(jnp.max(mins))
+
+
+def hausdorff(
+    a,
+    b,
+    *,
+    valid_a=None,
+    valid_b=None,
+    block_a: int = 512,
+    block_b: int = 512,
+    interpret: bool | None = None,
+):
+    """Undirected H(A,B) via two directed kernel sweeps."""
+    kw = dict(block_a=block_a, block_b=block_b, interpret=interpret)
+    return jnp.maximum(
+        directed_hausdorff(a, b, valid_a=valid_a, valid_b=valid_b, **kw),
+        directed_hausdorff(b, a, valid_a=valid_b, valid_b=valid_a, **kw),
+    )

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the directed-Hausdorff kernel.
+
+Self-contained (no imports from the rest of the package) so kernel tests
+compare against an independent implementation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def directed_hausdorff_ref(a, b, valid_a=None, valid_b=None):
+    """h(A,B) = max_{a valid} min_{b valid} ||a-b||, full-matrix fp32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
+    if valid_b is not None:
+        d2 = jnp.where(valid_b[None, :], d2, jnp.inf)
+    mins = jnp.min(d2, axis=1)
+    if valid_a is not None:
+        mins = jnp.where(valid_a, mins, -jnp.inf)
+    return jnp.sqrt(jnp.max(mins))
+
+
+def hausdorff_ref(a, b, valid_a=None, valid_b=None):
+    return jnp.maximum(
+        directed_hausdorff_ref(a, b, valid_a, valid_b),
+        directed_hausdorff_ref(b, a, valid_b, valid_a),
+    )
+
+
+def min_dists_ref(a, b, valid_b=None):
+    """Per-query min squared distance (the kernel's raw output)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
+    if valid_b is not None:
+        d2 = jnp.where(valid_b[None, :], d2, jnp.inf)
+    return jnp.min(d2, axis=1)

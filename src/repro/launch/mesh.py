@@ -1,0 +1,28 @@
+"""Production mesh definition (assignment MULTI-POD DRY-RUN §1).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")) -> jax.sharding.Mesh:
+    """Small host-device mesh for CI-scale sharding tests."""
+    return jax.make_mesh(shape, axes)
+
+
+def batch_shards(mesh: jax.sharding.Mesh) -> int:
+    """Total shards along the batch-like axes (pod × data)."""
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n

@@ -1,0 +1,622 @@
+"""Cell builders: (architecture × shape × mesh) → lowerable step closure.
+
+``build_cell`` returns a BuiltCell holding:
+  * ``fn``            — the raw (unjitted) step callable,
+  * ``args``          — ShapeDtypeStruct pytrees for every argument
+                        (weak-type-correct, shardable, zero allocation),
+  * ``in_shardings`` / ``out_shardings`` — NamedSharding pytrees,
+  * ``donate_argnums``,
+  * ``rules``         — the MeshRules the fn must be traced under.
+
+dryrun.py then does ``jax.jit(fn, in_shardings=…).lower(*args).compile()``
+for every cell on both production meshes.  The same builders back the smoke
+tests (with reduced configs + real arrays) and the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import bytes_model
+from repro.configs.base import ArchSpec, GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from repro.launch.mesh import batch_shards
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as lm_mod
+from repro.models.retrieval import retrieval_topk
+from repro.sharding.axes import MeshRules, use_rules
+from repro.train import optimizer as opt_mod
+from repro.train.loop import make_train_step
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    arch_id: str
+    cell: ShapeCell
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    rules: MeshRules
+    # analytic FLOPs for §Roofline MODEL_FLOPS (useful-work definition)
+    model_flops: float
+    # analytic per-device HBM traffic (roofline memory term; see
+    # repro.analysis.bytes_model for why HLO bytes are not used directly)
+    model_bytes: float = 0.0
+    # analytic per-device peak memory (TPU "fits" check; CPU memory_analysis
+    # f32-legalises bf16 buffers)
+    tpu_peak_bytes: float = 0.0
+
+    def wrapped_fn(self):
+        rules = self.rules
+
+        def fn(*args):
+            with use_rules(rules):
+                return self.fn(*args)
+
+        return fn
+
+
+class SkippedCell(Exception):
+    pass
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# shared rules for non-LM families
+# ---------------------------------------------------------------------------
+
+
+def _ms(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _family_rules(mesh) -> MeshRules:
+    axes = mesh.axis_names
+    return MeshRules(
+        batch=tuple(a for a in ("pod", "data") if a in axes),
+        model="model" if "model" in axes else None,
+        fsdp=(),
+        mesh=mesh,
+    )
+
+
+def _lm_optimizer(cfg: LMConfig):
+    # grok's Adam state would blow the 16 GB/chip budget → adafactor
+    if cfg.params_billions() > 100:
+        return opt_mod.adafactor(lr=1e-3)
+    return opt_mod.adamw(lr=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_flops(cfg: LMConfig, cell: ShapeCell) -> float:
+    n_active = cfg.active_params_billions() * 1e9
+    s, b = cell.dim("seq_len"), cell.dim("global_batch")
+    if cell.kind == "train":
+        return 6.0 * n_active * s * b
+    if cell.kind == "prefill":
+        return 2.0 * n_active * s * b
+    # decode: one token per sequence
+    return 2.0 * n_active * b
+
+
+def _lm_cell(arch_id: str, cfg: LMConfig, cell: ShapeCell, mesh) -> BuiltCell:
+    if cell.skip_reason and cfg.window is None:
+        raise SkippedCell(cell.skip_reason)
+
+    rules = lm_mod.lm_rules(cfg, mesh)
+    pspecs = lm_mod.lm_param_specs(cfg, rules)
+    with use_rules(rules):
+        params_shapes = jax.eval_shape(lambda: lm_mod.init_lm_params(jax.random.PRNGKey(0), cfg))
+
+    seq = cell.dim("seq_len")
+    gb = cell.dim("global_batch")
+    nb = batch_shards(mesh)
+    ms_eff = _ms(mesh)
+    if cfg.model_axis_role == "batch":
+        # dp_zero1 variant: every axis is batch-like for the bytes model
+        nb = mesh.size
+        ms_eff = 1
+    if gb % nb and cell.kind != "decode":
+        raise SkippedCell(f"global_batch {gb} not divisible by {nb} batch shards")
+
+    batch_spec_tok = rules.spec("batch", None)
+
+    if cell.kind == "train":
+        loss_fn = functools.partial(_lm_loss_adapter, cfg=cfg)
+        optimizer = _lm_optimizer(cfg)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        if cfg.model_axis_role == "batch" and not cfg.fsdp:
+            # ZeRO-1: replicated params, fully sharded optimizer state
+            ospecs = optimizer.state_specs(
+                lm_mod.zero1_opt_specs(pspecs, params_shapes, mesh)
+            )
+        else:
+            # TP/FSDP/ZeRO-3: optimizer state mirrors the param sharding
+            ospecs = optimizer.state_specs(pspecs)
+        # pick the smallest microbatch count that fits the 16 GB/chip HBM
+        # (grok-314b train on the single pod needs mb=2; see bytes_model)
+        mb = 1
+        while (
+            mb < 16
+            and bytes_model.lm_peak_memory(cfg, cell, ms=ms_eff, bs=nb, microbatches=mb)
+            > 15.5 * (1 << 30)
+        ):
+            mb *= 2
+        step = make_train_step(loss_fn, optimizer, microbatches=mb, jit=False)
+        args = (
+            params_shapes,
+            opt_shapes,
+            {"tokens": _sds((gb, seq + 1), I32)},
+        )
+        in_sh = (
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            {"tokens": NamedSharding(mesh, batch_spec_tok)},
+        )
+        out_sh = (
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            _replicated(mesh, jax.eval_shape(step, *args)[2]),
+        )
+        return BuiltCell(arch_id, cell, step, args, in_sh, out_sh, (0, 1), rules,
+                         _lm_flops(cfg, cell),
+                         bytes_model.lm_bytes(cfg, cell, ms=ms_eff, bs=nb),
+                         bytes_model.lm_peak_memory(cfg, cell, ms=ms_eff, bs=nb,
+                                                    microbatches=mb))
+
+    if cell.kind == "prefill":
+        fn = functools.partial(lm_mod.prefill_step, cfg=cfg)
+        args = (params_shapes, _sds((gb, seq), I32))
+        in_sh = (_named(mesh, pspecs), NamedSharding(mesh, batch_spec_tok))
+        out_sh = NamedSharding(mesh, rules.spec("batch", "model"))
+        return BuiltCell(arch_id, cell, fn, args, in_sh, out_sh, (), rules,
+                         _lm_flops(cfg, cell),
+                         bytes_model.lm_bytes(cfg, cell, ms=ms_eff, bs=nb),
+                         bytes_model.lm_peak_memory(cfg, cell, ms=ms_eff, bs=nb))
+
+    # decode
+    fn = functools.partial(lm_mod.serve_step, cfg=cfg)
+    cache_shapes = jax.eval_shape(lambda: lm_mod.init_kv_cache(cfg, gb, seq))
+    args = (params_shapes, cache_shapes, _sds((gb,), I32))
+    # batch=1 cells (long_500k window ablation) can't shard the batch dim
+    b_ax = "batch" if gb % nb == 0 else None
+    cache_spec = rules.spec(None, b_ax, "model", None, None)
+    in_sh = (
+        _named(mesh, pspecs),
+        lm_mod.KVCache(
+            k=NamedSharding(mesh, cache_spec),
+            v=NamedSharding(mesh, cache_spec),
+            length=NamedSharding(mesh, P()),
+        ),
+        NamedSharding(mesh, rules.spec(b_ax)),
+    )
+    out_sh = (
+        NamedSharding(mesh, rules.spec(b_ax, "model")),      # logits
+        NamedSharding(mesh, rules.spec(b_ax)),               # next ids
+        in_sh[1],                                            # cache (donated)
+    )
+    return BuiltCell(arch_id, cell, fn, args, in_sh, out_sh, (1,), rules,
+                     _lm_flops(cfg, cell),
+                     bytes_model.lm_bytes(cfg, cell, ms=ms_eff, bs=nb),
+                     bytes_model.lm_peak_memory(cfg, cell, ms=ms_eff, bs=nb))
+
+
+def _lm_loss_adapter(params, batch, cfg):
+    return lm_mod.lm_loss(params, batch, cfg)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+GNN_CELL_META = {
+    # n_classes, in_dim key fixed per dataset
+    "full_graph_sm": {"n_classes": 7},
+    "minibatch_lg": {"n_classes": 41},
+    "ogb_products": {"n_classes": 47},
+    "molecule": {"n_classes": 2},
+}
+
+
+def _pad_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def gnn_cell_dims(cell: ShapeCell, nb: int) -> dict:
+    """Static (padded) node/edge counts for one GNN cell."""
+    d = dict(cell.dims)
+    if cell.name == "minibatch_lg":
+        seeds = d["batch_nodes"]
+        l1 = seeds * d["fanout0"]
+        l2 = l1 * d["fanout1"]
+        n = seeds + l1 + l2
+        e = l1 + l2
+    elif cell.name == "molecule":
+        n = d["n_nodes"] * d["batch"]
+        e = d["n_edges"] * d["batch"]
+    else:
+        n = d["n_nodes"]
+        e = d["n_edges"]
+    e_total = _pad_up(e + n, 512 * max(nb, 1))  # + self loops, shard-divisible
+    return {"n": n, "e_raw": e, "e_total": e_total, "d_feat": d["d_feat"]}
+
+
+def _gnn_flops(cfg: GNNConfig, dims: dict, n_classes: int) -> float:
+    """SpMM + SDDMM + dense projections (2·MACs)."""
+    n, e, f = dims["n"], dims["e_total"], dims["d_feat"]
+    mid = cfg.n_heads * cfg.d_hidden
+    proj = 2.0 * n * (f * mid + mid * cfg.n_heads * n_classes)
+    edge = 2.0 * e * (mid + cfg.n_heads * n_classes) * 2  # SDDMM + SpMM
+    return 3.0 * (proj + edge)  # fwd + bwd ≈ 3× fwd
+
+
+def _gnn_cell(arch_id: str, cfg: GNNConfig, cell: ShapeCell, mesh, variant: str = "baseline") -> BuiltCell:
+    # GNN is edge-parallel with replicated node tables: the "batch" logical
+    # axis spans EVERY mesh axis (there is no tensor dim to give "model").
+    rules = MeshRules(
+        batch=tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names),
+        model=None,
+        fsdp=(),
+        mesh=mesh,
+    )
+    nb = mesh.size
+    dims = gnn_cell_dims(cell, nb)
+    meta = GNN_CELL_META[cell.name]
+    if variant.startswith("partitioned"):
+        # node table is owner-sharded → node count must divide the shards
+        dims["n"] = _pad_up(dims["n"], nb)
+    n, e_total = dims["n"], dims["e_total"]
+
+    params_shapes = jax.eval_shape(
+        lambda: gnn_mod.init_gat_params(jax.random.PRNGKey(0), cfg, dims["d_feat"], meta["n_classes"])
+    )
+    pspecs = jax.tree.map(lambda _: P(), params_shapes)
+
+    loss = gnn_mod.gat_graph_loss if cell.name == "molecule" else gnn_mod.gat_node_loss
+    if variant.startswith("partitioned") and cell.name != "molecule":
+        gd = jnp.bfloat16 if variant.endswith("bf16") else None
+        loss = functools.partial(gnn_mod.gat_node_loss_partitioned, rules=rules, gather_dtype=gd)
+    loss_fn = functools.partial(_gnn_loss_adapter, cfg=cfg, loss=loss)
+    optimizer = opt_mod.adamw(lr=5e-3, weight_decay=5e-4)
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    ospecs = optimizer.state_specs(pspecs)
+    step = make_train_step(loss_fn, optimizer, jit=False)
+
+    batch = {
+        "feats": _sds((n, dims["d_feat"]), F32),
+        "edge_src": _sds((e_total,), I32),
+        "edge_dst": _sds((e_total,), I32),
+        "edge_mask": _sds((e_total,), F32),
+    }
+    node_spec = rules.spec("batch", None) if variant == "partitioned" else P()
+    node_row = rules.spec("batch") if variant == "partitioned" else P()
+    bspec = {
+        "feats": node_spec,  # replicated (edge-parallel) or owner-sharded
+        "edge_src": rules.spec("batch"),
+        "edge_dst": rules.spec("batch"),
+        "edge_mask": rules.spec("batch"),
+    }
+    if cell.name == "molecule":
+        n_graphs = cell.dim("batch")
+        batch.update(graph_ids=_sds((n,), I32), labels=_sds((n_graphs,), I32))
+        bspec.update(graph_ids=P(), labels=P())
+    else:
+        batch.update(labels=_sds((n,), I32), label_mask=_sds((n,), jnp.bool_))
+        bspec.update(labels=node_row, label_mask=node_row)
+
+    args = (params_shapes, opt_shapes, batch)
+    in_sh = (_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspec))
+    out_sh = (
+        _named(mesh, pspecs),
+        _named(mesh, ospecs),
+        _replicated(mesh, jax.eval_shape(step, *args)[2]),
+    )
+    return BuiltCell(arch_id, cell, step, args, in_sh, out_sh, (0, 1), rules,
+                     _gnn_flops(cfg, dims, meta["n_classes"]),
+                     bytes_model.gnn_bytes(cfg, dims, n_shards=nb))
+
+
+def _gnn_loss_adapter(params, batch, cfg, loss):
+    return loss(params, batch, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+
+def recsys_batch_shapes(cfg: RecsysConfig, cell: ShapeCell, *, train: bool) -> dict:
+    b = cell.dim("batch")
+    kind = cfg.interaction
+    if kind == "fm-2way":
+        out = {"ids": _sds((b, cfg.n_sparse), I32)}
+        if train:
+            out["label"] = _sds((b,), F32)
+        return out
+    if kind == "augru":
+        out = {
+            "profile_ids": _sds((b, rec_mod.N_PROFILE), I32),
+            "seq_items": _sds((b, cfg.seq_len), I32),
+            "seq_cates": _sds((b, cfg.seq_len), I32),
+            "seq_mask": _sds((b, cfg.seq_len), F32),
+            "target_item": _sds((b,), I32),
+            "target_cate": _sds((b,), I32),
+        }
+        if train:
+            out["label"] = _sds((b,), F32)
+        return out
+    if kind == "bidir-seq":
+        out = {"seq": _sds((b, cfg.seq_len), I32), "pad_mask": _sds((b, cfg.seq_len), F32)}
+        if train:
+            out.update(
+                masked_pos=_sds((b, 20), I32),
+                masked_ids=_sds((b, 20), I32),
+                neg_ids=_sds((1024,), I32),
+            )
+        else:
+            out["target_item"] = _sds((b,), I32)
+        return out
+    if kind == "transformer-seq":
+        out = {"seq_items": _sds((b, cfg.seq_len), I32), "target_item": _sds((b,), I32)}
+        if train:
+            out["label"] = _sds((b,), F32)
+        return out
+    raise KeyError(kind)
+
+
+def _recsys_batch_specs(shapes: dict, rules: MeshRules) -> dict:
+    out = {}
+    for k, v in shapes.items():
+        if k == "neg_ids":
+            out[k] = P()
+        else:
+            out[k] = rules.spec("batch", *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def _recsys_flops(cfg: RecsysConfig, cell: ShapeCell, *, train: bool) -> float:
+    b = cell.dim("batch")
+    d = cfg.embed_dim
+    kind = cfg.interaction
+    if kind == "fm-2way":
+        fwd = 2.0 * b * cfg.n_sparse * d
+    elif kind == "augru":
+        fwd = 2.0 * b * cfg.seq_len * (2 * d + cfg.gru_dim) * 3 * cfg.gru_dim * 2
+        fwd += 2.0 * b * sum(
+            a * bb for a, bb in zip((18 + 36 + 108 + 36, *cfg.mlp_dims), (*cfg.mlp_dims, 1))
+        )
+    elif kind == "bidir-seq":
+        t = cfg.seq_len
+        per_block = 2.0 * t * (4 * d * d + 2 * t * d + 8 * d * d)
+        fwd = b * cfg.n_blocks * per_block
+        if train:
+            fwd += 2.0 * b * 20 * 1025 * d
+    else:  # transformer-seq
+        t = cfg.seq_len + 1
+        per_block = 2.0 * t * (4 * d * d + 2 * t * d + 8 * d * d)
+        flat = t * d
+        mlp = 2.0 * sum(a * bb for a, bb in zip((flat, *cfg.mlp_dims), (*cfg.mlp_dims, 1)))
+        fwd = b * (cfg.n_blocks * per_block + mlp)
+    if cell.kind == "retrieval":
+        n_c = cell.dim("n_candidates")
+        fwd += 2.0 * b * n_c * d
+    return (3.0 if train else 1.0) * fwd
+
+
+def _recsys_cell(arch_id: str, cfg: RecsysConfig, cell: ShapeCell, mesh, variant: str = "baseline") -> BuiltCell:
+    rules = _family_rules(mesh)
+    init, param_specs_fn, loss, score, query_emb, cand_table = rec_mod.get_model(cfg)
+    with use_rules(rules):
+        params_shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    pspecs = param_specs_fn(cfg, rules)
+
+    nb = batch_shards(mesh)
+    b = cell.dim("batch")
+    if cell.kind != "retrieval" and b % nb:
+        raise SkippedCell(f"batch {b} not divisible by {nb}")
+
+    if cell.kind == "train":
+        loss_fn = functools.partial(_recsys_loss_adapter, cfg=cfg, loss=loss)
+        optimizer = opt_mod.adamw(lr=1e-3, weight_decay=0.0)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        ospecs = optimizer.state_specs(pspecs)
+        step = make_train_step(loss_fn, optimizer, jit=False)
+        shapes = recsys_batch_shapes(cfg, cell, train=True)
+        args = (params_shapes, opt_shapes, shapes)
+        in_sh = (
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            _named(mesh, _recsys_batch_specs(shapes, rules)),
+        )
+        out_sh = (
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            _replicated(mesh, jax.eval_shape(step, *args)[2]),
+        )
+        return BuiltCell(arch_id, cell, step, args, in_sh, out_sh, (0, 1), rules,
+                         _recsys_flops(cfg, cell, train=True),
+                         bytes_model.recsys_bytes(cfg, cell, ms=_ms(mesh), bs=nb))
+
+    if cell.kind == "serve":
+        fn = functools.partial(_recsys_score_adapter, cfg=cfg, score=score)
+        shapes = recsys_batch_shapes(cfg, cell, train=False)
+        args = (params_shapes, shapes)
+        in_sh = (_named(mesh, pspecs), _named(mesh, _recsys_batch_specs(shapes, rules)))
+        out_sh = NamedSharding(mesh, rules.spec("batch"))
+        return BuiltCell(arch_id, cell, fn, args, in_sh, out_sh, (), rules,
+                         _recsys_flops(cfg, cell, train=False),
+                         bytes_model.recsys_bytes(cfg, cell, ms=_ms(mesh), bs=nb))
+
+    # retrieval: query batch (=1) replicated, candidates = first-N table rows
+    n_cand = cell.dim("n_candidates")
+
+    def retrieval_fn(params, batch, *, _cfg=cfg, _variant=variant):
+        q = query_emb(params, batch, _cfg)                 # (B, D)
+        cands = cand_table(params, _cfg, n_cand)           # (N, D)
+        if _variant == "model_axes":
+            # §Perf it.1: scan the table where it already lives (model-
+            # sharded) — kills the model→batch reshard
+            return retrieval_topk(cands, q, k=100, shard_axes=("model",))
+        from repro.sharding.axes import shard as _shard
+
+        cands = _shard(cands, "batch", None)               # reshard model→batch
+        return retrieval_topk(cands, q, k=100)
+
+    def retrieval_fn_cached(params, batch, candidates, *, _cfg=cfg):
+        # §Perf it.2: the candidate matrix is prepared ONCE (amortised
+        # across serving requests) and arrives pre-sharded — the step's
+        # only collectives are the per-query (P·k) top-k merge.
+        q = query_emb(params, batch, _cfg)
+        return retrieval_topk(candidates, q, k=100, shard_axes=("model",))
+
+    shapes = recsys_batch_shapes(cfg, cell, train=False)
+    shapes.pop("target_item", None)
+    shapes.pop("label", None)
+    from repro.models.retrieval import TopK
+
+    if variant == "cached":
+        cand_sds = _sds((n_cand, cfg.embed_dim), F32)
+        args = (params_shapes, shapes, cand_sds)
+        spec_b = {k: P() for k in shapes}
+        in_sh = (
+            _named(mesh, pspecs),
+            _named(mesh, spec_b),
+            NamedSharding(mesh, P("model", None)),
+        )
+        out_sh = TopK(NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+        return BuiltCell(arch_id, cell, retrieval_fn_cached, args, in_sh, out_sh, (), rules,
+                         _recsys_flops(cfg, cell, train=False),
+                         bytes_model.recsys_bytes(cfg, cell, ms=_ms(mesh), bs=nb))
+    args = (params_shapes, shapes)
+    spec_b = {k: P() for k in shapes}  # batch=1 → replicated queries
+    in_sh = (_named(mesh, pspecs), _named(mesh, spec_b))
+    out_sh = TopK(NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    return BuiltCell(arch_id, cell, retrieval_fn, args, in_sh, out_sh, (), rules,
+                     _recsys_flops(cfg, cell, train=False),
+                     bytes_model.recsys_bytes(cfg, cell, ms=_ms(mesh), bs=nb))
+
+
+def _recsys_loss_adapter(params, batch, cfg, loss):
+    return loss(params, batch, cfg)
+
+
+def _recsys_score_adapter(params, batch, cfg, score):
+    return score(params, batch, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    spec: ArchSpec, cell: ShapeCell, mesh: jax.sharding.Mesh, variant: str = "baseline"
+) -> BuiltCell:
+    """``variant`` selects §Perf hillclimb alternatives:
+      lm:      "dp_zero1"   — model axis does batch duty + ZeRO-1 opt sharding
+      recsys:  "model_axes" — retrieval scans the model-sharded table in place
+      gnn:     "partitioned"— dst-owner node partitioning (no node psums)
+    """
+    cfg = spec.config
+    if cfg.family == "lm":
+        if variant == "dp_zero1":
+            cfg = dataclasses.replace(cfg, model_axis_role="batch")
+        elif variant == "window8k":
+            # beyond-spec ablation: sliding-window attention makes long_500k
+            # decodable sub-quadratically (DESIGN.md §4 skip note)
+            cfg = dataclasses.replace(cfg, window=8192)
+        return _lm_cell(spec.arch_id, cfg, cell, mesh)
+    if cfg.family == "gnn":
+        return _gnn_cell(spec.arch_id, cfg, cell, mesh, variant=variant)
+    if cfg.family == "recsys":
+        return _recsys_cell(spec.arch_id, cfg, cell, mesh, variant=variant)
+    raise KeyError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Cost calibration (roofline correction for scan-counted-once)
+# ---------------------------------------------------------------------------
+#
+# XLA's HloCostAnalysis counts while-loop bodies ONCE, so a scanned L-layer
+# model reports ~1-layer FLOPs/bytes/collectives.  The dry-run therefore
+# compiles two small UNROLLED variants (k1 and k2 repeats) of every scanned
+# cell and extrapolates:  cost(L) = cost(k1) + (L - k1) · (cost(k2) -
+# cost(k1)) / (k2 - k1).  Unscanned families (GNN, fm/bst/bert4rec) need no
+# correction.
+
+
+@dataclasses.dataclass
+class Calibration:
+    trip_count: int            # L for LM, seq_len for DIEN
+    k1: int
+    k2: int
+    cell_k1: BuiltCell
+    cell_k2: BuiltCell
+
+    def extrapolate(self, v1: float, v2: float) -> float:
+        slope = (v2 - v1) / (self.k2 - self.k1)
+        return v1 + (self.trip_count - self.k1) * slope
+
+
+def calibration_variants(spec: ArchSpec, cell: ShapeCell, mesh, variant: str = "baseline") -> Calibration | None:
+    cfg = spec.config
+    if cfg.family == "lm":
+        if variant == "dp_zero1":
+            cfg = dataclasses.replace(cfg, model_axis_role="batch")
+        elif variant == "window8k":
+            cfg = dataclasses.replace(cfg, window=8192)
+        k1, k2 = 1, 2
+        c1 = dataclasses.replace(cfg, n_layers=k1, unroll=True)
+        c2 = dataclasses.replace(cfg, n_layers=k2, unroll=True)
+        s1 = dataclasses.replace(spec, config=c1)
+        s2 = dataclasses.replace(spec, config=c2)
+        return Calibration(
+            trip_count=cfg.n_layers,
+            k1=k1,
+            k2=k2,
+            cell_k1=build_cell(s1, cell, mesh),
+            cell_k2=build_cell(s2, cell, mesh),
+        )
+    if cfg.family == "recsys" and cfg.interaction == "augru":
+        k1, k2 = 4, 8
+        c1 = dataclasses.replace(cfg, seq_len=k1, unroll=True)
+        c2 = dataclasses.replace(cfg, seq_len=k2, unroll=True)
+        s1 = dataclasses.replace(spec, config=c1)
+        s2 = dataclasses.replace(spec, config=c2)
+        return Calibration(
+            trip_count=cfg.seq_len,
+            k1=k1,
+            k2=k2,
+            cell_k1=build_cell(s1, cell, mesh),
+            cell_k2=build_cell(s2, cell, mesh),
+        )
+    return None

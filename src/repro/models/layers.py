@@ -1,0 +1,341 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, chunked-flash GQA
+attention, SwiGLU, GShard-style MoE.
+
+All functions are pure (params are dict pytrees) and carry logical sharding
+annotations from repro.sharding.axes, so the same code runs single-device
+(smoke tests) and on the production mesh (dry-run).
+
+Memory discipline (the part that matters at 4k–32k sequence):
+  * attention never materialises (S, S) scores — lax.scan over KV chunks
+    with an online softmax (flash-attention recurrence, jnp formulation);
+  * MoE uses GShard dispatch/combine einsums with a capacity factor, so
+    dispatched activations are O(tokens · top_k · cf · D), not O(tokens · E);
+  * everything contracts in fp32 (preferred_element_type) and stores bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import shard
+
+_NEG_INF = -1e30  # large-finite: avoids inf-inf → nan in online softmax
+
+
+# ---------------------------------------------------------------------------
+# Norms & positional encoding
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # variance in f32, but the OUTPUT expression is bf16-native: the final
+    # multiplies happen in x.dtype so any sequence-parallel gather placed on
+    # the output moves bf16, not a fused f32 intermediate (dry-run HLO
+    # showed GSPMD gathering the f32 version — 2× wire bytes).
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, n, head_dim); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    # broadcast to (..., S, 1, half) against (..., S, n, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked online-softmax (training/prefill) + cached decode
+# ---------------------------------------------------------------------------
+
+
+class AttnSpec(NamedTuple):
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    chunk: int
+    window: int | None  # sliding window (beyond-spec extra); None = full
+    unroll: bool = False
+
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, hd) → (B, S, KV*groups, hd) by repeating each kv head.
+
+    Output head dim aligns with the (flat, model-sharded) q head dim, so no
+    reshape of a sharded dimension ever happens (DESIGN.md §5).
+    """
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    k = jnp.repeat(k, groups, axis=2)
+    return shard(k, "batch", None, "model", None)
+
+
+def causal_attention(
+    q: jnp.ndarray,       # (B, Sq, H, hd) — model-sharded on H
+    k: jnp.ndarray,       # (B, Sk, KV, hd)
+    v: jnp.ndarray,       # (B, Sk, KV, hd)
+    spec: AttnSpec,
+    *,
+    q_offset: int | jnp.ndarray = 0,   # absolute position of q[0]
+) -> jnp.ndarray:
+    """Causal flash-style attention; scans KV chunks, O(Sq · C) live scores."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    groups = spec.n_heads // spec.n_kv_heads
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    scale = 1.0 / (hd ** 0.5)
+
+    chunk = min(spec.chunk, sk)
+    n_chunks = sk // chunk
+    assert n_chunks * chunk == sk, f"Sk={sk} not divisible by chunk={chunk}"
+
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    # NOTE: q stays bf16 — the f32 upcast happens inside the einsum
+    # (preferred_element_type).  Materialising a f32 q would make GSPMD
+    # place the seq→head reshard on the 2× wider tensor and re-do it per
+    # scan iteration (measured on the dry-run HLO).
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        j, k_j, v_j = xs
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqhd,bchd->bhqc", q, k_j,
+            preferred_element_type=jnp.float32,
+        ) * scale  # (B, H, Sq, C) f32
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if spec.window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < spec.window
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        # p is cast to the value dtype for the MXU contraction (standard
+        # flash practice); accumulation stays f32 via preferred_element_type
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32,
+        )
+        l = l * corr + jnp.sum(p, axis=-1)
+        return (acc, m_new, l), None
+
+    # pin the online-softmax state to the head-sharded layout so the loop
+    # carry never reshards
+    acc0 = shard(jnp.zeros((b, h, sq, hd), jnp.float32), "batch", "model", None, None)
+    m0 = shard(jnp.full((b, h, sq), _NEG_INF, jnp.float32), "batch", "model", None)
+    l0 = shard(jnp.zeros((b, h, sq), jnp.float32), "batch", "model", None)
+    # checkpoint the chunk body: without it the scan saves every chunk's
+    # (B, H, Sq, C) f32 score field for backward — ~8-12 GB/device at
+    # deepseek train_4k (measured).  Recomputing scores in bwd is the
+    # flash-attention recipe; saved state shrinks to the (acc, m, l) carry.
+    body_ckpt = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (acc, m, l), _ = jax.lax.scan(
+        body_ckpt, (acc0, m0, l0), (jnp.arange(n_chunks), kc, vc), unroll=spec.unroll
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, H, hd) — replicated over model
+    k_cache: jnp.ndarray,  # (B, S, KV, hd) — model-sharded on S (split-KV)
+    v_cache: jnp.ndarray,
+    spec: AttnSpec,
+    *,
+    length: jnp.ndarray | int,  # valid cache length (positions < length attend)
+) -> jnp.ndarray:
+    """One-token decode against a sequence-sharded KV cache.
+
+    The cache's S axis is sharded over "model"; XLA turns the softmax
+    max/sum reductions into tiny (B, KV, G) all-reduces and the value
+    contraction into a psum — i.e. flash-decoding split-KV emerges from
+    sharding propagation (DESIGN.md §5), with no (B, H, S) gather.
+    """
+    b, h, hd = q.shape
+    s = k_cache.shape[1]
+    kv = spec.n_kv_heads
+    groups = h // kv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32) * scale  # q replicated → free reshape
+
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # (B, KV, G, S) — S-sharded
+    pos = jnp.arange(s)
+    valid = pos[None, None, None, :] < length
+    if spec.window is not None:
+        valid &= pos[None, None, None, :] >= (length - spec.window)
+    logits = jnp.where(valid, logits, _NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)        # all-reduce(max) over S shards
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1)                        # all-reduce(sum)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # psum over S shards
+    out = out / denom[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU dense + GShard MoE
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jnp.ndarray, wi_gate, wi_up, wo) -> jnp.ndarray:
+    """SwiGLU MLP; wi_* column-parallel, wo row-parallel."""
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, wi_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("...d,df->...f", x, wi_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(dtype)
+    h = shard(h, "batch", *([None] * (h.ndim - 2)), "model")
+    # row-parallel down-proj: NO f32 preferred type — the TP partial-sum
+    # all-reduce must move bf16 (MXU still accumulates f32 internally;
+    # only the cross-shard reduce is bf16 — Megatron convention)
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray      # load-balance loss (Switch-style)
+    dropped_frac: jnp.ndarray  # fraction of (token, choice) slots over capacity
+
+
+def moe_block(
+    x: jnp.ndarray,            # (B, S, D) or (T, D)
+    router_w: jnp.ndarray,     # (D, E)
+    wi_gate: jnp.ndarray,      # (E, D, F)
+    wi_up: jnp.ndarray,        # (E, D, F)
+    wo: jnp.ndarray,           # (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 2048,
+) -> tuple[jnp.ndarray, MoEMetrics]:
+    """GShard top-k routing with capacity + dispatch/combine einsums.
+
+    Tokens are split into groups of ``group_size``; each group has expert
+    capacity C = ceil(group_size · top_k · cf / E).  Over-capacity (token,
+    choice) pairs are dropped (their combine weight is 0) — standard GShard;
+    the dropped fraction is reported so training can monitor it.
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    e = router_w.shape[1]
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    g_size = min(group_size, t)
+    n_groups = t // g_size
+    assert n_groups * g_size == t, f"{t} tokens not divisible into {g_size}-groups"
+    xs = tokens.reshape(n_groups, g_size, d)
+    xs = shard(xs, "batch", None, None)
+
+    cap = max(1, int(g_size * top_k * capacity_factor / e))
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xs, router_w, preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, S, E) fp32
+
+    # --- top-k choice loop (standard GShard formulation) ---
+    combine = jnp.zeros((n_groups, g_size, e, cap), jnp.float32)
+    remaining = probs
+    # position counters per expert, advanced across the k choices
+    base_count = jnp.zeros((n_groups, 1, e), jnp.float32)
+    gates_sum = jnp.zeros((n_groups, g_size), jnp.float32)
+    dropped = jnp.zeros((), jnp.float32)
+    aux_me = jnp.zeros((n_groups, e), jnp.float32)
+    aux_ce = jnp.zeros((n_groups, e), jnp.float32)
+
+    for _ in range(top_k):
+        gate = jnp.max(remaining, axis=-1)                 # (G, S)
+        idx = jnp.argmax(remaining, axis=-1)               # (G, S)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (G, S, E)
+        # position of each token within its chosen expert's capacity buffer
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + base_count  # (G, S, E)
+        base_count = base_count + jnp.sum(onehot, axis=1, keepdims=True)
+        within = pos_in_e < cap
+        keep = onehot * within
+        dropped = dropped + jnp.sum(onehot * (1.0 - within))
+        # one_hot(position) fuses into the multiply-add (iota compare), so the
+        # (G,S,E,C) tensor is only materialised once, in `combine`.
+        oh_pos = jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap, dtype=jnp.float32)
+        combine = combine + gate[..., None, None] * keep[..., None] * oh_pos
+        gates_sum = gates_sum + gate * jnp.sum(keep, axis=-1)
+        aux_me = aux_me + jnp.mean(probs, axis=1)
+        aux_ce = aux_ce + jnp.mean(onehot, axis=1)
+        remaining = remaining * (1.0 - onehot)
+
+    # renormalise combine weights over the k kept choices
+    combine = combine / jnp.maximum(gates_sum, 1e-9)[..., None, None]
+    dispatch = (combine > 0.0).astype(x.dtype)
+    combine = combine.astype(jnp.float32)
+    dispatch = shard(dispatch, "batch", None, "expert_model", None)
+
+    xd = jnp.einsum("gsec,gsd->gecd", dispatch, xs, preferred_element_type=jnp.float32).astype(x.dtype)
+    xd = shard(xd, "batch", "expert_model", None, None)
+    hg = jnp.einsum("gecd,edf->gecf", xd, wi_gate, preferred_element_type=jnp.float32)
+    hu = jnp.einsum("gecd,edf->gecf", xd, wi_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hu).astype(x.dtype)
+    h = shard(h, "batch", "expert_model", None, "ff_model")
+    y = jnp.einsum("gecf,efd->gecd", h, wo)  # bf16 cross-shard reduce (see swiglu)
+    y = shard(y, "batch", "expert_model", None, None)
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), y, preferred_element_type=jnp.float32)
+
+    aux_loss = jnp.mean(jnp.sum((aux_me / top_k) * (aux_ce / top_k), axis=-1)) * e
+    metrics = MoEMetrics(
+        aux_loss=aux_loss.astype(jnp.float32),
+        dropped_frac=dropped / (t * top_k),
+    )
+    return out.reshape(orig_shape).astype(x.dtype), metrics
+
+
+def moe_dense_decode(
+    x: jnp.ndarray,            # (B, D) — decode tokens
+    router_w: jnp.ndarray,     # (D, E)
+    wi_gate: jnp.ndarray,      # (E, D, F)
+    wi_up: jnp.ndarray,
+    wo: jnp.ndarray,           # (E, F, D)
+    *,
+    top_k: int,
+) -> jnp.ndarray:
+    """Decode-path MoE: run every expert, combine with sparse top-k gates.
+
+    E/top_k × more FLOPs than dispatch — but decode is weight-READ bound
+    (every expert's weights stream from HBM once the batch covers the
+    experts anyway), so the roofline is unchanged while dispatch/capacity
+    complexity (token dropping at batch≈E) disappears.  Never used in
+    training.
+    """
+    logits = jnp.einsum("bd,de->be", x, router_w, preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, _ = jax.lax.top_k(probs, top_k)
+    thresh = top_vals[:, -1:]
+    gates = jnp.where(probs >= thresh, probs, 0.0)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)  # (B, E)
+
+    hg = jnp.einsum("bd,edf->bef", x, wi_gate, preferred_element_type=jnp.float32)
+    hu = jnp.einsum("bd,edf->bef", x, wi_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hu).astype(x.dtype)
+    h = shard(h, "batch", "expert_model", "ff_model")
+    y = jnp.einsum("bef,efd->bed", h, wo)  # bf16 cross-shard reduce
+    out = jnp.einsum("bed,be->bd", y, gates.astype(x.dtype), preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)

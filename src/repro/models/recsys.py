@@ -1,0 +1,475 @@
+"""Recsys model zoo: FM, DIEN (GRU + AUGRU), BERT4Rec, BST.
+
+Common anatomy (kernel_taxonomy §RecSys): huge row-sharded embedding tables
+(repro.models.embeddings) → feature-interaction tower → small replicated
+MLP.  The lookup is the hot path; interaction towers differ per arch:
+
+  fm        pairwise ⟨vᵢ,vⱼ⟩ via the O(nk) sum-square trick (Rendle ICDM'10)
+  augru     DIEN: GRU interest extraction + attention-scaled AUGRU evolution
+  bidir-seq BERT4Rec: bidirectional encoder, masked-item sampled softmax
+  transformer-seq  BST: behaviours+target through one transformer block → MLP
+
+Every model implements: init_params / param_specs / loss (train) /
+score (pointwise serving) / query_embedding (for retrieval_cand, which
+shares the distributed top-k in repro.models.retrieval).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.embeddings import embedding_bag, sharded_lookup
+from repro.sharding.axes import MeshRules, shard
+
+
+def _dense(key, shape, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def _mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": _dense(ks[i], (dims[i], dims[i + 1]), dtype), "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _bce(logit, label):
+    logit = logit.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * label + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss
+
+
+# ===========================================================================
+# FM — factorization machine over 39 hashed categorical fields
+# ===========================================================================
+
+
+def _fm_offsets(cfg: RecsysConfig) -> jnp.ndarray:
+    sizes = jnp.asarray(cfg.vocab_sizes, jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)[:-1]])
+
+
+def fm_init(key: jax.Array, cfg: RecsysConfig) -> dict:
+    total = sum(cfg.vocab_sizes)
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": _dense(k1, (total, cfg.embed_dim), scale=0.01),
+        "linear": _dense(k2, (total, 1), scale=0.01),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def fm_param_specs(cfg: RecsysConfig, rules: MeshRules) -> dict:
+    return {
+        "embed": rules.spec("model", None),
+        "linear": rules.spec("model", None),
+        "bias": rules.spec(),
+    }
+
+
+def fm_score(params: dict, batch: dict, cfg: RecsysConfig) -> jnp.ndarray:
+    ids = batch["ids"] + _fm_offsets(cfg)[None, :]       # (B, F) global ids
+    ids = shard(ids, "batch", None)
+    emb = sharded_lookup(params["embed"], ids)           # (B, F, D)
+    lin = sharded_lookup(params["linear"], ids)[..., 0]  # (B, F)
+    s = jnp.sum(emb, axis=1)                             # (B, D)
+    s2 = jnp.sum(emb * emb, axis=1)
+    pairwise = 0.5 * jnp.sum(s * s - s2, axis=-1)        # sum-square trick
+    return params["bias"] + jnp.sum(lin, axis=1) + pairwise
+
+
+def fm_loss(params, batch, cfg):
+    logit = fm_score(params, batch, cfg)
+    loss = _bce(logit, batch["label"])
+    return loss, {"bce_loss": loss}
+
+
+def fm_query_embedding(params, batch, cfg):
+    """User-side vector = sum of all non-target field embeddings."""
+    ids = batch["ids"] + _fm_offsets(cfg)[None, :]
+    emb = sharded_lookup(params["embed"], ids[:, :-1])   # exclude item field
+    return jnp.sum(emb, axis=1)                          # (B, D)
+
+
+def fm_candidate_table(params, cfg, n_candidates):
+    off = sum(cfg.vocab_sizes[:-1])                      # item = last field
+    return jax.lax.dynamic_slice_in_dim(params["embed"], off, n_candidates, 0)
+
+
+# ===========================================================================
+# DIEN — GRU interest extraction + AUGRU interest evolution
+# ===========================================================================
+
+
+def _gru_init(key, d_in, d_h):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": _dense(k1, (d_in, 3 * d_h)),
+        "wh": _dense(k2, (d_h, 3 * d_h)),
+        "b": jnp.zeros((3 * d_h,), jnp.float32),
+    }
+
+
+def _gru_gates(w, x_t, h):
+    gx = x_t @ w["wx"] + w["b"]
+    gh = h @ w["wh"]
+    xr, xz, xn = jnp.split(gx, 3, axis=-1)
+    hr, hz, hn = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    return z, n
+
+
+def gru_scan(w, xs, h0, mask=None, *, unroll=False):
+    """xs: (B, T, D) → (h_T, outputs (B, T, H)).  mask freezes state on padding."""
+    ms = jnp.ones(xs.shape[:2], xs.dtype) if mask is None else mask
+
+    def step(h, inp):
+        x_t, m_t = inp
+        z, n = _gru_gates(w, x_t, h)
+        h_new = (1.0 - z) * n + z * h
+        h_new = jnp.where(m_t[:, None] > 0, h_new, h)
+        return h_new, h_new
+
+    hT, ys = jax.lax.scan(step, h0, (xs.transpose(1, 0, 2), ms.transpose(1, 0)),
+                          unroll=unroll)
+    return hT, ys.transpose(1, 0, 2)
+
+
+def augru_scan(w, xs, att, h0, mask=None, *, unroll=False):
+    """AUGRU (DIEN eq. 5): update gate scaled by attention score a_t."""
+
+    def step(h, inp):
+        x_t, a_t, m_t = inp
+        z, n = _gru_gates(w, x_t, h)
+        z = z * a_t[:, None]
+        h_new = (1.0 - z) * h + z * n
+        h_new = jnp.where(m_t[:, None] > 0, h_new, h)
+        return h_new, h_new
+
+    ms = mask if mask is not None else jnp.ones(xs.shape[:2], xs.dtype)
+    hT, ys = jax.lax.scan(
+        step, h0, (xs.transpose(1, 0, 2), att.transpose(1, 0), ms.transpose(1, 0)),
+        unroll=unroll,
+    )
+    return hT, ys.transpose(1, 0, 2)
+
+
+N_PROFILE = 5  # multi-hot user-profile slots (bagged)
+
+
+def dien_init(key: jax.Array, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    d = cfg.embed_dim
+    d_seq = 2 * d  # item ⊕ cate
+    gh = cfg.gru_dim
+    v_item, v_cate, v_user = cfg.vocab_sizes
+    feat_dim = d + 2 * d + gh + d_seq  # profile + target + final interest + seq-sum
+    return {
+        "item": _dense(ks[0], (v_item, d), scale=0.01),
+        "cate": _dense(ks[1], (v_cate, d), scale=0.01),
+        "user": _dense(ks[2], (v_user, d), scale=0.01),
+        "gru": _gru_init(ks[3], d_seq, gh),
+        "augru": _gru_init(ks[4], d_seq, gh),
+        "att_w": _dense(ks[5], (gh, d_seq)),
+        "aux_w": _dense(ks[6], (gh, d_seq)),
+        "mlp": _mlp_init(ks[7], (feat_dim, *cfg.mlp_dims, 1)),
+    }
+
+
+def _specs_like(init_fn, cfg, rules: MeshRules, sharded_tables: tuple[str, ...]):
+    """Replicated specs for everything except row-sharded embedding tables."""
+    shapes = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    specs = jax.tree.map(lambda _: rules.spec(), shapes)
+    for name in sharded_tables:
+        specs[name] = rules.spec("model", None)
+    return specs
+
+
+def dien_param_specs(cfg: RecsysConfig, rules: MeshRules) -> dict:
+    return _specs_like(dien_init, cfg, rules, ("item", "cate", "user"))
+
+
+def _dien_features(params, batch, cfg):
+    seq_e = jnp.concatenate(
+        [
+            sharded_lookup(params["item"], batch["seq_items"]),
+            sharded_lookup(params["cate"], batch["seq_cates"]),
+        ],
+        axis=-1,
+    )  # (B, T, 2D)
+    mask = batch["seq_mask"].astype(jnp.float32)
+    tgt = jnp.concatenate(
+        [
+            sharded_lookup(params["item"], batch["target_item"]),
+            sharded_lookup(params["cate"], batch["target_cate"]),
+        ],
+        axis=-1,
+    )  # (B, 2D)
+    b, t, _ = seq_e.shape
+    prof_ids = batch["profile_ids"]  # (B, P) multi-hot → bag-sum
+    prof = embedding_bag(
+        params["user"],
+        prof_ids.reshape(-1),
+        jnp.repeat(jnp.arange(b), prof_ids.shape[1]),
+        num_segments=b,
+        combiner="mean",
+    )
+
+    h0 = jnp.zeros((b, cfg.gru_dim), jnp.float32)
+    _, interest = gru_scan(params["gru"], seq_e, h0, mask=mask, unroll=cfg.unroll)  # (B, T, GH)
+
+    # DIEN auxiliary loss: interest state at t should predict behaviour t+1
+    # against an in-batch negative (rolled sequence).
+    nxt = seq_e[:, 1:]
+    neg = jnp.roll(seq_e[:, 1:], 1, axis=0)
+    pred = interest[:, :-1] @ params["aux_w"]  # (B, T-1, 2D)
+    m = mask[:, 1:]
+    pos_logit = jnp.sum(pred * nxt, -1)
+    neg_logit = jnp.sum(pred * neg, -1)
+    aux = (
+        jnp.sum((jnp.logaddexp(0.0, -pos_logit) + jnp.logaddexp(0.0, neg_logit)) * m)
+        / jnp.maximum(jnp.sum(m), 1.0)
+    )
+
+    # attention of target on interest states → AUGRU
+    att_logits = jnp.einsum("btg,gd,bd->bt", interest, params["att_w"], tgt)
+    att_logits = jnp.where(mask > 0, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=-1)
+    hT, _ = augru_scan(params["augru"], seq_e, att, h0, mask=mask, unroll=cfg.unroll)
+
+    feats = jnp.concatenate([prof, tgt, hT, jnp.sum(seq_e * mask[..., None], 1)], axis=-1)
+    return feats, aux
+
+
+def dien_score(params, batch, cfg):
+    feats, _ = _dien_features(params, batch, cfg)
+    return _mlp_apply(params["mlp"], feats)[:, 0]
+
+
+def dien_loss(params, batch, cfg):
+    feats, aux = _dien_features(params, batch, cfg)
+    logit = _mlp_apply(params["mlp"], feats)[:, 0]
+    bce = _bce(logit, batch["label"])
+    loss = bce + 0.5 * aux
+    return loss, {"bce_loss": bce, "aux_loss": aux}
+
+
+def dien_query_embedding(params, batch, cfg):
+    """Interest summary projected to item space for retrieval."""
+    seq_e = jnp.concatenate(
+        [
+            sharded_lookup(params["item"], batch["seq_items"]),
+            sharded_lookup(params["cate"], batch["seq_cates"]),
+        ],
+        axis=-1,
+    )
+    mask = batch["seq_mask"].astype(jnp.float32)
+    b = seq_e.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), jnp.float32)
+    hT, _ = gru_scan(params["gru"], seq_e, h0, mask=mask, unroll=cfg.unroll)
+    return (hT @ params["aux_w"])[:, : cfg.embed_dim]  # item-side half
+
+
+def dien_candidate_table(params, cfg, n_candidates):
+    return params["item"][:n_candidates]
+
+
+# ===========================================================================
+# Small bidirectional transformer encoder (BERT4Rec / BST share it)
+# ===========================================================================
+
+
+def _enc_block_init(key, d, n_heads, d_ff):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wqkv": _dense(ks[0], (d, 3 * d)),
+        "wo": _dense(ks[1], (d, d)),
+        "w1": _dense(ks[2], (d, d_ff)),
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": _dense(ks[3], (d_ff, d)),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _layernorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def _enc_block(x, bp, n_heads, pad_mask=None):
+    """Full (bidirectional) attention block — seq ≤ a few hundred, dense scores."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    h = _layernorm(x, bp["ln1"])
+    qkv = h @ bp["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, n_heads, hd)
+    k = k.reshape(b, t, n_heads, hd)
+    v = v.reshape(b, t, n_heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) / (hd ** 0.5)
+    if pad_mask is not None:
+        s = jnp.where(pad_mask[:, None, None, :] > 0, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v.astype(jnp.float32)).reshape(b, t, d)
+    x = x + (o.astype(x.dtype) @ bp["wo"])
+    h = _layernorm(x, bp["ln2"])
+    h = jax.nn.gelu(h @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"]
+    return x + h
+
+
+# ===========================================================================
+# BERT4Rec
+# ===========================================================================
+
+
+def bert4rec_init(key: jax.Array, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    d = cfg.embed_dim
+    return {
+        "item": _dense(ks[0], (cfg.item_vocab, d), scale=0.02),
+        "pos": _dense(ks[1], (cfg.seq_len, d), scale=0.02),
+        "out_b": jnp.zeros((), jnp.float32),
+        "blocks": [
+            _enc_block_init(ks[3 + i], d, cfg.n_heads, 4 * d) for i in range(cfg.n_blocks)
+        ],
+        "final_ln": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def bert4rec_param_specs(cfg: RecsysConfig, rules: MeshRules) -> dict:
+    return _specs_like(bert4rec_init, cfg, rules, ("item",))
+
+
+def bert4rec_encode(params, batch, cfg):
+    seq = batch["seq"]
+    x = sharded_lookup(params["item"], seq) + params["pos"][None]
+    x = shard(x, "batch", None, None)
+    pm = batch.get("pad_mask")
+    for bp in params["blocks"]:
+        x = _enc_block(x, bp, cfg.n_heads, pad_mask=pm)
+    return _layernorm(x, params["final_ln"])
+
+
+def bert4rec_loss(params, batch, cfg):
+    """Masked-item prediction with sampled softmax (1 pos + shared negatives)."""
+    h = bert4rec_encode(params, batch, cfg)                      # (B, T, D)
+    hm = jnp.take_along_axis(h, batch["masked_pos"][..., None], axis=1)  # (B, M, D)
+    pos_e = sharded_lookup(params["item"], batch["masked_ids"])  # (B, M, D)
+    neg_e = sharded_lookup(params["item"], batch["neg_ids"])     # (N, D)
+    logit_pos = jnp.sum(hm * pos_e, -1, keepdims=True)           # (B, M, 1)
+    logit_neg = jnp.einsum("bmd,nd->bmn", hm, neg_e)             # (B, M, N)
+    logits = jnp.concatenate([logit_pos, logit_neg], -1).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits + params["out_b"], axis=-1)
+    loss = -jnp.mean(logp[..., 0])
+    return loss, {"sampled_ce": loss}
+
+
+def bert4rec_score(params, batch, cfg):
+    h = bert4rec_encode(params, batch, cfg)
+    h_last = h[:, -1]
+    tgt = sharded_lookup(params["item"], batch["target_item"])
+    return jnp.sum(h_last * tgt, -1)
+
+
+def bert4rec_query_embedding(params, batch, cfg):
+    return bert4rec_encode(params, batch, cfg)[:, -1]
+
+
+def bert4rec_candidate_table(params, cfg, n_candidates):
+    return params["item"][:n_candidates]
+
+
+# ===========================================================================
+# BST — Behavior Sequence Transformer
+# ===========================================================================
+
+
+def bst_init(key: jax.Array, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    d = cfg.embed_dim
+    t = cfg.seq_len + 1  # behaviours + target
+    flat = t * d
+    return {
+        "item": _dense(ks[0], (cfg.item_vocab, d), scale=0.02),
+        "pos": _dense(ks[1], (t, d), scale=0.02),
+        "blocks": [
+            _enc_block_init(ks[3 + i], d, cfg.n_heads, 4 * d) for i in range(cfg.n_blocks)
+        ],
+        "mlp": _mlp_init(ks[2], (flat, *cfg.mlp_dims, 1)),
+    }
+
+
+def bst_param_specs(cfg: RecsysConfig, rules: MeshRules) -> dict:
+    return _specs_like(bst_init, cfg, rules, ("item",))
+
+
+def bst_score(params, batch, cfg):
+    seq = jnp.concatenate([batch["seq_items"], batch["target_item"][:, None]], axis=1)
+    x = sharded_lookup(params["item"], seq) + params["pos"][None]
+    x = shard(x, "batch", None, None)
+    for bp in params["blocks"]:
+        x = _enc_block(x, bp, cfg.n_heads)
+    b = x.shape[0]
+    return _mlp_apply(params["mlp"], x.reshape(b, -1))[:, 0]
+
+
+def bst_loss(params, batch, cfg):
+    logit = bst_score(params, batch, cfg)
+    loss = _bce(logit, batch["label"])
+    return loss, {"bce_loss": loss}
+
+
+def bst_query_embedding(params, batch, cfg):
+    seq = jnp.concatenate([batch["seq_items"], jnp.zeros_like(batch["seq_items"][:, :1])], axis=1)
+    x = sharded_lookup(params["item"], seq) + params["pos"][None]
+    for bp in params["blocks"]:
+        x = _enc_block(x, bp, cfg.n_heads)
+    return jnp.mean(x, axis=1)
+
+
+def bst_candidate_table(params, cfg, n_candidates):
+    return params["item"][:n_candidates]
+
+
+# ===========================================================================
+# Dispatch
+# ===========================================================================
+
+_MODELS = {
+    "fm-2way": (fm_init, fm_param_specs, fm_loss, fm_score, fm_query_embedding, fm_candidate_table),
+    "augru": (dien_init, dien_param_specs, dien_loss, dien_score, dien_query_embedding, dien_candidate_table),
+    "bidir-seq": (
+        bert4rec_init,
+        bert4rec_param_specs,
+        bert4rec_loss,
+        bert4rec_score,
+        bert4rec_query_embedding,
+        bert4rec_candidate_table,
+    ),
+    "transformer-seq": (bst_init, bst_param_specs, bst_loss, bst_score, bst_query_embedding, bst_candidate_table),
+}
+
+
+def get_model(cfg: RecsysConfig):
+    """Returns (init, param_specs, loss, score, query_embedding, candidates)."""
+    return _MODELS[cfg.interaction]

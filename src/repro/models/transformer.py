@@ -1,0 +1,363 @@
+"""Decoder-only transformer LM (dense + MoE), train / prefill / decode.
+
+Structure: params are a dict pytree; per-layer weights are stacked on a
+leading L axis and the layer is applied with ``lax.scan`` (+ optional
+``jax.checkpoint``), so HLO size and compile time are O(1) in depth — a
+hard requirement for the 95-layer dry-run cells.
+
+Sharding (DESIGN.md §5): Megatron TP over "model" (attention heads, FFN),
+sequence-parallel residual stream (S sharded over "model" between blocks),
+FSDP param storage over "fsdp" axes for the ≥67B configs, GShard MoE with
+expert-parallel or expert-TP mode picked by divisibility, and split-KV
+decode with the cache's S axis sharded over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+from repro.sharding.axes import MeshRules, shard
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_lm_params(key: jax.Array, cfg: LMConfig) -> dict:
+    """Initialise the full parameter pytree (use jax.eval_shape for dry-run)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    nl, h, kv, f, v = cfg.n_layers, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    keys = jax.random.split(key, 16)
+    dt = cfg.dtype
+
+    p: dict[str, Any] = {
+        "embed": _dense_init(keys[0], (v, d), dt, scale=1.0),
+        "out": _dense_init(keys[1], (d, v), dt),
+        "final_norm": jnp.zeros((d,), dt),
+        "layers": {
+            "ln1": jnp.zeros((nl, d), dt),
+            "ln2": jnp.zeros((nl, d), dt),
+            "wq": _dense_init(keys[2], (nl, d, h * hd), dt),
+            "wk": _dense_init(keys[3], (nl, d, kv * hd), dt),
+            "wv": _dense_init(keys[4], (nl, d, kv * hd), dt),
+            "wo": _dense_init(keys[5], (nl, h * hd, d), dt),
+        },
+    }
+    if cfg.moe_experts:
+        e = cfg.moe_experts
+        p["layers"]["router"] = _dense_init(keys[6], (nl, d, e), jnp.float32)
+        p["layers"]["wi_gate"] = _dense_init(keys[7], (nl, e, d, f), dt)
+        p["layers"]["wi_up"] = _dense_init(keys[8], (nl, e, d, f), dt)
+        p["layers"]["wo_ffn"] = _dense_init(keys[9], (nl, e, f, d), dt)
+    else:
+        p["layers"]["wi_gate"] = _dense_init(keys[7], (nl, d, f), dt)
+        p["layers"]["wi_up"] = _dense_init(keys[8], (nl, d, f), dt)
+        p["layers"]["wo_ffn"] = _dense_init(keys[9], (nl, f, d), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+
+def lm_rules(cfg: LMConfig, mesh: jax.sharding.Mesh) -> MeshRules:
+    axes = mesh.axis_names
+    if cfg.model_axis_role == "batch":
+        # §Perf: every axis does data parallelism.  Without fsdp: params
+        # replicated + ZeRO-1 optimizer sharding (small models).  With
+        # fsdp: full ZeRO-3 — params sharded over ALL axes, gathered
+        # layer-by-layer inside the scan (large models, e.g. deepseek-67b,
+        # where Megatron TP's activation collectives dominate).
+        batch = tuple(a for a in ("pod", "data", "model") if a in axes)
+        fsdp = batch if cfg.fsdp else ()
+        return MeshRules(batch=batch, model=None, fsdp=fsdp, mesh=mesh)
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    model = "model" if "model" in axes else None
+    fsdp = tuple(a for a in ("pod", "data") if a in axes) if cfg.fsdp else ()
+    n_model = mesh.shape.get("model", 1)
+    return MeshRules(
+        batch=batch,
+        model=model,
+        fsdp=fsdp,
+        mesh=mesh,
+        shard_kv=(cfg.n_kv_heads % n_model == 0),
+        shard_expert=(cfg.moe_experts % n_model == 0) if cfg.moe_experts else False,
+    )
+
+
+def zero1_opt_specs(param_specs, params_shapes, mesh) -> "Any":
+    """ZeRO-1: optimizer state sharded over ALL mesh axes on the last
+    divisible dim (params stay replicated; XLA turns the update into
+    reduce-scatter(grad) → sharded update → all-gather(param))."""
+    n = mesh.size
+    axes = tuple(mesh.axis_names)
+
+    def mk(spec, shape_struct):
+        shape = shape_struct.shape
+        if len(shape) >= 1 and shape[-1] % n == 0:
+            return P(*([None] * (len(shape) - 1) + [axes]))
+        return P()
+
+    return jax.tree.map(mk, param_specs, params_shapes)
+
+
+def lm_param_specs(cfg: LMConfig, rules: MeshRules) -> dict:
+    """PartitionSpec pytree mirroring init_lm_params' structure."""
+    r = rules
+
+    def s(*names):
+        return r.spec(*names)
+
+    specs: dict[str, Any] = {
+        "embed": s("model", "fsdp"),
+        "out": s("fsdp", "model"),
+        "final_norm": s(None),
+        "layers": {
+            "ln1": s(None, None),
+            "ln2": s(None, None),
+            "wq": s(None, "fsdp", "model"),
+            "wk": s(None, "fsdp", "kv_model"),
+            "wv": s(None, "fsdp", "kv_model"),
+            "wo": s(None, "model", "fsdp"),
+        },
+    }
+    if cfg.moe_experts:
+        specs["layers"]["router"] = s(None, "fsdp", None)
+        specs["layers"]["wi_gate"] = s(None, "expert_model", "fsdp", "ff_model")
+        specs["layers"]["wi_up"] = s(None, "expert_model", "fsdp", "ff_model")
+        specs["layers"]["wo_ffn"] = s(None, "expert_model", "ff_model", "fsdp")
+    else:
+        specs["layers"]["wi_gate"] = s(None, "fsdp", "model")
+        specs["layers"]["wi_up"] = s(None, "fsdp", "model")
+        specs["layers"]["wo_ffn"] = s(None, "model", "fsdp")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: LMConfig) -> L.AttnSpec:
+    return L.AttnSpec(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        chunk=cfg.attn_chunk,
+        window=cfg.window,
+        unroll=cfg.unroll,
+    )
+
+
+def _layer_fwd(cfg: LMConfig, x, lp, positions):
+    """One transformer block (training/prefill path).  x: (B, S, D)."""
+    b, s_len, d = x.shape
+    hd = cfg.head_dim
+    # ---- attention ----
+    # residual stream is sequence-sharded; the norm runs on seq shards
+    # (per-token op) and the TP-region gather is pinned to the bf16 norm
+    # OUTPUT — without this constraint GSPMD gathers the f32 intermediate
+    # inside rmsnorm (2× the wire bytes; measured on the dry-run HLO).
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    h = shard(h, "batch", None, None)
+    q = jnp.einsum("bsd,dk->bsk", h, lp["wq"]).reshape(b, s_len, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dk->bsk", h, lp["wk"]).reshape(b, s_len, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dk->bsk", h, lp["wv"]).reshape(b, s_len, cfg.n_kv_heads, hd)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "kv_model", None)
+    v = shard(v, "batch", None, "kv_model", None)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    attn = L.causal_attention(q, k, v, _attn_spec(cfg))
+    attn = attn.reshape(b, s_len, cfg.n_heads * hd)
+    x = x + jnp.einsum("bsk,kd->bsd", attn, lp["wo"]).astype(x.dtype)
+    x = shard(x, "batch", "model", None)  # sequence-parallel residual
+
+    # ---- ffn ----
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    h = shard(h, "batch", None, None)  # gather on bf16 (see ln1 note)
+    if cfg.moe_experts:
+        y, moe_metrics = L.moe_block(
+            h,
+            lp["router"],
+            lp["wi_gate"],
+            lp["wi_up"],
+            lp["wo_ffn"],
+            top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+        aux = moe_metrics.aux_loss
+    else:
+        y = L.swiglu(h, lp["wi_gate"], lp["wi_up"], lp["wo_ffn"])
+        aux = jnp.float32(0.0)
+    x = x + y.astype(x.dtype)
+    x = shard(x, "batch", "model", None)
+    return x, aux
+
+
+def lm_forward(params: dict, tokens: jnp.ndarray, cfg: LMConfig):
+    """Token ids (B, S) → final hidden states (B, S, D) + mean aux loss."""
+    b, s_len = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = shard(x, "batch", "model", None)
+    positions = jnp.arange(s_len)
+
+    layer_fn = functools.partial(_layer_fwd, cfg)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    def scan_body(x, lp):
+        x, aux = layer_fn(x, lp, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["layers"], unroll=cfg.unroll)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.mean(auxes)
+
+
+def lm_logits(params: dict, hidden: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    logits = jnp.einsum(
+        "bsd,dv->bsv", hidden, params["out"], preferred_element_type=jnp.float32
+    )
+    return shard(logits, "batch", None, "model")
+
+
+def lm_loss(params: dict, batch: dict, cfg: LMConfig):
+    """Next-token cross entropy.  batch: tokens (B, S+1) int32."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    hidden, aux = lm_forward(params, inputs, cfg)
+    logits = lm_logits(params, hidden, cfg)  # (B, S, V) fp32, V-sharded
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # CE via one-hot contraction, NOT take_along_axis: a gather over the
+    # V-sharded axis would make GSPMD all-gather the full logits (8+ GB at
+    # deepseek scale); the iota-compare one-hot contracts locally and psums
+    # a (B, S) scalar field instead.
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logp.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logp, onehot)
+    loss = -jnp.mean(ll)
+    return loss + 0.01 * aux, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (L, B, S, KV, hd) — S sharded over "model"
+    v: jnp.ndarray
+    length: jnp.ndarray  # scalar int32: number of valid positions
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, seq_len: int) -> KVCache:
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.dtype),
+        v=jnp.zeros(shape, cfg.dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def kv_cache_specs(cfg: LMConfig, rules: MeshRules) -> KVCache:
+    spec = rules.spec(None, "batch", "model", None, None)
+    return KVCache(k=spec, v=spec, length=P())
+
+
+def _layer_decode(cfg: LMConfig, x, lp, kc, vc, length):
+    """One block for a single new token.  x: (B, D); kc/vc: (B, S, KV, hd)."""
+    b, d = x.shape
+    hd = cfg.head_dim
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bd,dk->bk", h, lp["wq"]).reshape(b, cfg.n_heads, hd)
+    k_new = jnp.einsum("bd,dk->bk", h, lp["wk"]).reshape(b, cfg.n_kv_heads, hd)
+    v_new = jnp.einsum("bd,dk->bk", h, lp["wv"]).reshape(b, cfg.n_kv_heads, hd)
+    pos = jnp.full((1,), length, jnp.int32)
+    q = L.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+    k_new = L.rope(k_new[:, None], pos, cfg.rope_theta)[:, 0]
+
+    # write the new token's kv at position `length` (masked write on the
+    # S-sharded cache)
+    kc = jax.lax.dynamic_update_slice(kc, k_new[:, None], (0, length, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new[:, None], (0, length, 0, 0))
+    kc = shard(kc, "batch", "model", None, None)
+    vc = shard(vc, "batch", "model", None, None)
+
+    attn = L.decode_attention(q, kc, vc, _attn_spec(cfg), length=length + 1)
+    x = x + jnp.einsum("bk,kd->bd", attn.reshape(b, -1), lp["wo"]).astype(x.dtype)
+
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe_experts:
+        # decode uses the dense-expert path: no dispatch, no token dropping,
+        # same memory-bound roofline (see layers.moe_dense_decode)
+        y = L.moe_dense_decode(
+            h,
+            lp["router"],
+            lp["wi_gate"],
+            lp["wi_up"],
+            lp["wo_ffn"],
+            top_k=cfg.moe_top_k,
+        )
+    else:
+        y = L.swiglu(h, lp["wi_gate"], lp["wi_up"], lp["wo_ffn"])
+    x = x + y.astype(x.dtype)
+    return x, kc, vc
+
+
+def serve_step(params: dict, cache: KVCache, tokens: jnp.ndarray, cfg: LMConfig):
+    """Decode one token per sequence.  tokens: (B,) int32 (the new inputs).
+
+    Returns (logits (B, V), next-token ids (B,), updated cache).
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def scan_body(carry, lp_kv):
+        x, length = carry
+        lp, kc, vc = lp_kv
+        x, kc, vc = _layer_decode(cfg, x, lp, kc, vc, length)
+        return (x, length), (kc, vc)
+
+    (x, _), (k_new, v_new) = jax.lax.scan(
+        scan_body, (x, cache.length), (params["layers"], cache.k, cache.v),
+        unroll=cfg.unroll,
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bd,dv->bv", x, params["out"], preferred_element_type=jnp.float32
+    )
+    logits = shard(logits, "batch", "model")
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_cache = KVCache(k=k_new, v=v_new, length=cache.length + 1)
+    return logits, next_tok, new_cache
+
+
+def prefill_step(params: dict, tokens: jnp.ndarray, cfg: LMConfig):
+    """Full-sequence forward for serving: final hidden + last-token logits.
+
+    (KV extraction for cache warmup shares lm_forward's compute; the cache
+    write-out is exercised by serve_step, so prefill lowers the dominant
+    cost — the O(S²) attention — which is what the dry-run must budget.)
+    """
+    hidden, _ = lm_forward(params, tokens, cfg)
+    last = hidden[:, -1]
+    logits = jnp.einsum(
+        "bd,dv->bv", last, params["out"], preferred_element_type=jnp.float32
+    )
+    return shard(logits, "batch", "model")

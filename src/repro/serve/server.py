@@ -1,0 +1,155 @@
+"""Batched ProHD set-distance service — the paper's vector-DB use case as a
+serving component.
+
+Requests are (A, B) cloud pairs; the batcher buckets them by padded shape
+so each bucket runs as ONE jitted vmapped ProHD call (compile-once per
+bucket).  Clouds are padded to the bucket size with a validity mask, which
+the selection/HD pipeline honours exactly (same mechanism the distributed
+path uses).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact
+from repro.core.bounds import additive_bound
+from repro.core.projected import projected_hd
+from repro.core.prohd import ProHDConfig
+from repro.core import projections, selection
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    alpha: float = 0.02
+    bucket_sizes: tuple[int, ...] = (1024, 4096, 16384, 65536)
+    max_batch: int = 8
+
+
+def _bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return int(2 ** math.ceil(math.log2(n)))
+
+
+def _masked_prohd(a, va, b, vb, *, alpha: float, m: int):
+    """ProHD on padded clouds with validity masks (single pair)."""
+    # masked centroids + masked gram directions
+    def centroid(p, v):
+        s = jnp.sum(p * v[:, None], axis=0)
+        return s / jnp.maximum(jnp.sum(v), 1.0)
+
+    va_f = va.astype(jnp.float32)
+    vb_f = vb.astype(jnp.float32)
+    ca, cb = centroid(a, va_f), centroid(b, vb_f)
+    u0 = cb - ca
+    norm = jnp.linalg.norm(u0)
+    e1 = jnp.zeros_like(u0).at[0].set(1.0)
+    u0 = jnp.where(norm < 1e-9, e1, u0 / jnp.maximum(norm, 1e-9))
+
+    z = jnp.concatenate([a, b])
+    vz = jnp.concatenate([va_f, vb_f])
+    mean = jnp.sum(z * vz[:, None], 0) / jnp.maximum(jnp.sum(vz), 1.0)
+    zc = (z - mean) * vz[:, None]
+    gram = zc.T @ zc
+    w, v = jnp.linalg.eigh(gram)
+    dirs = jnp.concatenate([u0[:, None], v[:, ::-1][:, :m]], axis=1)
+
+    pa = a @ dirs
+    pb = b @ dirs
+    # mask invalid rows out of the extremes
+    big = 1e30
+    n_a, n_b = a.shape[0], b.shape[0]
+    k_a = selection.alpha_count(n_a, alpha)
+    k_b = selection.alpha_count(n_b, alpha)
+    mask_a = jnp.zeros((n_a,), bool)
+    mask_b = jnp.zeros((n_b,), bool)
+    for col in range(dirs.shape[1]):
+        frac_k_a = k_a if col == 0 else max(1, k_a // max(m, 1))
+        frac_k_b = k_b if col == 0 else max(1, k_b // max(m, 1))
+        pa_c = jnp.where(va, pa[:, col], -big)
+        pb_c = jnp.where(vb, pb[:, col], -big)
+        mask_a |= selection.extreme_mask(pa_c, frac_k_a) & va
+        mask_b |= selection.extreme_mask(pb_c, frac_k_b) & vb
+        pa_c = jnp.where(va, pa[:, col], big)
+        pb_c = jnp.where(vb, pb[:, col], big)
+        mask_a |= selection.extreme_mask(-pa_c, frac_k_a) & va
+        mask_b |= selection.extreme_mask(-pb_c, frac_k_b) & vb
+
+    cap = selection.selection_capacity(n_a, m, alpha)
+    a_sel, va_sel = selection.take_selected(a, mask_a, cap)
+    b_sel, vb_sel = selection.take_selected(b, mask_b, min(n_b, cap))
+    va_sel &= jnp.any(mask_a)
+    vb_sel &= jnp.any(mask_b)
+
+    hd = jnp.maximum(
+        exact.directed_hd_tiled(a_sel, b, valid_a=va_sel, valid_b=vb),
+        exact.directed_hd_tiled(b_sel, a, valid_a=vb_sel, valid_b=va),
+    )
+    pa_m = jnp.where(va[:, None], pa, jnp.nan)
+    pb_m = jnp.where(vb[:, None], pb, jnp.nan)
+    lo = projected_hd(jnp.nan_to_num(pa_m, nan=0.0), jnp.nan_to_num(pb_m, nan=0.0))
+    bound = additive_bound(a * va_f[:, None], b * vb_f[:, None], pa * va_f[:, None], pb * vb_f[:, None])
+    return hd, lo, bound
+
+
+class ProHDService:
+    """Collects requests, flushes them in shape buckets."""
+
+    def __init__(self, cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self._pending: list[tuple[int, jnp.ndarray, jnp.ndarray]] = []
+        self._compiled: dict[tuple[int, int, int], any] = {}
+
+    def submit(self, a, b) -> int:
+        rid = len(self._pending)
+        self._pending.append((rid, jnp.asarray(a), jnp.asarray(b)))
+        return rid
+
+    def _fn(self, n: int, d: int, batch: int):
+        key = (n, d, batch)
+        if key not in self._compiled:
+            m = projections.default_num_directions(d)
+            f = jax.jit(
+                jax.vmap(
+                    lambda a, va, b, vb: _masked_prohd(a, va, b, vb, alpha=self.cfg.alpha, m=m)
+                )
+            )
+            self._compiled[key] = f
+        return self._compiled[key]
+
+    def flush(self) -> dict[int, dict]:
+        """Run all pending requests; returns {rid: {hd, lower, upper}}."""
+        out: dict[int, dict] = {}
+        by_bucket: dict[tuple[int, int], list] = {}
+        for rid, a, b in self._pending:
+            n = _bucket(max(a.shape[0], b.shape[0]), self.cfg.bucket_sizes)
+            by_bucket.setdefault((n, a.shape[1]), []).append((rid, a, b))
+        self._pending.clear()
+
+        for (n, d), reqs in by_bucket.items():
+            for i in range(0, len(reqs), self.cfg.max_batch):
+                chunk = reqs[i : i + self.cfg.max_batch]
+                batch = len(chunk)
+                pa = jnp.zeros((batch, n, d))
+                pb = jnp.zeros((batch, n, d))
+                va = jnp.zeros((batch, n), bool)
+                vb = jnp.zeros((batch, n), bool)
+                for j, (_, a, b) in enumerate(chunk):
+                    pa = pa.at[j, : a.shape[0]].set(a)
+                    va = va.at[j, : a.shape[0]].set(True)
+                    pb = pb.at[j, : b.shape[0]].set(b)
+                    vb = vb.at[j, : b.shape[0]].set(True)
+                hd, lo, bound = self._fn(n, d, batch)(pa, va, pb, vb)
+                for j, (rid, _, _) in enumerate(chunk):
+                    out[rid] = {
+                        "hd": float(hd[j]),
+                        "lower": float(lo[j]),
+                        "upper": float(lo[j]) + float(bound[j]),
+                    }
+        return out

@@ -1,0 +1,96 @@
+"""Logical-axis sharding rules, threaded through model code contextually.
+
+Model code annotates activations with *logical* axes ("batch", "seq",
+"model", "expert", ...); MeshRules maps them to physical mesh axes.  When no
+rules are active (single-device smoke tests), every annotation is a no-op —
+the same model code runs everywhere.
+
+Physical mesh (assignment): single-pod (16,16) ("data","model"), multi-pod
+(2,16,16) ("pod","data","model").  "pod" joins both the batch axes and the
+FSDP axes (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["MeshRules", "use_rules", "current_rules", "logical", "shard"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical → physical axis mapping."""
+
+    batch: tuple[str, ...] = ()        # e.g. ("pod", "data")
+    model: str | None = None           # tensor/expert axis
+    fsdp: tuple[str, ...] = ()         # param-storage sharding axes
+    mesh: jax.sharding.Mesh | None = dataclasses.field(default=None, compare=False)
+    # feature toggles resolved per-config at spec-build time:
+    shard_kv: bool = False             # kv-head dim divisible by |model|
+    shard_expert: bool = False         # expert count divisible by |model|
+
+    def resolve(self, name: str | None):
+        if name is None:
+            return None
+        if name == "batch":
+            return self.batch if self.batch else None
+        if name == "model":
+            return self.model
+        if name == "fsdp":
+            return self.fsdp if self.fsdp else None
+        if name == "kv_model":
+            return self.model if self.shard_kv else None
+        if name == "expert_model":
+            return self.model if self.shard_expert else None
+        if name == "ff_model":  # expert-TP: shard ff when experts are not
+            return None if self.shard_expert else self.model
+        raise KeyError(f"unknown logical axis {name!r}")
+
+    def spec(self, *names: str | None) -> P:
+        return P(*(self.resolve(n) for n in names))
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> MeshRules:
+    return getattr(_STATE, "rules", None) or MeshRules()
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical(*names: str | None) -> P:
+    """PartitionSpec for the current rules (P() when no rules active)."""
+    return current_rules().spec(*names)
+
+
+def shard(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint under the current rules; no-op without rules."""
+    rules = current_rules()
+    if not rules.batch and rules.model is None and not rules.fsdp:
+        return x
+    spec = rules.spec(*names)
+    if all(s is None for s in spec):
+        return x
+    if rules.mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(rules.mesh, spec)
+        )
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        # No mesh in scope (unit tests) — constraints are best-effort.
+        return x

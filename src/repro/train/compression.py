@@ -1,0 +1,178 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two compressors, both with error feedback (the residual of each step is
+added into the next step's gradient, so compression error doesn't bias the
+optimizer — Karimireddy et al. 2019):
+
+  * int8 stochastic-free linear quantization (8× fewer bytes than fp32 /
+    4× vs bf16 on the wire),
+  * PowerSGD rank-r (Vogels et al. 2019): G ≈ P Qᵀ with two skinny
+    all-reduces of (n·r + m·r) instead of n·m.
+
+``compressed_psum_*`` are the wire-level primitives for the explicit-DP
+training mode (shard_map over the batch axes with replicated params —
+repro.train.loop LoopMode "explicit_dp"); they all-reduce the *compressed*
+representation, which is where the bytes are actually saved.  In the
+GSPMD-auto mode the compressors still apply at the update level (error
+feedback keeps semantics), and the wire win is documented as requiring the
+explicit-DP path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 linear quantization + error feedback
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_tree(grads: Any, error: Any) -> tuple[Any, Any]:
+    """Error-feedback int8: returns (dequantized grads, new error)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err
+
+
+def init_error_tree(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_int8(local_grads: Any, error: Any, axes: Sequence[str]) -> tuple[Any, Any]:
+    """DP all-reduce in int8: quantize locally, psum int32 counts, dequant.
+
+    Each shard quantizes (g + e) with its own scale; scales are maxed across
+    shards so the sum is exact in the shared grid.  Wire bytes per leaf:
+    n·1 (int8, upcast to int32 for the psum accumulator) + 1 scale.
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        scale = jax.lax.pmax(scale, axes)          # shared grid
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq_local = q.astype(jnp.float32) * scale
+        new_e = g32 - deq_local
+        total = jax.lax.psum(q.astype(jnp.int32), axes).astype(jnp.float32) * scale
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+        return total / n, new_e
+
+    out = jax.tree.map(one, local_grads, error)
+    mean = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return mean, err
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD (rank-r) + error feedback
+# ---------------------------------------------------------------------------
+
+
+class PowerSGDState(NamedTuple):
+    q: Any        # per-leaf right factors (m, r), warm-started across steps
+    error: Any    # per-leaf fp32 error feedback
+
+
+def _orthonormalize(m: jnp.ndarray) -> jnp.ndarray:
+    q, _ = jnp.linalg.qr(m)
+    return q
+
+
+def _as_matrix(g: jnp.ndarray) -> jnp.ndarray:
+    if g.ndim <= 1:
+        return None  # small tensors ride uncompressed
+    return g.reshape(g.shape[0], -1) if g.ndim != 2 else g
+
+
+def init_powersgd(params: Any, rank: int, key: jax.Array) -> PowerSGDState:
+    def mk_q(path_key, p):
+        mat = _as_matrix(jnp.zeros(p.shape))
+        if mat is None:
+            return jnp.zeros((0,))
+        sub = jax.random.fold_in(key, hash(str(path_key)) % (2**31))
+        return jax.random.normal(sub, (mat.shape[1], rank), jnp.float32)
+
+    q_tree = jax.tree_util.tree_map_with_path(mk_q, params)
+    return PowerSGDState(q=q_tree, error=init_error_tree(params))
+
+
+def powersgd_round(
+    local_grads: Any,
+    state: PowerSGDState,
+    axes: Sequence[str] | None,
+) -> tuple[Any, PowerSGDState]:
+    """One PowerSGD round.  With ``axes``, the two skinny factors are psum'd
+    (the compressed all-reduce); without, it is a pure low-rank filter.
+
+    Returns (approximated mean gradient, new state).
+    """
+
+    def one(g, q, e):
+        g32 = g.astype(jnp.float32) + e
+        mat = _as_matrix(g32)
+        if mat is None:
+            if axes:
+                mean = jax.lax.pmean(g32, axes)
+            else:
+                mean = g32
+            return mean, q, g32 - mean if axes else jnp.zeros_like(g32)
+
+        p = mat @ q                                   # (n, r)
+        if axes:
+            p = jax.lax.psum(p, axes)
+        p = _orthonormalize(p)
+        new_q = mat.T @ p                             # (m, r)
+        if axes:
+            new_q = jax.lax.psum(new_q, axes)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+            new_q = new_q / n
+        approx = (p @ new_q.T).reshape(g.shape)
+        return approx, new_q, g32 - approx
+
+    leaves_g, treedef = jax.tree.flatten(local_grads)
+    leaves_q = treedef.flatten_up_to(state.q)
+    leaves_e = treedef.flatten_up_to(state.error)
+    out = [one(g, q, e) for g, q, e in zip(leaves_g, leaves_q, leaves_e)]
+    approx = treedef.unflatten([t[0] for t in out])
+    new_q = treedef.unflatten([t[1] for t in out])
+    new_e = treedef.unflatten([t[2] for t in out])
+    return approx, PowerSGDState(q=new_q, error=new_e)
+
+
+def compression_ratio(params: Any, rank: int) -> float:
+    """Wire bytes (PowerSGD) / wire bytes (dense fp32) — for logging."""
+    dense = 0
+    wire = 0
+    for p in jax.tree.leaves(params):
+        n = p.size
+        dense += n * 4
+        mat = _as_matrix(jnp.zeros(p.shape))
+        if mat is None:
+            wire += n * 4
+        else:
+            wire += (mat.shape[0] + mat.shape[1]) * rank * 4
+    return wire / max(dense, 1)

@@ -1,0 +1,225 @@
+"""Optimizers in pure JAX (no optax in this container): AdamW + Adafactor.
+
+Both follow a minimal optax-like interface and, crucially for the dry-run,
+expose ``state_specs(param_specs)`` so optimizer state shards exactly like
+its parameters (DESIGN.md §5).
+
+Mixed precision: ``with_master_fp32`` keeps a fp32 master copy in the
+optimizer state while the live (compute) params stay bf16 — the standard
+large-model recipe.  Adafactor (factored second moment, no momentum) is the
+default for grok-1-314b, where full Adam state would not fit the per-chip
+HBM budget (see DESIGN.md §5 memory math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params) → (new_params, new_state)
+    state_specs: Callable[[Any], Any]  # param_specs → state specs
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    master_fp32: bool = True,
+) -> Optimizer:
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "mu": jax.tree.map(zeros32, params),
+            "nu": jax.tree.map(zeros32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if master_fp32:
+            # copy=True: astype aliases when params are already fp32, and an
+            # aliased master would break donation (same buffer donated twice)
+            state["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+            )
+        return state
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, mu, nu, master):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            master = master - lr * (step + weight_decay * master)
+            return mu, nu, master
+
+        masters = state.get("master") or jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], masters)
+        mu = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_params = jax.tree.map(_cast_like, master, params)
+        new_state = {"mu": mu, "nu": nu, "count": count}
+        if master_fp32:
+            new_state["master"] = master
+        return new_params, new_state
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        specs = {
+            "mu": param_specs,
+            "nu": param_specs,
+            "count": P(),
+        }
+        if master_fp32:
+            specs["master"] = param_specs
+        return specs
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moment, no momentum
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    master_fp32: bool = True,
+) -> Optimizer:
+    def init(params):
+        def mk(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        state = {
+            "v": jax.tree.map(mk, params, is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if master_fp32:
+            # copy=True: astype aliases when params are already fp32, and an
+            # aliased master would break donation (same buffer donated twice)
+            state["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+            )
+        return state
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(g, v, master):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps
+                    )
+                )
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                nv = beta * v["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(nv)
+                new_v = {"v": nv}
+            step = g / jnp.maximum(denom, eps)
+            # RMS update clipping
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            master = master - lr * (step + weight_decay * master)
+            return new_v, master
+
+        masters = state.get("master") or jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        # v-state has {"vr","vc"}/{"v"} dicts at grads' leaf positions —
+        # flatten_up_to keeps those dicts as leaves.
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_v = treedef.flatten_up_to(state["v"])
+        leaves_m = treedef.flatten_up_to(masters)
+        out = [upd(g, v, m) for g, v, m in zip(leaves_g, leaves_v, leaves_m)]
+        new_v = treedef.unflatten([t[0] for t in out])
+        master = treedef.unflatten([t[1] for t in out])
+        new_params = jax.tree.map(_cast_like, master, params)
+        new_state = {"v": new_v, "count": count}
+        if master_fp32:
+            new_state["master"] = master
+        return new_params, new_state
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def mk(spec):
+            # vr drops the last dim's entry, vc the second-to-last's.
+            parts = tuple(spec) if spec is not None else ()
+            if len(parts) >= 2:
+                return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts) if parts else P()}
+
+        specs = {
+            "v": jax.tree.map(mk, param_specs),
+            "count": P(),
+        }
+        if master_fp32:
+            specs["master"] = param_specs
+        return specs
+
+    return Optimizer(init, update, state_specs)
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.0) -> Optimizer:
+    """Plain SGD — used by smoke tests and the GNN examples."""
+
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+        return {}
+
+    def update(grads, state, params):
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+            )
+            new_params = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu)
+            return new_params, {"mu": mu}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new_params, state
+
+    def state_specs(param_specs):
+        return {"mu": param_specs} if momentum else {}
+
+    return Optimizer(init, update, state_specs)

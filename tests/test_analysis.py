@@ -1,0 +1,88 @@
+"""Roofline machinery unit tests: HLO collective parser + terms."""
+import jax.numpy as jnp
+
+from repro.analysis import roofline
+from repro.analysis.bytes_model import lm_bytes, lm_peak_memory
+from repro.configs.base import load_arch
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%add
+  %ag = bf16[8,512,256]{2,1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={1}
+  %rs = bf16[8,32]{1,0} reduce-scatter(%z), replica_groups=[1,16]<=[16], to_apply=%add
+  %cp = f32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = f32[4,16]{1,0} all-to-all(%v), replica_groups={{0,1}}
+  %ags = (bf16[64]{0}, bf16[256]{0}) all-gather-start(%q), replica_groups={{0,1,2,3}}
+  %agd = bf16[256]{0} all-gather-done(%ags)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_ops_and_factors(self):
+        stats = roofline.parse_collectives(HLO)
+        by = stats.by_op
+        # all-reduce: 16·1024·4 bytes × factor 2
+        assert by["all-reduce"]["bytes"] == 16 * 1024 * 4 * 2
+        # all-gather: result bytes × 1
+        assert by["all-gather"]["bytes"] == 8 * 512 * 256 * 2 + (64 + 256) * 2 // 2
+        # reduce-scatter: result × group size (16)
+        assert by["reduce-scatter"]["bytes"] == 8 * 32 * 2 * 16
+        assert by["collective-permute"]["bytes"] == 128 * 4
+        assert by["all-to-all"]["bytes"] == 4 * 16 * 4
+
+    def test_async_done_not_double_counted(self):
+        stats = roofline.parse_collectives(HLO)
+        # -start counted once (halved tuple), -done skipped
+        assert stats.by_op["all-gather"]["count"] == 2
+
+    def test_roofline_terms(self):
+        rf = roofline.Roofline(
+            flops_per_device=197e12,   # exactly 1 second of compute
+            bytes_per_device=819e9,    # exactly 1 second of HBM
+            wire_bytes_per_device=25e9,  # 0.5 s of ICI
+            collectives_by_op={},
+            model_flops=197e12 * 256 * 0.5,
+            n_devices=256,
+        )
+        assert abs(rf.t_compute - 1.0) < 1e-9
+        assert abs(rf.t_memory - 1.0) < 1e-9
+        assert abs(rf.t_collective - 0.5) < 1e-9
+        assert rf.bottleneck in ("compute", "memory")
+        assert abs(rf.useful_flops_fraction - 0.5) < 1e-9
+        assert abs(rf.mfu_bound - 0.5) < 1e-9
+
+
+class TestBytesModel:
+    def test_decode_is_weight_dominated_for_small_models(self):
+        spec = load_arch("tinyllama-1.1b")
+        cell = [c for c in spec.shapes if c.name == "decode_32k"][0]
+        total = lm_bytes(spec.config, cell, ms=16, bs=16)
+        # weights bf16 / model shards = the floor
+        w = 2 * spec.config.params_billions() * 1e9 / 16
+        assert total >= w
+        assert total <= 6 * w  # cache + logits shouldn't explode it
+
+    def test_peak_memory_decreases_with_microbatches(self):
+        spec = load_arch("grok-1-314b")
+        cell = spec.shapes[0]
+        p1 = lm_peak_memory(spec.config, cell, ms=16, bs=16, microbatches=1)
+        p2 = lm_peak_memory(spec.config, cell, ms=16, bs=16, microbatches=2)
+        assert p2 < p1
+
+    def test_all_lm_cells_fit_16gb_with_chosen_microbatches(self):
+        GB = 1 << 30
+        for aid in ("stablelm-3b", "deepseek-67b", "tinyllama-1.1b",
+                    "grok-1-314b", "olmoe-1b-7b"):
+            spec = load_arch(aid)
+            for cell in spec.shapes:
+                if cell.skip_reason:
+                    continue
+                for bs in (16, 32):
+                    mb = 1
+                    while mb < 16 and lm_peak_memory(
+                        spec.config, cell, ms=16, bs=bs, microbatches=mb
+                    ) > 15.5 * GB:
+                        mb *= 2
+                    peak = lm_peak_memory(spec.config, cell, ms=16, bs=bs, microbatches=mb)
+                    assert peak <= 15.5 * GB, (aid, cell.name, bs, mb, peak / GB)

@@ -1,0 +1,88 @@
+"""Data pipeline tests: neighbour sampler invariants, synthetic batches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import load_arch
+from repro.data import synth
+from repro.data.graphs import CSRGraph, minibatch_iterator, sample_subgraph
+from repro.models import gnn as gnn_mod
+
+
+def _graph(n=500, deg=8, f=16, c=5, seed=0):
+    return CSRGraph.random(np.random.default_rng(seed), n, deg, f, c)
+
+
+class TestNeighborSampler:
+    def test_shapes_are_static(self):
+        g = _graph()
+        rng = np.random.default_rng(1)
+        b, f0, f1 = 32, 5, 3
+        s1 = sample_subgraph(g, np.arange(b), (f0, f1), rng)
+        s2 = sample_subgraph(g, np.arange(b, 2 * b), (f0, f1), rng)
+        n_expected = b * (1 + f0 + f0 * f1)
+        for s in (s1, s2):
+            assert s["feats"].shape == (n_expected, 16)
+            assert s["edge_src"].shape == s["edge_dst"].shape == s["edge_mask"].shape
+        assert s1["edge_src"].shape == s2["edge_src"].shape
+
+    def test_edges_point_child_to_parent(self):
+        g = _graph()
+        rng = np.random.default_rng(2)
+        b, f0 = 8, 4
+        s = sample_subgraph(g, np.arange(b), (f0,), rng)
+        real = s["edge_mask"] > 0
+        n_loops = len(s["feats"])
+        # non-loop real edges: dst must be a seed position (< b)
+        non_loop = real.copy()
+        non_loop[-n_loops:] = False
+        assert np.all(s["edge_dst"][non_loop] < b)
+
+    def test_sampled_features_match_source_nodes(self):
+        g = _graph()
+        rng = np.random.default_rng(3)
+        s = sample_subgraph(g, np.array([7, 13]), (3,), rng)
+        np.testing.assert_array_equal(s["feats"][0], g.feats[7])
+        np.testing.assert_array_equal(s["feats"][1], g.feats[13])
+
+    def test_masked_edges_have_no_effect_on_gat(self):
+        g = _graph()
+        rng = np.random.default_rng(4)
+        s = sample_subgraph(g, np.arange(16), (4, 2), rng)
+        cfg = load_arch("gat-cora").config
+        params = gnn_mod.init_gat_params(jax.random.PRNGKey(0), cfg, 16, 5)
+        batch = {k: jnp.asarray(v) for k, v in s.items()}
+        out1 = gnn_mod.gat_forward(params, batch, cfg)
+        # corrupt the masked edges' endpoints: output must not change
+        corrupt = dict(batch)
+        m = batch["edge_mask"] == 0
+        corrupt["edge_src"] = jnp.where(m, 0, batch["edge_src"])
+        out2 = gnn_mod.gat_forward(params, corrupt, cfg)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+    def test_iterator_trains(self):
+        g = _graph(n=300, deg=6)
+        it = minibatch_iterator(g, batch_size=32, fanouts=(4, 2), seed=0)
+        cfg = load_arch("gat-cora").config
+        params = gnn_mod.init_gat_params(jax.random.PRNGKey(0), cfg, 16, 5)
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        loss, _ = gnn_mod.gat_node_loss(params, batch, cfg)
+        assert jnp.isfinite(loss)
+
+
+class TestSynthBatches:
+    def test_lm_batch_in_vocab(self):
+        cfg = load_arch("tinyllama-1.1b").config
+        b = synth.lm_batch(jax.random.PRNGKey(0), cfg, 4, 16)
+        assert b["tokens"].shape == (4, 17)
+        assert int(b["tokens"].max()) < cfg.vocab
+
+    def test_recsys_batches_in_vocab(self):
+        for arch in ("dien", "bert4rec", "bst", "fm"):
+            cfg = load_arch(arch).config
+            b = synth.recsys_batch(jax.random.PRNGKey(0), cfg, 8, train=True)
+            if arch == "fm":
+                sizes = np.asarray(cfg.vocab_sizes)
+                assert np.all(np.asarray(b["ids"]) < sizes[None, :])
+            if arch == "dien":
+                assert int(b["seq_items"].max()) < cfg.vocab_sizes[0]

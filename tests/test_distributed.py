@@ -1,0 +1,78 @@
+"""Distributed ProHD correctness on a multi-device host mesh.
+
+Runs in a subprocess so the 8-device XLA host-platform flag never leaks into
+the main test session (smoke tests must see 1 device).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+CHECK = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import distributed_prohd, distributed_exact_hd, ShardedCloud
+from repro.core import prohd, ProHDConfig, hausdorff_dense
+from repro.data.pointclouds import higgs_like, random_clouds
+
+assert jax.device_count() == 8, jax.device_count()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+key = jax.random.PRNGKey(0)
+
+for gen, n, d in [(higgs_like, 4096, 28), (random_clouds, 2048, 8)]:
+    a, b = (gen(key, n, n) if gen is higgs_like else gen(key, n, n, d))
+    H = float(hausdorff_dense(a, b))
+    cfg = ProHDConfig(alpha=0.02)
+    est = prohd(a, b, cfg)
+    va = jnp.ones((n,), jnp.bool_)
+    sa = jax.device_put(a, NamedSharding(mesh, P("data", None)))
+    sb = jax.device_put(b, NamedSharding(mesh, P("data", None)))
+    sv = jax.device_put(va, NamedSharding(mesh, P("data")))
+    hd_d, nsa, nsb = distributed_prohd(mesh, ShardedCloud(sa, sv), ShardedCloud(sb, sv), cfg)
+    He = distributed_exact_hd(mesh, ShardedCloud(sa, sv), ShardedCloud(sb, sv))
+    np.testing.assert_allclose(float(He), H, rtol=1e-5)
+    np.testing.assert_allclose(float(hd_d), float(est.hd), rtol=1e-4)
+    assert int(nsa) == int(est.n_sel_a), (int(nsa), int(est.n_sel_a))
+
+    # multi-axis batch: ("data","model") flattened ring
+    sa2 = jax.device_put(a, NamedSharding(mesh, P(("data", "model"), None)))
+    sb2 = jax.device_put(b, NamedSharding(mesh, P(("data", "model"), None)))
+    sv2 = jax.device_put(va, NamedSharding(mesh, P(("data", "model"))))
+    hd2, _, _ = distributed_prohd(mesh, ShardedCloud(sa2, sv2), ShardedCloud(sb2, sv2), cfg,
+                                  batch_axes=("data", "model"))
+    He2 = distributed_exact_hd(mesh, ShardedCloud(sa2, sv2), ShardedCloud(sb2, sv2),
+                               batch_axes=("data", "model"))
+    np.testing.assert_allclose(float(He2), H, rtol=1e-5)
+    np.testing.assert_allclose(float(hd2), float(est.hd), rtol=1e-4)
+
+# ragged: n not divisible by shards → caller pads, valid mask excludes padding
+n = 4000  # 4000 / 4 shards = 1000, but pad to 4096 over 8-way data*model
+a, b = random_clouds(key, n, n, 8)
+H = float(hausdorff_dense(a, b))
+pad = 4096 - n
+ap = jnp.pad(a, ((0, pad), (0, 0)))
+bp = jnp.pad(b, ((0, pad), (0, 0)))
+vp = jnp.arange(4096) < n
+sa = jax.device_put(ap, NamedSharding(mesh, P("data", None)))
+sb = jax.device_put(bp, NamedSharding(mesh, P("data", None)))
+sv = jax.device_put(vp, NamedSharding(mesh, P("data")))
+He = distributed_exact_hd(mesh, ShardedCloud(sa, sv), ShardedCloud(sb, sv))
+np.testing.assert_allclose(float(He), H, rtol=1e-5)
+print("DISTRIBUTED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_prohd_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", CHECK], env=env, capture_output=True, text=True, timeout=600
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "DISTRIBUTED-OK" in out.stdout

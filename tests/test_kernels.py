@@ -1,0 +1,134 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+swept over shapes and dtypes per the deliverable spec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.hausdorff import ops as hd_ops
+from repro.kernels.hausdorff import ref as hd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [
+    (8, 8, 2),
+    (100, 130, 7),
+    (128, 128, 128),
+    (512, 512, 64),
+    (1000, 333, 28),
+    (64, 2000, 256),
+    (513, 129, 100),   # deliberately non-multiples of every block size
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _clouds(na, nb, d, dtype):
+    ka, kb = jax.random.split(jax.random.fold_in(KEY, na * 7 + nb * 3 + d))
+    a = jax.random.normal(ka, (na, d), dtype=jnp.float32) * 1.5
+    b = jax.random.normal(kb, (nb, d), dtype=jnp.float32) + 0.3
+    return a.astype(dtype), b.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+def test_hausdorff_kernel_matches_ref(shape, dtype):
+    na, nb, d = shape
+    a, b = _clouds(na, nb, d, dtype)
+    got = hd_ops.hausdorff(a, b)
+    want = hd_ref.hausdorff_ref(a, b)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:5], ids=str)
+def test_directed_kernel_with_masks(shape):
+    na, nb, d = shape
+    a, b = _clouds(na, nb, d, jnp.float32)
+    ka, kb = jax.random.split(KEY)
+    va = jax.random.bernoulli(ka, 0.6, (na,))
+    vb = jax.random.bernoulli(kb, 0.6, (nb,))
+    # guarantee at least one valid row each side
+    va = va.at[0].set(True)
+    vb = vb.at[0].set(True)
+    got = hd_ops.directed_hausdorff(a, b, valid_a=va, valid_b=vb)
+    want = hd_ref.directed_hausdorff_ref(a, b, valid_a=va, valid_b=vb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_a,block_b", [(128, 128), (256, 512), (512, 256)])
+def test_kernel_block_shape_independence(block_a, block_b):
+    a, b = _clouds(700, 900, 32, jnp.float32)
+    want = hd_ref.hausdorff_ref(a, b)
+    got = hd_ops.hausdorff(a, b, block_a=block_a, block_b=block_b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_min_sqdists_values(self=None):
+    a, b = _clouds(300, 400, 16, jnp.float32)
+    got = hd_ops.min_sqdists(a, b)
+    want = hd_ref.min_dists_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_identical_sets_near_zero():
+    # GEMM-form distance: fp cancellation noise at a == b is O(sqrt(eps)·‖a‖),
+    # not exact zero (Faiss FlatL2 has the same property).
+    a, _ = _clouds(256, 256, 64, jnp.float32)
+    scale = float(jnp.linalg.norm(a, axis=1).max())
+    assert float(hd_ops.hausdorff(a, a)) < 5e-3 * scale
+
+
+def test_kernel_single_far_outlier():
+    a, b = _clouds(256, 256, 8, jnp.float32)
+    a = a.at[17].set(100.0)
+    got = hd_ops.hausdorff(a, b)
+    want = hd_ref.hausdorff_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash-attention kernel (kernels/flash_attention) vs naive ref
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention.flash import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+FLASH_SHAPES = [
+    # (b, sq, sk, h, hd, block_q, block_k)
+    (2, 128, 128, 4, 64, 64, 64),
+    (1, 256, 256, 2, 128, 128, 64),
+    (2, 64, 64, 1, 32, 32, 32),
+    (1, 512, 512, 2, 64, 128, 128),
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES, ids=str)
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+def test_flash_attention_matches_ref(shape, causal):
+    b, sq, sk, h, hd, bq, bk = shape
+    kq, kk, kv = jax.random.split(jax.random.fold_in(KEY, sq + h), 3)
+    q = jax.random.normal(kq, (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, sk, h, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, sk, h, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(KEY, (2, 128, 2, 64), jnp.bfloat16)
+    got = flash_attention(q, q, q, block_q=64, block_k=64)
+    want = attention_ref(q, q, q)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+    )
+
+
+def test_flash_attention_block_shape_independence():
+    q = jax.random.normal(KEY, (1, 256, 2, 64), jnp.float32)
+    outs = [
+        flash_attention(q, q, q, block_q=bq, block_k=bk)
+        for bq, bk in [(256, 256), (128, 64), (64, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=2e-5, rtol=1e-5)

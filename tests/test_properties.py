@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the paper's §II-E invariants.
+
+These are the system's *theorems*; they must hold for every input, so we
+let hypothesis hunt for counterexamples:
+
+  P1  lower bound:       max_u H_u(A,B) ≤ H(A,B)                  (§II-E.1/2)
+  P2  additive bound:    H(A,B) ≤ max_u H_u + 2·min_u δ(u)        (Eq. 5)
+  P3  monotonicity:      U1 ⊆ U2 ⇒ H_{U1} ≤ H_{U2}                (§II-E.3)
+  P4  full-inner ProHD never overestimates                        (§II-E.5)
+  P5  projection metric: |π_u(a)-π_u(b)| ≤ ||a-b|| for unit u
+  P6  rigid-motion invariance of H itself
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ProHDConfig, hausdorff_dense, prohd
+from repro.core.bounds import additive_bound, delta_per_direction
+from repro.core.projected import hd_1d, projected_hd
+from repro.core.projections import direction_set, project
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _clouds(seed, n_a, n_b, d, scale):
+    rng = np.random.RandomState(seed)
+    # Anisotropic + shifted so spectra are well separated (avoids eigh-tie
+    # nondeterminism that is irrelevant to the properties under test).
+    scales = np.linspace(1.0, 0.1, d) * scale
+    a = rng.randn(n_a, d) * scales
+    b = rng.randn(n_b, d) * scales + rng.randn(d) * 0.5 * scale
+    return jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+
+
+cloud_params = st.tuples(
+    st.integers(0, 10_000),          # seed
+    st.integers(5, 120),             # n_a
+    st.integers(5, 120),             # n_b
+    st.integers(2, 24),              # d
+    st.sampled_from([0.1, 1.0, 10.0]),  # scale
+)
+
+
+@given(cloud_params)
+@settings(**SETTINGS)
+def test_p1_projected_lower_bounds_true_hd(params):
+    a, b = _clouds(*params)
+    dirs = direction_set(a, b, min(4, a.shape[1]))
+    hproj = projected_hd(project(a, dirs), project(b, dirs))
+    H = hausdorff_dense(a, b)
+    assert float(hproj) <= float(H) * (1 + 1e-5) + 1e-6
+
+
+@given(cloud_params)
+@settings(**SETTINGS)
+def test_p2_additive_bound_holds(params):
+    a, b = _clouds(*params)
+    dirs = direction_set(a, b, min(4, a.shape[1]))
+    pa, pb = project(a, dirs), project(b, dirs)
+    hproj = projected_hd(pa, pb)
+    bound = additive_bound(a, b, pa, pb)
+    H = hausdorff_dense(a, b)
+    assert float(H) <= float(hproj) + float(bound) + 1e-4 * (1 + float(H))
+
+
+@given(cloud_params, st.integers(1, 3))
+@settings(**SETTINGS)
+def test_p3_monotone_in_directions(params, m_small):
+    a, b = _clouds(*params)
+    d = a.shape[1]
+    m_large = min(6, d)
+    m_small = min(m_small, m_large)
+    dirs = direction_set(a, b, m_large)
+    pa, pb = project(a, dirs), project(b, dirs)
+    h_small = projected_hd(pa[:, : m_small + 1], pb[:, : m_small + 1])
+    h_large = projected_hd(pa, pb)
+    assert float(h_small) <= float(h_large) * (1 + 1e-6) + 1e-7
+
+
+@given(cloud_params, st.sampled_from([0.02, 0.05, 0.2]))
+@settings(**SETTINGS)
+def test_p4_full_inner_never_overestimates(params, alpha):
+    a, b = _clouds(*params)
+    est = prohd(a, b, ProHDConfig(alpha=alpha))
+    H = hausdorff_dense(a, b)
+    assert float(est.hd) <= float(H) * (1 + 1e-5) + 1e-6
+
+
+@given(cloud_params)
+@settings(**SETTINGS)
+def test_p5_projection_is_contraction(params):
+    a, b = _clouds(*params)
+    dirs = direction_set(a, b, min(3, a.shape[1]))
+    pa, pb = project(a, dirs), project(b, dirs)
+    # for every direction, 1D HD <= full HD (implied by P1 but checked
+    # per-direction here)
+    H = float(hausdorff_dense(a, b))
+    for c in range(pa.shape[1]):
+        assert float(hd_1d(pa[:, c], pb[:, c])) <= H * (1 + 1e-5) + 1e-6
+
+
+@given(cloud_params, st.integers(0, 100))
+@settings(**SETTINGS)
+def test_p6_rigid_motion_invariance(params, rot_seed):
+    a, b = _clouds(*params)
+    d = a.shape[1]
+    rng = np.random.RandomState(rot_seed)
+    q, _ = np.linalg.qr(rng.randn(d, d))
+    q = jnp.asarray(q, jnp.float32)
+    t = jnp.asarray(rng.randn(d), jnp.float32)
+    H1 = hausdorff_dense(a, b)
+    H2 = hausdorff_dense(a @ q + t, b @ q + t)
+    np.testing.assert_allclose(float(H1), float(H2), rtol=1e-3, atol=1e-5)
+
+
+@given(cloud_params)
+@settings(**SETTINGS)
+def test_delta_nonnegative_and_bounded_by_radius(params):
+    a, b = _clouds(*params)
+    dirs = direction_set(a, b, min(3, a.shape[1]))
+    z = jnp.concatenate([a, b])
+    deltas = delta_per_direction(z, project(z, dirs))
+    radius = jnp.max(jnp.linalg.norm(z, axis=1))
+    assert bool(jnp.all(deltas >= -1e-6))
+    assert bool(jnp.all(deltas <= radius * (1 + 1e-5) + 1e-6))

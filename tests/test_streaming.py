@@ -1,0 +1,68 @@
+"""Drift-monitor behaviour: reservoir statistics + drift detection."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.prohd import ProHDConfig
+from repro.core.streaming import (
+    DriftMonitorConfig,
+    check_drift,
+    init_drift_monitor,
+    observe,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _ref_and_stream(dim=16, n_ref=512):
+    kr, ks = jax.random.split(KEY)
+    ref = jax.random.normal(kr, (n_ref, dim))
+    return ref, ks
+
+
+def test_no_drift_when_same_distribution():
+    ref, ks = _ref_and_stream()
+    cfg = DriftMonitorConfig(window=256, dim=16, prohd=ProHDConfig(alpha=0.1), threshold=10.0)
+    state = init_drift_monitor(cfg, ref, ks)
+    for i in range(4):
+        batch = jax.random.normal(jax.random.fold_in(ks, i), (128, 16))
+        state = observe(state, batch)
+    rep = check_drift(state, cfg)
+    assert not bool(rep.alert)
+    assert float(rep.lower) <= float(rep.upper)
+
+
+def test_drift_detected_on_shift():
+    ref, ks = _ref_and_stream()
+    cfg = DriftMonitorConfig(window=256, dim=16, prohd=ProHDConfig(alpha=0.1), threshold=5.0)
+    state = init_drift_monitor(cfg, ref, ks)
+    for i in range(4):
+        batch = jax.random.normal(jax.random.fold_in(ks, i), (128, 16)) + 20.0
+        state = observe(state, batch)
+    rep = check_drift(state, cfg)
+    assert bool(rep.alert)
+    # certified: true H between ref and buffer is inside [lower, upper]
+    from repro.core import hausdorff_dense
+
+    H = float(hausdorff_dense(state.reference, state.buffer))
+    assert float(rep.lower) <= H + 1e-3
+    assert H <= float(rep.upper) + 1e-3
+
+
+def test_reservoir_warms_sequentially():
+    ref, ks = _ref_and_stream(dim=4)
+    cfg = DriftMonitorConfig(window=8, dim=4)
+    state = init_drift_monitor(cfg, ref, ks)
+    batch = jnp.arange(32.0).reshape(8, 4)
+    state = observe(state, batch)
+    assert int(state.count) == 8
+    # during warmup, buffer == batch exactly
+    assert jnp.allclose(state.buffer, batch)
+
+
+def test_observe_is_jittable():
+    ref, ks = _ref_and_stream(dim=8)
+    cfg = DriftMonitorConfig(window=16, dim=8)
+    state = init_drift_monitor(cfg, ref, ks)
+    jitted = jax.jit(observe)
+    state = jitted(state, jnp.ones((4, 8)))
+    assert int(state.count) == 4

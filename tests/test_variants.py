@@ -1,0 +1,82 @@
+"""Set-distance variants + adaptive-α error budgets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hausdorff_dense
+from repro.core.adaptive import prohd_with_budget
+from repro.core.variants import chamfer, partial_hausdorff
+from repro.data.pointclouds import higgs_like, random_clouds
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestPartialHausdorff:
+    def test_quantile_one_is_hausdorff(self):
+        a, b = random_clouds(KEY, 300, 250, 8)
+        ph = partial_hausdorff(a, b, quantile=1.0)
+        h = hausdorff_dense(a, b)
+        np.testing.assert_allclose(float(ph), float(h), rtol=1e-5)
+
+    def test_robust_to_outliers(self):
+        a, b = random_clouds(KEY, 500, 500, 4)
+        h_clean = float(hausdorff_dense(a, b))
+        a_dirty = a.at[7].set(1000.0)  # single far outlier
+        h_dirty = float(hausdorff_dense(a_dirty, b))
+        ph_dirty = float(partial_hausdorff(a_dirty, b, quantile=0.95))
+        assert h_dirty > 100  # the outlier dominates plain HD
+        assert ph_dirty < 2 * h_clean  # partial HD shrugs it off
+
+    def test_monotone_in_quantile(self):
+        a, b = higgs_like(KEY, 400, 400)
+        vals = [float(partial_hausdorff(a, b, quantile=q)) for q in (0.5, 0.8, 0.95, 1.0)]
+        assert vals == sorted(vals)
+
+
+class TestChamfer:
+    def test_zero_for_identical(self):
+        a, _ = random_clouds(KEY, 256, 256, 8)
+        assert float(chamfer(a, a)) < 1e-2
+
+    def test_symmetric(self):
+        a, b = random_clouds(KEY, 200, 300, 6)
+        np.testing.assert_allclose(float(chamfer(a, b)), float(chamfer(b, a)), rtol=1e-6)
+
+    def test_bounded_by_hausdorff(self):
+        a, b = higgs_like(KEY, 400, 400)
+        # chamfer sums two directed means, HD is the max of two directed
+        # maxes → chamfer ≤ 2·HD always
+        assert float(chamfer(a, b)) <= 2 * float(hausdorff_dense(a, b)) + 1e-5
+
+
+class TestAdaptiveAlpha:
+    def test_meets_loose_budget(self):
+        # strongly anisotropic data → the certificate can get tight
+        k1, k2 = jax.random.split(KEY)
+        scales = jnp.array([10.0, 0.1, 0.1, 0.05])
+        a = jax.random.normal(k1, (2000, 4)) * scales
+        b = jax.random.normal(k2, (2000, 4)) * scales + jnp.array([5.0, 0, 0, 0])
+        res = prohd_with_budget(a, b, budget=1.0, relative=True)
+        assert res.met_budget
+        H = float(hausdorff_dense(a, b))
+        lower = float(res.estimate.hd_proj)
+        upper = lower + float(res.estimate.bound)
+        assert lower <= H * 1.0001
+        assert H <= upper * 1.0001
+
+    def test_reports_failure_honestly_on_isotropic_data(self):
+        # isotropic ball: min_u delta(u) ≈ radius — no direction set can
+        # certify a tight interval; the controller must say so
+        a, b = random_clouds(KEY, 1000, 1000, 16)
+        res = prohd_with_budget(a, b, budget=0.01, relative=True, max_steps=4)
+        assert not res.met_budget
+        assert res.steps == 4
+
+    def test_growing_m_tightens_certificate(self):
+        k1, k2 = jax.random.split(KEY)
+        scales = jnp.linspace(5.0, 0.1, 16)
+        a = jax.random.normal(k1, (1500, 16)) * scales
+        b = jax.random.normal(k2, (1500, 16)) * scales + 1.0
+        loose = prohd_with_budget(a, b, budget=100.0, relative=False, max_steps=1)
+        tight = prohd_with_budget(a, b, budget=0.5, relative=False, max_steps=8)
+        assert tight.certified_gap <= loose.certified_gap + 1e-6
