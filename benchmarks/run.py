@@ -3,19 +3,49 @@
 Prints ``name,us_per_call,derived`` CSV rows, then a findings summary.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+                                            [--json [PATH]]
+
+``--json`` additionally persists every row (plus environment metadata) to a
+machine-readable JSON file — ``BENCH_PR1.json`` by default — so the perf
+trajectory of the repo is diffable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+DEFAULT_JSON = "BENCH_PR1.json"
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases")
-    ap.add_argument("--quick", action="store_true", help="fig1 + phases only")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused",
+    )
+    ap.add_argument(
+        "--quick", action="store_true", help="fig1 + phases + fused only"
+    )
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const=DEFAULT_JSON,
+        default=None,
+        metavar="PATH",
+        help=f"also write rows as JSON (default path: {DEFAULT_JSON})",
+    )
     args = ap.parse_args()
+
+    import jax
 
     from benchmarks import tables
 
@@ -28,20 +58,25 @@ def main() -> None:
         "fig5": tables.fig5_size_scalability,
         "phases": tables.bench_prohd_phases,
         "backends": tables.bench_backends,
+        "fused": tables.bench_fused_vs_twosweep,
     }
     if args.quick:
-        selected = ["fig1", "phases"]
+        selected = ["fig1", "phases", "fused"]
     elif args.only:
         selected = [s.strip() for s in args.only.split(",")]
     else:
-        selected = list(benches)
+        # "backends" already embeds the fused comparison; skip the
+        # standalone entry so a full run doesn't execute it twice.
+        selected = [n for n in benches if n != "fused"]
 
+    all_rows: list[str] = []
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.time()
         try:
             for row in benches[name]():
                 print(row, flush=True)
+                all_rows.append(row)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             raise
@@ -51,6 +86,24 @@ def main() -> None:
         print("\n# ==== findings ====")
         for line in tables.REPORT:
             print(f"# {line}")
+
+    if args.json:
+        payload = {
+            "meta": {
+                "benches": selected,
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+                "unix_time": int(time.time()),
+            },
+            "rows": [_parse_row(r) for r in all_rows],
+            "findings": list(tables.REPORT),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(payload['rows'])} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

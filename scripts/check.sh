@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Standard builder loop: tier-1 tests + quick benchmark with machine-readable
+# output.  Run from the repo root:
+#
+#   ./scripts/check.sh            # tests + quick bench -> BENCH_PR1.json
+#   SKIP_BENCH=1 ./scripts/check.sh   # tests only
+#
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  # Separate path: BENCH_PR1.json is the committed cross-PR trajectory
+  # (written by `--only backends --json`); the quick loop must not clobber
+  # it with an incomparable row set.
+  echo "== quick benchmark (JSON -> BENCH_QUICK.json) =="
+  python -m benchmarks.run --quick --json BENCH_QUICK.json
+fi

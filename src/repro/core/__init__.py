@@ -4,10 +4,14 @@ from repro.core.exact import (
     directed_hd_dense,
     directed_hd_earlybreak,
     directed_hd_tiled,
+    fused_min_sqdists_tiled,
     hausdorff_dense,
     hausdorff_earlybreak,
+    hausdorff_fused_tiled,
     hausdorff_tiled,
+    hausdorff_twosweep_tiled,
 )
+from repro.core.tile_bounds import PruneTables, order_by_projection, prune_tables
 from repro.core.sampling import random_sampling_hd, systematic_sampling_hd
 from repro.core.variants import chamfer, partial_hausdorff
 from repro.core.adaptive import AdaptiveResult, prohd_with_budget
@@ -20,9 +24,15 @@ __all__ = [
     "directed_hd_dense",
     "directed_hd_tiled",
     "directed_hd_earlybreak",
+    "fused_min_sqdists_tiled",
     "hausdorff_dense",
     "hausdorff_tiled",
+    "hausdorff_fused_tiled",
+    "hausdorff_twosweep_tiled",
     "hausdorff_earlybreak",
+    "PruneTables",
+    "order_by_projection",
+    "prune_tables",
     "random_sampling_hd",
     "systematic_sampling_hd",
     "chamfer",

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 from repro.core.prohd import ProHDConfig
 from repro.core import selection as sel_mod
 
@@ -181,7 +183,7 @@ def distributed_prohd(
 
     spec_pts = P(axes, None)
     spec_row = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(spec_pts, spec_row, spec_pts, spec_row),
@@ -242,7 +244,7 @@ def distributed_exact_hd(
 
     spec_pts = P(axes, None)
     spec_row = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(spec_pts, spec_row, spec_pts, spec_row),

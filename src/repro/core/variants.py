@@ -29,33 +29,43 @@ def partial_hausdorff(a, b, *, quantile: float = 0.95, valid_a=None, valid_b=Non
     practically preferred form for noisy scans.
     """
 
-    def directed(x, y, vx, vy):
-        mins = hd_ops.min_sqdists(x, y, valid_b=vy)
+    # One fused scan yields both directions' min vectors (same single-pass
+    # GEMM sharing as chamfer below).
+    min_a, min_b = hd_ops.fused_min_sqdists(a, b, valid_a=valid_a, valid_b=valid_b)
+
+    def quantile_reduce(mins, vx, n):
         if vx is not None:
             # invalid rows must not enter the quantile: give them -inf so
             # they sort to the bottom
             mins = jnp.where(vx, mins, -jnp.inf)
             n_valid = jnp.sum(vx)
         else:
-            n_valid = x.shape[0]
-        k = jnp.clip(jnp.ceil(quantile * n_valid).astype(jnp.int32), 1, x.shape[0])
+            n_valid = n
+        k = jnp.clip(jnp.ceil(quantile * n_valid).astype(jnp.int32), 1, n)
         sorted_mins = jnp.sort(mins)  # ascending; -inf (invalid) first
         # index of the k-th largest among the valid suffix
-        idx = x.shape[0] - (n_valid - k) - 1
+        idx = n - (n_valid - k) - 1
         return jnp.sqrt(jnp.maximum(sorted_mins[idx], 0.0))
 
     return jnp.maximum(
-        directed(a, b, valid_a, valid_b), directed(b, a, valid_b, valid_a)
+        quantile_reduce(min_a, valid_a, a.shape[0]),
+        quantile_reduce(min_b, valid_b, b.shape[0]),
     )
 
 
 def chamfer(a, b, *, valid_a=None, valid_b=None):
-    """Symmetric chamfer: mean_a min_b d(a,b) + mean_b min_a d(b,a)."""
+    """Symmetric chamfer: mean_a min_b d(a,b) + mean_b min_a d(b,a).
 
-    def directed(x, y, vx, vy):
-        mins = jnp.sqrt(jnp.maximum(hd_ops.min_sqdists(x, y, valid_b=vy), 0.0))
+    Both directions come out of ONE fused scan (the d² tiles are reduced
+    row-wise and col-wise in the same pass) — chamfer is exactly the
+    workload the fused kernel exists for.
+    """
+    min_a, min_b = hd_ops.fused_min_sqdists(a, b, valid_a=valid_a, valid_b=valid_b)
+
+    def mean_dist(mins, vx):
+        d = jnp.sqrt(jnp.maximum(mins, 0.0))
         if vx is not None:
-            return jnp.sum(jnp.where(vx, mins, 0.0)) / jnp.maximum(jnp.sum(vx), 1)
-        return jnp.mean(mins)
+            return jnp.sum(jnp.where(vx, d, 0.0)) / jnp.maximum(jnp.sum(vx), 1)
+        return jnp.mean(d)
 
-    return directed(a, b, valid_a, valid_b) + directed(b, a, valid_b, valid_a)
+    return mean_dist(min_a, valid_a) + mean_dist(min_b, valid_b)

@@ -1,14 +1,26 @@
-"""Jitted public wrappers around the Pallas directed-Hausdorff kernel.
+"""Jitted public wrappers around the fused bidirectional Hausdorff kernel.
 
 Handles everything the kernel requires to be true:
   - D zero-padded to a multiple of 128 (exact for L2 distances),
-  - n_a / n_b padded to block multiples (padded b-rows masked invalid; padded
-    a-rows dropped from the final max via the valid_a mask),
-  - validity masks carried as f32 {0,1},
-  - final max-reduce + sqrt outside the kernel.
+  - n_a / n_b padded to block multiples, with padded rows marked INVALID on
+    both sides (a padded zero-row must never win the col-min of the other
+    direction),
+  - squared norms hoisted out of the grid (computed once here, streamed in
+    as (n_a, 1) / (1, n_b) operands) with validity/padding folded in as
+    +inf entries — poisoned norms replace per-element mask selects,
+  - prune tables (projection interval gaps + witness cutoffs) assembled
+    from caller-supplied projections, or zeroed when pruning is off,
+  - final max-reduce + sqrt outside the kernel, clamped at 0 so an
+    all-invalid query side yields 0.0 (empty-set HD) instead of
+    sqrt(max(-inf)) = NaN.
 
 On non-TPU backends ``interpret=True`` executes the kernel body in Python —
 that is how CPU tests validate it against ref.py.
+
+Pruning callers should pre-sort each cloud along the primary projection
+(``repro.core.tile_bounds.order_by_projection``); the results are exact
+either way, sorting only determines how many tiles the bounds can prove
+skippable.
 """
 from __future__ import annotations
 
@@ -17,9 +29,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import tile_bounds
+from repro.core.exact import finalize_mins as _finalize
 from repro.kernels.hausdorff import hausdorff as K
 
-__all__ = ["min_sqdists", "directed_hausdorff", "hausdorff"]
+__all__ = [
+    "fused_min_sqdists",
+    "min_sqdists",
+    "directed_hausdorff",
+    "hausdorff",
+]
 
 
 def _pad_axis(x, mult, axis, value=0.0):
@@ -36,12 +55,125 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def _fit_block(block: int, n: int) -> int:
+    return min(block, max(128, 1 << (n - 1).bit_length()))
+
+
+# The kernel keeps a (1, n_b_chunk) fp32 col-min row fully VMEM-resident;
+# cap it (4 MiB at 2^20) so huge target clouds don't blow the ~16 MiB VMEM
+# budget — the wrapper scans b in column chunks instead.  Chunking is exact:
+# min_a folds elementwise across chunks, each min_b column is completed
+# within its own chunk (a is never chunked), and the prune tables are built
+# against the FULL sets, so every row's witness tile stays unpruned in the
+# chunk that contains it.
+MAX_RESIDENT_B = 1 << 20
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_a", "block_b", "interpret", "directed", "max_resident_b"),
+)
+def fused_min_sqdists(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    valid_a: jnp.ndarray | None = None,
+    valid_b: jnp.ndarray | None = None,
+    prune_projs: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    block_a: int = 512,
+    block_b: int = 512,
+    interpret: bool | None = None,
+    directed: bool = False,
+    max_resident_b: int = MAX_RESIDENT_B,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-launch bidirectional min scan: one d² tile pass, both directions.
+
+    Returns ``(min_a, min_b)`` fp32: per-row min d² from a to valid b rows
+    (n_a,), and per-col min d² from b to valid a rows (n_b,).  Entries for
+    rows that are themselves invalid are garbage (+inf) and must be masked
+    before reduction.
+
+    ``prune_projs = (proj_a, proj_b)`` — per-row projections (n, m) onto
+    shared unit directions (column 0 = primary) — enables projection
+    pruning: tiles whose certified distance lower bound exceeds known
+    row/col-min upper bounds never issue their GEMM.  Exactness is
+    unaffected.  ``directed=True`` relaxes the skip rule for callers that
+    ignore ``min_b`` (its values are then NOT exact).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n_a, _ = a.shape
+    n_b = b.shape[0]
+    block_a = _fit_block(block_a, n_a)
+    block_b = _fit_block(block_b, n_b)
+
+    va = valid_a if valid_a is not None else jnp.ones((n_a,), jnp.bool_)
+    vb = valid_b if valid_b is not None else jnp.ones((n_b,), jnp.bool_)
+
+    a_p = _pad_axis(_pad_axis(a, 128, 1), block_a, 0)
+    b_p = _pad_axis(_pad_axis(b, 128, 1), block_b, 0)
+    # Validity (user mask AND block padding) is folded into the hoisted
+    # norms: an invalid row's +inf norm poisons its whole d² row/col, so it
+    # can win neither direction's min — no mask operands inside the grid.
+    # The invalid rows' DATA is zeroed as well, so non-finite garbage in a
+    # masked-out row cannot leak NaN through the GEMM term (NaN + inf = NaN
+    # would otherwise poison every min it touches).
+    va_p = _pad_axis(va.astype(jnp.float32)[:, None], block_a, 0)
+    vb_p = _pad_axis(vb.astype(jnp.float32)[None, :], block_b, 1)
+
+    zero_a = jnp.zeros((), a_p.dtype)
+    zero_b = jnp.zeros((), b_p.dtype)
+    a_p = jnp.where(va_p > 0.0, a_p, zero_a)
+    b_p = jnp.where(vb_p.T > 0.0, b_p, zero_b)
+    a32 = a_p.astype(jnp.float32)
+    b32 = b_p.astype(jnp.float32)
+    a2 = jnp.sum(a32 * a32, axis=1, keepdims=True)       # (n_a_pad, 1)
+    b2 = jnp.sum(b32 * b32, axis=1, keepdims=True).T     # (1, n_b_pad)
+    a2 = jnp.where(va_p > 0.0, a2, jnp.inf)
+    b2 = jnp.where(vb_p > 0.0, b2, jnp.inf)
+
+    gi = a_p.shape[0] // block_a
+    gj = b_p.shape[0] // block_b
+    if prune_projs is not None:
+        proj_a, proj_b = prune_projs
+        tables = tile_bounds.prune_tables(
+            a, proj_a, va, b, proj_b, vb, block_a, block_b, directed=directed
+        )
+        lb, cut_a, cut_b = tables.lb, tables.cut_a, tables.cut_b
+    else:
+        lb = jnp.zeros((gi, gj), jnp.float32)
+        cut_a = jnp.full((gi,), jnp.inf, jnp.float32)
+        cut_b = jnp.full((gj,), jnp.inf, jnp.float32)
+
+    chunk_blocks = max(1, max_resident_b // block_b)
+    if gj <= chunk_blocks:
+        min_a, min_b = K.fused_min_sqdists_pallas(
+            a_p, b_p, a2, b2, lb, cut_a, cut_b,
+            block_a=block_a, block_b=block_b, interpret=interpret,
+        )
+        return min_a[:n_a], min_b[:n_b]
+
+    min_a = jnp.full((a_p.shape[0],), jnp.inf, jnp.float32)
+    min_b_parts = []
+    for j0 in range(0, gj, chunk_blocks):
+        j1 = min(j0 + chunk_blocks, gj)
+        c0, c1 = j0 * block_b, j1 * block_b
+        ma, mb = K.fused_min_sqdists_pallas(
+            a_p, b_p[c0:c1], a2, b2[:, c0:c1],
+            lb[:, j0:j1], cut_a, cut_b[j0:j1],
+            block_a=block_a, block_b=block_b, interpret=interpret,
+        )
+        min_a = jnp.minimum(min_a, ma)
+        min_b_parts.append(mb)
+    return min_a[:n_a], jnp.concatenate(min_b_parts)[:n_b]
+
+
 def min_sqdists(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
     valid_b: jnp.ndarray | None = None,
+    prune_projs: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     block_a: int = 512,
     block_b: int = 512,
     interpret: bool | None = None,
@@ -49,24 +181,15 @@ def min_sqdists(
     """Per-row min squared L2 distance from a (n_a, D) to valid rows of b.
 
     Returns (n_a,) fp32.  The workhorse for ProHD's ANN phase, retrieval
-    scoring, and chamfer-style metrics.
+    scoring, and chamfer-style metrics.  Directed view of the fused kernel
+    (the col-min accumulator is computed in-flight but dropped; the d² tile
+    and its GEMM are shared work either way).
     """
-    if interpret is None:
-        interpret = _default_interpret()
-    n_a, d = a.shape
-    n_b = b.shape[0]
-    block_a = min(block_a, max(128, 1 << (n_a - 1).bit_length()))
-    block_b = min(block_b, max(128, 1 << (n_b - 1).bit_length()))
-
-    vb = valid_b if valid_b is not None else jnp.ones((n_b,), jnp.bool_)
-    a_p = _pad_axis(_pad_axis(a, 128, 1), block_a, 0)
-    b_p = _pad_axis(_pad_axis(b, 128, 1), block_b, 0)
-    vb_p = _pad_axis(vb.astype(jnp.float32)[None, :], block_b, 1)
-
-    mins = K.min_sqdists_pallas(
-        a_p, b_p, vb_p, block_a=block_a, block_b=block_b, interpret=interpret
+    min_a, _ = fused_min_sqdists(
+        a, b, valid_b=valid_b, prune_projs=prune_projs,
+        block_a=block_a, block_b=block_b, interpret=interpret, directed=True,
     )
-    return mins[:n_a]
+    return min_a
 
 
 def directed_hausdorff(
@@ -75,17 +198,20 @@ def directed_hausdorff(
     *,
     valid_a=None,
     valid_b=None,
+    prune_projs=None,
     block_a: int = 512,
     block_b: int = 512,
     interpret: bool | None = None,
 ):
-    """h(A,B) = max over valid a-rows of the kernel's min distances."""
+    """h(A,B) = max over valid a-rows of the kernel's min distances.
+
+    Returns 0.0 when no a-row is valid (empty-set HD), matching exact.py.
+    """
     mins = min_sqdists(
-        a, b, valid_b=valid_b, block_a=block_a, block_b=block_b, interpret=interpret
+        a, b, valid_b=valid_b, prune_projs=prune_projs,
+        block_a=block_a, block_b=block_b, interpret=interpret,
     )
-    if valid_a is not None:
-        mins = jnp.where(valid_a, mins, -jnp.inf)
-    return jnp.sqrt(jnp.max(mins))
+    return _finalize(mins, valid_a)
 
 
 def hausdorff(
@@ -94,13 +220,19 @@ def hausdorff(
     *,
     valid_a=None,
     valid_b=None,
+    prune_projs=None,
     block_a: int = 512,
     block_b: int = 512,
     interpret: bool | None = None,
 ):
-    """Undirected H(A,B) via two directed kernel sweeps."""
-    kw = dict(block_a=block_a, block_b=block_b, interpret=interpret)
-    return jnp.maximum(
-        directed_hausdorff(a, b, valid_a=valid_a, valid_b=valid_b, **kw),
-        directed_hausdorff(b, a, valid_a=valid_b, valid_b=valid_a, **kw),
+    """Undirected H(A,B) in a SINGLE fused launch.
+
+    One pallas_call computes the squared-distance tiles once and folds them
+    into both directed accumulators — half the MXU work of the historical
+    two-sweep formulation (which recomputed every Gram tile transposed).
+    """
+    min_a, min_b = fused_min_sqdists(
+        a, b, valid_a=valid_a, valid_b=valid_b, prune_projs=prune_projs,
+        block_a=block_a, block_b=block_b, interpret=interpret,
     )
+    return jnp.maximum(_finalize(min_a, valid_a), _finalize(min_b, valid_b))

@@ -1,0 +1,13 @@
+"""Version-compat shim for Pallas TPU compiler params.
+
+jax renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams`` across
+0.4.x/0.5.x; every kernel imports the resolved class from here (same
+pattern as repro.sharding.compat for shard_map).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 from repro.sharding.axes import MeshRules, current_rules
 
 __all__ = ["lookup", "embedding_bag", "sharded_lookup"]
@@ -88,7 +90,7 @@ def sharded_lookup(table: jnp.ndarray, ids: jnp.ndarray, rules: MeshRules | None
         return jax.lax.psum(emb, rules.model)
 
     out_spec = P(*([batch_spec] + [None] * (ids.ndim - 1) + [None]))
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(rules.model, None), P(*([batch_spec] + [None] * (ids.ndim - 1)))),

@@ -20,6 +20,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.sharding.compat import shard_map
+
 from repro.configs.base import GNNConfig
 from repro.sharding.axes import MeshRules, shard
 
@@ -209,7 +211,7 @@ def gat_forward_partitioned(
 
     spec_nodes = P(axes, None)
     spec_edges = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(spec_nodes, spec_edges, spec_edges, spec_edges,

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 from repro.sharding.axes import MeshRules, current_rules
 
 
@@ -81,7 +83,7 @@ def retrieval_topk(
         top_ids = jnp.take_along_axis(g_ids, top_pos, axis=1)
         return top_vals, top_ids
 
-    out = jax.shard_map(
+    out = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axes, None), P()),

@@ -1,0 +1,32 @@
+"""Version-compat shims for jax sharding APIs.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to top-level
+``jax.shard_map`` across jax 0.4.x → 0.6.x, and its replication-check
+kwarg was renamed ``check_rep`` → ``check_vma``.  Every call site in this
+repo imports from here (and uses the new ``check_vma`` spelling); the shim
+translates for older jax.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_VMA = "check_vma" in _PARAMS
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, /, **kwargs):
+    if not _HAS_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)
+
+
+__all__ = ["shard_map"]

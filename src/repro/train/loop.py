@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 from repro.train import checkpoint as ckpt_mod
 from repro.train import compression as comp_mod
 from repro.train.fault_tolerance import (
@@ -143,7 +145,7 @@ def make_explicit_dp_step(
         rep_opt = jax.tree.map(lambda _: P(), opt_state)
         rep_comp = jax.tree.map(lambda _: P(), comp_state)
         batch_spec = jax.tree.map(lambda _: P(batch_axes), batch)
-        fn = jax.shard_map(
+        fn = shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(rep, rep_opt, rep_comp, batch_spec),

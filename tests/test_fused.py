@@ -1,0 +1,277 @@
+"""PR 1 coverage: the fused bidirectional scan and projection pruning.
+
+Three independent implementations are cross-checked:
+  - the Pallas kernel (interpret mode on CPU) via kernels/hausdorff/ops,
+  - the pure-JAX fused tiled scan (core/exact),
+  - the self-contained oracles (kernels/hausdorff/ref, exact.directed_hd_dense).
+
+Swept over ragged shapes, D not a multiple of 128, validity masks, and
+pruning on/off (which must be bit-for-bit-equivalent in result, only
+cheaper).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact, tile_bounds
+from repro.core.projections import direction_set
+from repro.kernels.hausdorff import ops as hd_ops
+from repro.kernels.hausdorff import ref as hd_ref
+
+KEY = jax.random.PRNGKey(20260730)
+
+# deliberately ragged: n_a ≠ n_b, neither a block multiple, D ∤ 128
+SHAPES = [
+    (100, 130, 7),
+    (513, 129, 100),
+    (300, 777, 28),
+    (64, 2000, 130),
+]
+
+
+def _clouds(na, nb, d, spread=0.3):
+    ka, kb = jax.random.split(jax.random.fold_in(KEY, na * 31 + nb * 7 + d))
+    a = jax.random.normal(ka, (na, d), jnp.float32) * 1.5
+    b = jax.random.normal(kb, (nb, d), jnp.float32) + spread
+    return a, b
+
+
+def _masks(na, nb, p=0.6):
+    ka, kb = jax.random.split(jax.random.fold_in(KEY, na + nb), 2)
+    va = jax.random.bernoulli(ka, p, (na,)).at[0].set(True)
+    vb = jax.random.bernoulli(kb, p, (nb,)).at[0].set(True)
+    return va, vb
+
+
+def _projs(a, b, m=3):
+    dirs = direction_set(a, b, m)
+    return (
+        jnp.matmul(a, dirs, preferred_element_type=jnp.float32),
+        jnp.matmul(b, dirs, preferred_element_type=jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused kernel (Pallas, interpret) vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_fused_kernel_both_directions_match_ref(shape):
+    na, nb, d = shape
+    a, b = _clouds(na, nb, d)
+    min_a, min_b = hd_ops.fused_min_sqdists(a, b, block_a=128, block_b=128)
+    np.testing.assert_allclose(
+        np.asarray(min_a), np.asarray(hd_ref.min_dists_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(min_b), np.asarray(hd_ref.min_dists_ref(b, a)), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_fused_kernel_with_masks(shape):
+    na, nb, d = shape
+    a, b = _clouds(na, nb, d)
+    va, vb = _masks(na, nb)
+    got = hd_ops.hausdorff(a, b, valid_a=va, valid_b=vb, block_a=128, block_b=128)
+    want = hd_ref.hausdorff_ref(a, b, valid_a=va, valid_b=vb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_fused_single_launch_matches_two_directed_sweeps():
+    """Acceptance: fused undirected == max of the two directed sweeps."""
+    for shape in SHAPES:
+        na, nb, d = shape
+        a, b = _clouds(na, nb, d)
+        va, vb = _masks(na, nb)
+        fused = hd_ops.hausdorff(a, b, valid_a=va, valid_b=vb)
+        two = jnp.maximum(
+            hd_ops.directed_hausdorff(a, b, valid_a=va, valid_b=vb),
+            hd_ops.directed_hausdorff(b, a, valid_a=vb, valid_b=va),
+        )
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(two), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pure-JAX fused tiled scan vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_fused_tiled_matches_dense(shape):
+    na, nb, d = shape
+    a, b = _clouds(na, nb, d)
+    va, vb = _masks(na, nb)
+    got = exact.hausdorff_fused_tiled(a, b, valid_a=va, valid_b=vb, block_a=128, block_b=96)
+    want = exact.hausdorff_dense(a, b, valid_a=va, valid_b=vb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_fused_tiled_min_vectors_match_dense():
+    a, b = _clouds(300, 411, 17)
+    min_a, min_b = exact.fused_min_sqdists_tiled(a, b, block_a=128, block_b=100)
+    d2 = exact.pairwise_sqdist(a, b)
+    np.testing.assert_allclose(np.asarray(min_a), np.asarray(d2.min(axis=1)), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(min_b), np.asarray(d2.min(axis=0)), rtol=1e-4, atol=1e-5)
+
+
+def test_hausdorff_tiled_delegates_to_fused():
+    a, b = _clouds(700, 900, 32)
+    np.testing.assert_allclose(
+        np.asarray(exact.hausdorff_tiled(a, b, block=128)),
+        np.asarray(exact.hausdorff_twosweep_tiled(a, b, block=128)),
+        rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# projection pruning: enabled vs disabled must be equivalent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spread", [0.0, 2.0, 6.0], ids=["overlap", "shifted", "separated"])
+def test_pruning_equivalence_pure_jax(spread):
+    a, b = _clouds(900, 1100, 12, spread=spread)
+    proj_a, proj_b = _projs(a, b)
+    a_s, pa_s, _, _ = tile_bounds.order_by_projection(a, proj_a)
+    b_s, pb_s, _, _ = tile_bounds.order_by_projection(b, proj_b)
+    plain = exact.hausdorff_fused_tiled(a_s, b_s, block_a=128, block_b=128)
+    pruned = exact.hausdorff_fused_tiled(
+        a_s, b_s, block_a=128, block_b=128, prune_projs=(pa_s, pb_s)
+    )
+    np.testing.assert_allclose(np.asarray(pruned), np.asarray(plain), rtol=1e-6)
+    # directed variant too
+    pd = exact.directed_hd_tiled(a_s, b_s, block=128, prune_projs=(pa_s, pb_s))
+    np.testing.assert_allclose(
+        np.asarray(pd), np.asarray(exact.directed_hd_dense(a, b)), rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("spread", [0.0, 4.0], ids=["overlap", "separated"])
+def test_pruning_equivalence_kernel(spread):
+    a, b = _clouds(600, 500, 9, spread=spread)
+    va, vb = _masks(600, 500)
+    proj_a, proj_b = _projs(a, b)
+    a_s, pa_s, va_s, _ = tile_bounds.order_by_projection(a, proj_a, va)
+    b_s, pb_s, vb_s, _ = tile_bounds.order_by_projection(b, proj_b, vb)
+    plain = hd_ops.hausdorff(a_s, b_s, valid_a=va_s, valid_b=vb_s, block_a=128, block_b=128)
+    pruned = hd_ops.hausdorff(
+        a_s, b_s, valid_a=va_s, valid_b=vb_s,
+        prune_projs=(pa_s, pb_s), block_a=128, block_b=128,
+    )
+    np.testing.assert_allclose(np.asarray(pruned), np.asarray(plain), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(pruned),
+        np.asarray(hd_ref.hausdorff_ref(a, b, valid_a=va, valid_b=vb)),
+        rtol=1e-5,
+    )
+
+
+def test_pruning_actually_skips_on_separated_clouds():
+    """Sanity: on well-separated sorted clouds the skip table is non-trivial."""
+    a, b = _clouds(2000, 2000, 8, spread=4.0)
+    proj_a, proj_b = _projs(a, b)
+    a_s, pa_s, _, _ = tile_bounds.order_by_projection(a, proj_a)
+    b_s, pb_s, _, _ = tile_bounds.order_by_projection(b, proj_b)
+    t = tile_bounds.prune_tables(a_s, pa_s, None, b_s, pb_s, None, 128, 128)
+    skip = (t.lb > t.cut_a[:, None]) & (t.lb > t.cut_b[None, :])
+    assert float(jnp.mean(skip)) > 0.1
+
+
+def test_chunked_b_axis_matches_single_launch():
+    """Huge-n_b protection: forcing the ops wrapper's column-chunked path
+    (tiny max_resident_b) must be exact, with and without pruning."""
+    a, b = _clouds(300, 900, 10, spread=1.5)
+    va, vb = _masks(300, 900)
+    ref = hd_ops.fused_min_sqdists(
+        a, b, valid_a=va, valid_b=vb, block_a=128, block_b=128
+    )
+    chunked = hd_ops.fused_min_sqdists(
+        a, b, valid_a=va, valid_b=vb, block_a=128, block_b=128,
+        max_resident_b=256,  # 2 blocks per launch → 4 chunks
+    )
+    np.testing.assert_allclose(np.asarray(ref[0]), np.asarray(chunked[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref[1]), np.asarray(chunked[1]), rtol=1e-6)
+
+    proj_a, proj_b = _projs(a, b)
+    a_s, pa_s, va_s, _ = tile_bounds.order_by_projection(a, proj_a, va)
+    b_s, pb_s, vb_s, _ = tile_bounds.order_by_projection(b, proj_b, vb)
+    plain = hd_ops.hausdorff(a_s, b_s, valid_a=va_s, valid_b=vb_s, block_a=128, block_b=128)
+    chunked_pruned = hd_ops.fused_min_sqdists(
+        a_s, b_s, valid_a=va_s, valid_b=vb_s, prune_projs=(pa_s, pb_s),
+        block_a=128, block_b=128, max_resident_b=256,
+    )
+    h = jnp.maximum(
+        jnp.sqrt(jnp.maximum(jnp.max(jnp.where(va_s, chunked_pruned[0], -jnp.inf)), 0.0)),
+        jnp.sqrt(jnp.maximum(jnp.max(jnp.where(vb_s, chunked_pruned[1], -jnp.inf)), 0.0)),
+    )
+    np.testing.assert_allclose(np.asarray(h), np.asarray(plain), rtol=1e-6)
+
+
+def test_witness_is_certified_upper_bound():
+    a, b = _clouds(500, 700, 13)
+    proj_a, proj_b = _projs(a, b)
+    ub = tile_bounds.witness_sqdists(a, b, proj_a, proj_b)
+    true_min = exact.pairwise_sqdist(a, b).min(axis=1)
+    assert bool(jnp.all(ub >= true_min - 1e-5))
+
+
+def test_tile_lower_bound_is_certified():
+    a, b = _clouds(512, 640, 6)
+    proj_a, proj_b = _projs(a, b)
+    a_s, pa_s, _, _ = tile_bounds.order_by_projection(a, proj_a)
+    b_s, pb_s, _, _ = tile_bounds.order_by_projection(b, proj_b)
+    t = tile_bounds.prune_tables(a_s, pa_s, None, b_s, pb_s, None, 128, 128)
+    d2 = exact.pairwise_sqdist(a_s, b_s)
+    for i in range(4):
+        for j in range(5):
+            tile = d2[i * 128:(i + 1) * 128, j * 128:(j + 1) * 128]
+            assert float(t.lb[i, j]) <= float(tile.min()) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# empty-set semantics (satellite: NaN fix), both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "tiled", "dense"])
+def test_all_invalid_query_side_returns_zero(backend):
+    a, b = _clouds(64, 64, 5)
+    va = jnp.zeros((64,), jnp.bool_)
+    if backend == "pallas":
+        h = hd_ops.directed_hausdorff(a, b, valid_a=va)
+        hu = hd_ops.hausdorff(a, b, valid_a=va)
+    elif backend == "tiled":
+        h = exact.directed_hd_tiled(a, b, valid_a=va, block=32)
+        hu = exact.hausdorff_fused_tiled(a, b, valid_a=va, block_a=32, block_b=32)
+    else:
+        h = exact.directed_hd_dense(a, b, valid_a=va)
+        hu = exact.hausdorff_dense(a, b, valid_a=va)
+    assert float(h) == 0.0
+    assert not np.isnan(float(h))
+    # undirected with one empty side still reports the other direction
+    assert float(hu) > 0.0
+
+
+def test_prohd_prune_config_end_to_end():
+    from repro.core import ProHDConfig, hausdorff_dense, prohd
+
+    a, b = _clouds(2000, 1800, 16, spread=1.0)
+    h = hausdorff_dense(a, b)
+    for backend in ("tiled", "pallas"):
+        for inner in ("full", "subset"):
+            est = prohd(
+                a, b,
+                ProHDConfig(alpha=0.05, subset_backend=backend, inner=inner, prune=True),
+            )
+            est0 = prohd(
+                a, b,
+                ProHDConfig(alpha=0.05, subset_backend=backend, inner=inner, prune=False),
+            )
+            np.testing.assert_allclose(float(est.hd), float(est0.hd), rtol=1e-6)
+            if inner == "full":
+                # only the full inner mode carries the never-overestimates
+                # certificate (§II-E.5); subset mode can legitimately exceed H
+                assert float(est.hd) <= float(h) * (1 + 1e-6)

@@ -14,7 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Optional dev dependency (requirements-dev.txt): skip the whole module —
+# not the whole suite — when hypothesis is not installed.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ProHDConfig, hausdorff_dense, prohd
 from repro.core.bounds import additive_bound, delta_per_direction
