@@ -2,15 +2,17 @@
 
 A reference embedding set is fixed; a stream of vectors arrives in batches.
 After a distribution shift is injected, the certified lower bound crosses
-the alert threshold.
+the alert threshold.  ``check_drift`` dispatches through the ``repro.hd``
+front door; the final line cross-checks its interval against an exact
+front-door call.
 
     PYTHONPATH=src python examples/drift_monitor.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.core.prohd import ProHDConfig
 from repro.core.streaming import DriftMonitorConfig, check_drift, init_drift_monitor, observe
+from repro.hd import set_distance
 
 key = jax.random.PRNGKey(0)
 dim = 32
@@ -32,3 +34,12 @@ for step in range(20):
             f"step {step:3d}: hd={float(rep.hd):7.3f}  "
             f"certified=[{float(rep.lower):7.3f}, {float(rep.upper):7.3f}]{flag}"
         )
+
+# sanity: the certified interval really brackets the exact distance
+exact = set_distance(state.reference, state.buffer, measure=True)
+rep = check_drift(state, cfg)
+print(
+    f"\nexact H = {float(exact.value):.3f} ({exact.meta.backend}, "
+    f"{exact.meta.elapsed_s*1e3:.0f}ms)  in certified interval: "
+    f"{float(rep.lower) <= float(exact.value) <= float(rep.upper)}"
+)

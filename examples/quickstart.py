@@ -1,35 +1,47 @@
-"""Quickstart: ProHD vs exact vs sampling on a synthetic cloud pair.
+"""Quickstart: one front door, three estimators, same synthetic cloud pair.
+
+Everything goes through ``repro.hd.set_distance`` — the (variant, method,
+backend) dispatch over the paper's estimator spectrum.  See docs/api.md
+for the full matrix.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
 import jax
 
-from repro.core import ProHDConfig, hausdorff_tiled, prohd, random_sampling_hd
+from repro.hd import HDConfig, set_distance
 from repro.data.pointclouds import higgs_like
 
 key = jax.random.PRNGKey(0)
 a, b = higgs_like(key, 50_000, 50_000)
 print(f"clouds: A={a.shape}  B={b.shape}")
 
-t0 = time.perf_counter()
-h_exact = float(hausdorff_tiled(a, b, block=4096))
-t_exact = time.perf_counter() - t0
-print(f"exact    H = {h_exact:.5f}   ({t_exact:.2f}s)")
+# Exact Hausdorff; backend="auto" picks the fused single-pass scan for this
+# size/device (the Pallas kernel on TPU, its pure-JAX mirror elsewhere).
+res = set_distance(a, b, measure=True)
+h_exact = float(res.value)
+t_exact = res.meta.elapsed_s
+print(f"exact    H = {h_exact:.5f}   ({t_exact:.2f}s, backend={res.meta.backend})")
 
-t0 = time.perf_counter()
-est = prohd(a, b, ProHDConfig(alpha=0.01))
-jax.block_until_ready(est.hd)
-t_prohd = time.perf_counter() - t0
+# ProHD: same call, method="prohd" — returns the estimate WITH its
+# certified interval in the uniform HDResult.
+est = set_distance(a, b, method="prohd", config=HDConfig(alpha=0.01), measure=True)
+t_prohd = est.meta.elapsed_s
+n_sel = int(est.stats["n_sel_a"]) + int(est.stats["n_sel_b"])
 print(
-    f"ProHD    Ĥ = {float(est.hd):.5f}   err={abs(float(est.hd)-h_exact)/h_exact*100:.3f}%  "
-    f"({t_prohd:.2f}s, {t_exact/t_prohd:.0f}x faster, |A_sel|+|B_sel|={int(est.n_sel_a)+int(est.n_sel_b)})"
+    f"ProHD    Ĥ = {float(est.value):.5f}   err={abs(float(est.value)-h_exact)/h_exact*100:.3f}%  "
+    f"({t_prohd:.2f}s, {t_exact/t_prohd:.0f}x faster, |A_sel|+|B_sel|={n_sel})"
 )
 print(
-    f"certified interval: [{float(est.hd_proj):.5f}, {float(est.hd_proj)+float(est.bound):.5f}] "
-    f"(contains H: {float(est.hd_proj) <= h_exact <= float(est.hd_proj)+float(est.bound)})"
+    f"certified interval: [{float(est.lower):.5f}, {float(est.upper):.5f}] "
+    f"(contains H: {float(est.lower) <= h_exact <= float(est.upper)})"
 )
 
-hd_r, n_r = random_sampling_hd(jax.random.PRNGKey(1), a, b, 0.01)
-print(f"random   Ĥ = {float(hd_r):.5f}   err={abs(float(hd_r)-h_exact)/h_exact*100:.3f}%  (subset={n_r})")
+# Random-sampling baseline: again the same call, method="sampling".
+samp = set_distance(
+    a, b, method="sampling", key=jax.random.PRNGKey(1), config=HDConfig(alpha=0.01)
+)
+print(
+    f"random   Ĥ = {float(samp.value):.5f}   "
+    f"err={abs(float(samp.value)-h_exact)/h_exact*100:.3f}%  "
+    f"(subset={int(samp.stats['n_sampled'])})"
+)

@@ -2,15 +2,17 @@
 (deliverable b — the paper's kind is a metric service, so the e2e driver
 serves batched requests).
 
+The service itself dispatches through the ``repro.hd`` front door; the
+exactness check below uses the same front door explicitly.
+
     PYTHONPATH=src python examples/serve_prohd.py
 """
 import time
 
 import jax
-import numpy as np
 
-from repro.core import hausdorff_tiled
-from repro.data.pointclouds import gaussian_mixture_pca, higgs_like, random_clouds
+from repro.data.pointclouds import random_clouds
+from repro.hd import set_distance
 from repro.serve.server import ProHDService, ServeConfig
 
 key = jax.random.PRNGKey(0)
@@ -31,7 +33,7 @@ print(f"served {len(results)} requests in {dt:.2f}s (incl. compile)\n")
 
 for rid, a, b in requests:
     r = results[rid]
-    h = float(hausdorff_tiled(a, b))
+    h = float(set_distance(a, b, backend="tiled").value)
     ok = r["lower"] <= h * 1.0001
     print(
         f"req {rid}: n=({a.shape[0]},{b.shape[0]}) hd≈{r['hd']:.4f} "

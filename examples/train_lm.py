@@ -12,11 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LMConfig
-from repro.core import ProHDConfig, prohd
 from repro.data.synth import lm_batch
+from repro.hd import HDConfig
 from repro.models import transformer as T
 from repro.train import optimizer as opt_mod
-from repro.train.loop import TrainConfig, fit
+from repro.train.loop import TrainConfig, fit, make_set_distance_metric
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200)
@@ -35,6 +35,11 @@ print(f"model: {n_params/1e6:.1f}M params")
 SEQ, BATCH = 64, 16
 reference_hidden = {}
 
+# Front-door drift metric: certified ProHD between hidden-state clouds.
+drift_metric = make_set_distance_metric(
+    variant="hausdorff", method="prohd", config=HDConfig(alpha=0.05)
+)
+
 
 def data_iter(start):
     i = start
@@ -51,9 +56,9 @@ def drift_hook(p, info):
     if "ref" not in reference_hidden:
         reference_hidden["ref"] = flat
         return
-    est = prohd(reference_hidden["ref"], flat, ProHDConfig(alpha=0.05))
-    print(f"  [drift@{info['step']}] ProHD(hidden_t, hidden_0) = {float(est.hd):.4f} "
-          f"certified ≥ {float(est.hd_proj):.4f}")
+    res = drift_metric(reference_hidden["ref"], flat)
+    print(f"  [drift@{info['step']}] ProHD(hidden_t, hidden_0) = {float(res.value):.4f} "
+          f"certified ≥ {float(res.lower):.4f}")
 
 
 with tempfile.TemporaryDirectory() as ckpt_dir:

@@ -19,4 +19,21 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
   # it with an incomparable row set.
   echo "== quick benchmark (JSON -> BENCH_QUICK.json) =="
   python -m benchmarks.run --quick --json BENCH_QUICK.json
+
+  # PR 2 gate: the repro.hd front door must stay a thin veneer — its
+  # dispatch overhead on the fused path is asserted < 5% of the kernel
+  # call it wraps (best-of-N timing on both sides).
+  echo "== dispatch-overhead microbench (JSON -> BENCH_PR2.json) =="
+  python -m benchmarks.run --only dispatch --json BENCH_PR2.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR2.json"))["rows"]}
+direct = rows["dispatch/direct"]["us_per_call"]
+front = rows["dispatch/front_door"]["us_per_call"]
+overhead = (front - direct) / direct * 100.0
+print(f"front-door dispatch overhead: {overhead:+.2f}% "
+      f"(direct {direct:.0f}us, front door {front:.0f}us)")
+assert overhead < 5.0, f"front-door overhead {overhead:.2f}% exceeds the 5% budget"
+PY
 fi

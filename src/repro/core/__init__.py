@@ -1,20 +1,30 @@
-"""ProHD core: the paper's contribution as composable JAX modules."""
-from repro.core.prohd import ProHDConfig, ProHDEstimate, prohd, prohd_masks
+"""ProHD core: the paper's contribution as composable JAX modules.
+
+The module-level *estimator entry points* that used to live here
+(``prohd``, ``hausdorff_tiled``, ``chamfer``, …) are now thin
+backward-compat shims over the unified ``repro.hd`` front door — one
+``set_distance()`` with (variant, method, backend) dispatch.  They return
+exactly what they always did (same functions run underneath, bit-for-bit;
+asserted in tests/test_hd_api.py) but emit a ``DeprecationWarning``
+pointing at the replacement.  The *substrate* (selection, projections,
+tile bounds, the directed/tiled oracles, the fused scans) is re-exported
+unchanged — that is what the registry itself dispatches to.
+"""
+from __future__ import annotations
+
+import warnings as _warnings
+
+from repro.core.prohd import ProHDConfig, ProHDEstimate, prohd_masks
 from repro.core.exact import (
     directed_hd_dense,
     directed_hd_earlybreak,
     directed_hd_tiled,
     fused_min_sqdists_tiled,
-    hausdorff_dense,
     hausdorff_earlybreak,
-    hausdorff_fused_tiled,
-    hausdorff_tiled,
     hausdorff_twosweep_tiled,
 )
 from repro.core.tile_bounds import PruneTables, order_by_projection, prune_tables
-from repro.core.sampling import random_sampling_hd, systematic_sampling_hd
-from repro.core.variants import chamfer, partial_hausdorff
-from repro.core.adaptive import AdaptiveResult, prohd_with_budget
+from repro.core.adaptive import AdaptiveResult
 
 __all__ = [
     "ProHDConfig",
@@ -40,3 +50,127 @@ __all__ = [
     "AdaptiveResult",
     "prohd_with_budget",
 ]
+
+def _front_door():
+    # Lazy: repro.hd imports repro.core's submodules; importing it at this
+    # module's top level would be circular.
+    from repro import hd
+
+    return hd
+
+
+def _deprecated(old: str, new: str) -> None:
+    _warnings.warn(
+        f"repro.core.{old} is deprecated; use repro.hd.{new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def prohd(a, b, cfg: ProHDConfig = ProHDConfig(), *, key=None) -> ProHDEstimate:
+    """Deprecated shim: ``set_distance(a, b, method="prohd")``."""
+    _deprecated("prohd", 'set_distance(a, b, method="prohd", config=HDConfig(prohd=cfg))')
+    hd = _front_door()
+    res = hd.set_distance(
+        a, b, variant="hausdorff", method="prohd",
+        backend=hd.BACKEND_FOR_SUBSET[cfg.subset_backend],
+        config=hd.HDConfig(prohd=cfg), key=key,
+    )
+    return res.stats["estimate"]
+
+
+def hausdorff_dense(a, b, *, valid_a=None, valid_b=None):
+    """Deprecated shim: ``set_distance(a, b, backend="dense")``."""
+    _deprecated("hausdorff_dense", 'set_distance(a, b, backend="dense")')
+    return _front_door().set_distance(
+        a, b, variant="hausdorff", method="exact", backend="dense",
+        masks=(valid_a, valid_b),
+    ).value
+
+
+def hausdorff_tiled(a, b, *, valid_a=None, valid_b=None, block: int = 2048):
+    """Deprecated shim: ``set_distance(a, b, backend="tiled")``."""
+    _deprecated("hausdorff_tiled", 'set_distance(a, b, backend="tiled")')
+    hd = _front_door()
+    return hd.set_distance(
+        a, b, variant="hausdorff", method="exact", backend="tiled",
+        masks=(valid_a, valid_b), config=hd.HDConfig(block_a=block, block_b=block),
+    ).value
+
+
+def hausdorff_fused_tiled(
+    a, b, *, valid_a=None, valid_b=None,
+    block_a: int = 1024, block_b: int = 2048, prune_projs=None,
+):
+    """Deprecated shim: ``set_distance(a, b, backend="tiled")``."""
+    _deprecated("hausdorff_fused_tiled", 'set_distance(a, b, backend="tiled")')
+    hd = _front_door()
+    return hd.set_distance(
+        a, b, variant="hausdorff", method="exact", backend="tiled",
+        masks=(valid_a, valid_b), prune_projs=prune_projs,
+        config=hd.HDConfig(block_a=block_a, block_b=block_b),
+    ).value
+
+
+def chamfer(a, b, *, valid_a=None, valid_b=None):
+    """Deprecated shim: ``set_distance(a, b, variant="chamfer")``."""
+    _deprecated("chamfer", 'set_distance(a, b, variant="chamfer")')
+    return _front_door().set_distance(
+        a, b, variant="chamfer", method="exact", backend="fused_pallas",
+        masks=(valid_a, valid_b),
+    ).value
+
+
+def partial_hausdorff(a, b, *, quantile: float = 0.95, valid_a=None, valid_b=None):
+    """Deprecated shim: ``set_distance(a, b, variant="partial")``."""
+    _deprecated("partial_hausdorff", 'set_distance(a, b, variant="partial")')
+    hd = _front_door()
+    return hd.set_distance(
+        a, b, variant="partial", method="exact", backend="fused_pallas",
+        masks=(valid_a, valid_b), config=hd.HDConfig(quantile=quantile),
+    ).value
+
+
+def random_sampling_hd(key, a, b, alpha: float, *, block: int = 2048):
+    """Deprecated shim: ``set_distance(a, b, method="sampling")``."""
+    _deprecated("random_sampling_hd", 'set_distance(a, b, method="sampling", key=key)')
+    hd = _front_door()
+    res = hd.set_distance(
+        a, b, variant="hausdorff", method="sampling", backend="tiled", key=key,
+        config=hd.HDConfig(alpha=alpha, sampler="random", block_a=block, block_b=block),
+    )
+    return res.value, res.stats["n_sampled"]
+
+
+def systematic_sampling_hd(key, a, b, alpha: float, *, block: int = 2048):
+    """Deprecated shim: ``set_distance(..., method="sampling")`` (systematic)."""
+    _deprecated(
+        "systematic_sampling_hd",
+        'set_distance(a, b, method="sampling", key=key, '
+        'config=HDConfig(sampler="systematic"))',
+    )
+    hd = _front_door()
+    res = hd.set_distance(
+        a, b, variant="hausdorff", method="sampling", backend="tiled", key=key,
+        config=hd.HDConfig(
+            alpha=alpha, sampler="systematic", block_a=block, block_b=block
+        ),
+    )
+    return res.value, res.stats["n_sampled"]
+
+
+def prohd_with_budget(
+    a, b, *, budget: float, relative: bool = True, alpha0: float = 0.005,
+    max_alpha: float = 0.5, max_steps: int = 8, key=None,
+) -> AdaptiveResult:
+    """Deprecated shim: ``set_distance(a, b, method="adaptive")``."""
+    _deprecated("prohd_with_budget", 'set_distance(a, b, method="adaptive")')
+    hd = _front_door()
+    res = hd.set_distance(
+        a, b, variant="hausdorff", method="adaptive", backend="tiled", key=key,
+        config=hd.HDConfig(
+            budget=budget, budget_relative=relative, adaptive_alpha0=alpha0,
+            adaptive_max_alpha=max_alpha, adaptive_max_steps=max_steps,
+        ),
+    )
+    return res.stats["adaptive"]

@@ -23,9 +23,22 @@ from typing import NamedTuple
 
 import jax
 
-from repro.core.prohd import ProHDConfig, ProHDEstimate, prohd
+from repro.core.prohd import ProHDConfig, ProHDEstimate
 
 __all__ = ["AdaptiveResult", "prohd_with_budget"]
+
+
+def _prohd_step(a, b, cfg: ProHDConfig, key) -> ProHDEstimate:
+    """One ProHD evaluation, routed through the ``repro.hd`` front door so
+    the adaptive schedule exercises the same dispatch path as every other
+    consumer (lazy import: repro.hd depends on this module)."""
+    from repro import hd
+
+    res = hd.set_distance(
+        a, b, variant="hausdorff", method="prohd", backend="tiled",
+        config=hd.HDConfig(prohd=cfg), key=key,
+    )
+    return res.stats["estimate"]
 
 
 class AdaptiveResult(NamedTuple):
@@ -54,7 +67,7 @@ def prohd_with_budget(
     est = None
     for step in range(1, max_steps + 1):
         cfg = ProHDConfig(alpha=alpha, num_pca_directions=min(m, d))
-        est = prohd(a, b, cfg, key=key)
+        est = _prohd_step(a, b, cfg, key)
         lower = float(est.hd_proj)
         upper = lower + float(est.bound)
         gap = upper - lower

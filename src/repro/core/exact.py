@@ -118,8 +118,9 @@ def directed_hd_tiled(
         tables = tile_bounds.prune_tables(
             a, proj_a, valid_a, b, proj_b, vb, n_a, block, directed=True
         )
-        # Single query block: skip tile j iff lb[0, j] > cut_a[0].
-        skip_tiles = tables.lb[0] > tables.cut_a[0]
+        # Single query block (gi=1): tile j skippable iff lb[0, j] clears
+        # the one row cutoff (cut_b is −inf under directed=True).
+        skip_tiles = tile_bounds.skip_mask(tables)[0]
 
     def tile_min(cur, bt, b2t):
         d2 = a2[:, None] - 2.0 * jnp.matmul(
@@ -205,7 +206,7 @@ def fused_min_sqdists_tiled(
         tables = tile_bounds.prune_tables(
             a, proj_a, valid_a, b, proj_b, valid_b, block_a, block_b
         )
-        skip = (tables.lb > tables.cut_a[:, None]) & (tables.lb > tables.cut_b[None, :])
+        skip = tile_bounds.skip_mask(tables)
     else:
         skip = None
 

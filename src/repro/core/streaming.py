@@ -20,7 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prohd import ProHDConfig as _ProHDConfig, prohd as _prohd
+from repro.core.prohd import ProHDConfig as _ProHDConfig
 
 __all__ = ["DriftMonitorConfig", "DriftState", "init_drift_monitor", "observe", "check_drift"]
 
@@ -81,12 +81,29 @@ class DriftReport(NamedTuple):
 
 
 def check_drift(state: DriftState, cfg: DriftMonitorConfig, *, key: jax.Array | None = None) -> DriftReport:
-    """ProHD between the reference set and the current reservoir."""
-    est = _prohd(state.reference, state.buffer, cfg.prohd, key=key)
-    lower = jnp.maximum(est.hd_proj, 0.0)
+    """ProHD between the reference set and the current reservoir.
+
+    Routed through the ``repro.hd`` front door: the monitor consumes the
+    uniform HDResult's certified interval rather than poking ProHD
+    internals, so swapping the estimator (e.g. ``method="adaptive"`` or a
+    future registered kernel) is a config change, not a code change.
+    """
+    from repro import hd as _hd
+
+    res = _hd.set_distance(
+        state.reference, state.buffer, variant="hausdorff", method="prohd",
+        backend=_hd.BACKEND_FOR_SUBSET[cfg.prohd.subset_backend],
+        config=_hd.HDConfig(prohd=cfg.prohd), key=key,
+    )
+    # Estimator-agnostic: only the uniform HDResult fields are consumed.
+    # A config whose estimator carries no certificate (e.g. ProHDConfig
+    # with compute_projected/compute_bound off) gets the honest vacuous
+    # interval [0, +inf) — no certified lower bound means no alert.
+    lower = jnp.maximum(res.lower, 0.0) if res.lower is not None else jnp.float32(0.0)
+    upper = res.upper if res.upper is not None else jnp.float32(jnp.inf)
     return DriftReport(
-        hd=est.hd,
+        hd=res.value,
         lower=lower,
-        upper=est.hd_proj + est.bound,
+        upper=upper,
         alert=lower > cfg.threshold,
     )

@@ -47,6 +47,8 @@ __all__ = [
     "witness_sqdists",
     "block_cutoffs",
     "prune_tables",
+    "skip_mask",
+    "skip_fraction",
 ]
 
 # Large-but-finite stand-in for ±inf inside interval arithmetic (inf − inf
@@ -215,3 +217,20 @@ def prune_tables(
             witness_sqdists(b, a, proj_b, proj_a, valid_a), valid_b, block_b
         )
     return PruneTables(lb=lb.astype(jnp.float32), cut_a=cut_a, cut_b=cut_b)
+
+
+def skip_mask(tables: PruneTables) -> jnp.ndarray:
+    """(gi, gj) bool — tiles the scans may provably skip.
+
+    THE skip rule, shared by every consumer (pure-JAX scans in core/exact,
+    the Pallas kernel's host-side gating, the front door's skip_fraction
+    stat): a tile is skippable iff its certified distance lower bound
+    clears BOTH witness cutoffs.  ``prune_tables(directed=True)`` sets
+    ``cut_b`` to −inf, which makes the col condition vacuous here.
+    """
+    return (tables.lb > tables.cut_a[:, None]) & (tables.lb > tables.cut_b[None, :])
+
+
+def skip_fraction(tables: PruneTables) -> jnp.ndarray:
+    """Fraction of the tile grid the bounds prove skippable (scalar fp32)."""
+    return jnp.mean(skip_mask(tables).astype(jnp.float32))

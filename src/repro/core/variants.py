@@ -10,6 +10,12 @@ the same substrate:
 - **Chamfer distance**: mean (not max) of min-distances, both directions.
   Same kernel output, different reduction — useful as a smoother drift
   signal next to HD in the monitor.
+
+The reductions (``quantile_reduce``, ``mean_min_dist``) are module-level
+so the ``repro.hd`` front door can apply them to ANY backend's fused
+min-d² scan (Pallas kernel, pure-JAX tiled mirror, dense reference) — the
+functions below bind them to the Pallas path and remain the direct entry
+points the front door delegates to.
 """
 from __future__ import annotations
 
@@ -18,11 +24,43 @@ import jax.numpy as jnp
 
 from repro.kernels.hausdorff import ops as hd_ops
 
-__all__ = ["partial_hausdorff", "chamfer"]
+__all__ = ["quantile_reduce", "mean_min_dist", "partial_hausdorff", "chamfer"]
+
+
+def quantile_reduce(mins, vx, n: int, quantile: float) -> jnp.ndarray:
+    """K-th ranked (ascending) min-distance over valid rows, K = ⌈q·n_valid⌉.
+
+    The Huttenlocher partial-HD ranking: q=1.0 picks the max (plain HD),
+    q→0 the smallest min-distance.  ``mins`` are squared distances (one
+    fused-scan direction); the result is in distance units.  With no valid
+    rows the quantile is taken over an empty set and collapses to 0.0
+    (matching the empty-query-side convention of ``exact.finalize_mins``).
+    """
+    if vx is not None:
+        # invalid rows must not enter the quantile: give them -inf so
+        # they sort to the bottom
+        mins = jnp.where(vx, mins, -jnp.inf)
+        n_valid = jnp.sum(vx)
+    else:
+        n_valid = n
+    k = jnp.clip(jnp.ceil(quantile * n_valid).astype(jnp.int32), 1, n)
+    sorted_mins = jnp.sort(mins)  # ascending; -inf (invalid) first
+    # index of the k-th largest among the valid suffix (jnp indexing clamps
+    # the all-invalid case's out-of-range index to the -inf region → 0.0)
+    idx = n - (n_valid - k) - 1
+    return jnp.sqrt(jnp.maximum(sorted_mins[idx], 0.0))
+
+
+def mean_min_dist(mins, vx) -> jnp.ndarray:
+    """Mean over valid rows of sqrt(min d²) — one chamfer direction."""
+    d = jnp.sqrt(jnp.maximum(mins, 0.0))
+    if vx is not None:
+        return jnp.sum(jnp.where(vx, d, 0.0)) / jnp.maximum(jnp.sum(vx), 1)
+    return jnp.mean(d)
 
 
 def partial_hausdorff(a, b, *, quantile: float = 0.95, valid_a=None, valid_b=None):
-    """Directed-partial HD both ways: K-th largest min-distance, K = ⌈q·n⌉.
+    """Directed-partial HD both ways: K-th ranked min-distance, K = ⌈q·n⌉.
 
     quantile=1.0 recovers the standard Hausdorff distance.  Robust to
     (1-q)·n outliers per cloud — the paper's related work calls this the
@@ -33,23 +71,9 @@ def partial_hausdorff(a, b, *, quantile: float = 0.95, valid_a=None, valid_b=Non
     # GEMM sharing as chamfer below).
     min_a, min_b = hd_ops.fused_min_sqdists(a, b, valid_a=valid_a, valid_b=valid_b)
 
-    def quantile_reduce(mins, vx, n):
-        if vx is not None:
-            # invalid rows must not enter the quantile: give them -inf so
-            # they sort to the bottom
-            mins = jnp.where(vx, mins, -jnp.inf)
-            n_valid = jnp.sum(vx)
-        else:
-            n_valid = n
-        k = jnp.clip(jnp.ceil(quantile * n_valid).astype(jnp.int32), 1, n)
-        sorted_mins = jnp.sort(mins)  # ascending; -inf (invalid) first
-        # index of the k-th largest among the valid suffix
-        idx = n - (n_valid - k) - 1
-        return jnp.sqrt(jnp.maximum(sorted_mins[idx], 0.0))
-
     return jnp.maximum(
-        quantile_reduce(min_a, valid_a, a.shape[0]),
-        quantile_reduce(min_b, valid_b, b.shape[0]),
+        quantile_reduce(min_a, valid_a, a.shape[0], quantile),
+        quantile_reduce(min_b, valid_b, b.shape[0], quantile),
     )
 
 
@@ -61,11 +85,4 @@ def chamfer(a, b, *, valid_a=None, valid_b=None):
     workload the fused kernel exists for.
     """
     min_a, min_b = hd_ops.fused_min_sqdists(a, b, valid_a=valid_a, valid_b=valid_b)
-
-    def mean_dist(mins, vx):
-        d = jnp.sqrt(jnp.maximum(mins, 0.0))
-        if vx is not None:
-            return jnp.sum(jnp.where(vx, d, 0.0)) / jnp.maximum(jnp.sum(vx), 1)
-        return jnp.mean(d)
-
-    return mean_dist(min_a, valid_a) + mean_dist(min_b, valid_b)
+    return mean_min_dist(min_a, valid_a) + mean_min_dist(min_b, valid_b)

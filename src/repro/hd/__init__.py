@@ -1,0 +1,63 @@
+"""``repro.hd`` — the unified set-distance front door.
+
+The paper's estimator lives in a spectrum (exact / sampling /
+projection-guided; §I, §V) and the same Hausdorff query is served by very
+different machinery depending on scale and hardware.  This package is the
+single entry point over that spectrum:
+
+    from repro.hd import HDConfig, HDEngine, set_distance
+
+    res = set_distance(a, b)                       # variant/method/backend dispatch
+    res.value, res.lower, res.upper, res.stats     # uniform HDResult
+
+Layout:
+    registry  — (variant, method, backend) table + UnsupportedCombination
+    resolver  — pure auto-backend + block-size heuristics
+    config    — frozen HDConfig (all knobs, hashable static pytree)
+    result    — HDResult / HDMeta
+    methods   — the registered adapters onto repro.core / repro.kernels
+    engine    — set_distance + the jit/vmap-friendly HDEngine
+
+The old module-level callables (``repro.core.prohd``,
+``repro.core.hausdorff_fused_tiled``, …) remain importable as deprecated
+shims over this registry; see docs/api.md for the migration table.
+"""
+from repro.hd.config import BACKEND_FOR_SUBSET, HDConfig
+from repro.hd.engine import HDEngine, set_distance
+from repro.hd import methods as _methods  # noqa: F401  (populates the registry)
+from repro.hd.registry import (
+    BACKENDS,
+    METHODS,
+    VARIANTS,
+    UnsupportedCombination,
+    is_supported,
+    register,
+    supported_backends,
+    supported_combinations,
+)
+from repro.hd.resolver import (
+    TILE_THRESHOLD,
+    resolve_backend,
+    resolve_block_sizes,
+)
+from repro.hd.result import HDMeta, HDResult
+
+__all__ = [
+    "set_distance",
+    "HDEngine",
+    "HDConfig",
+    "BACKEND_FOR_SUBSET",
+    "HDResult",
+    "HDMeta",
+    "UnsupportedCombination",
+    "register",
+    "is_supported",
+    "supported_backends",
+    "supported_combinations",
+    "resolve_backend",
+    "resolve_block_sizes",
+    "TILE_THRESHOLD",
+    "VARIANTS",
+    "METHODS",
+    "BACKENDS",
+]

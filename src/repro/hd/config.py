@@ -1,0 +1,91 @@
+"""Frozen front-door configuration.
+
+``HDConfig`` consolidates the knobs that used to be scattered over ~20
+loose callables (ProHD's alpha, partial's quantile, the adaptive budget,
+block sizes, pruning, …) into ONE hashable frozen dataclass.  It is
+registered as an all-static pytree, so an engine/config can be closed over
+or passed straight through ``jax.jit`` without ceremony.
+
+Blocks left as ``None`` are resolved per device/backend by
+``repro.hd.resolver.resolve_block_sizes`` at dispatch time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+from repro.core.prohd import ProHDConfig
+
+__all__ = ["HDConfig", "BACKEND_FOR_SUBSET"]
+
+_SUBSET_BACKEND = {"dense": "dense", "tiled": "tiled", "fused_pallas": "pallas"}
+# Inverse map: ProHDConfig.subset_backend -> front-door backend name.
+BACKEND_FOR_SUBSET = {"dense": "dense", "tiled": "tiled", "pallas": "fused_pallas"}
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[],
+    meta_fields=[
+        "alpha",
+        "prune",
+        "inner",
+        "prohd",
+        "quantile",
+        "sampler",
+        "budget",
+        "budget_relative",
+        "adaptive_alpha0",
+        "adaptive_max_alpha",
+        "adaptive_max_steps",
+        "block_a",
+        "block_b",
+        "interpret",
+    ],
+)
+@dataclasses.dataclass(frozen=True)
+class HDConfig:
+    """Every front-door knob, with the paper's defaults.
+
+    Only the fields relevant to the dispatched (variant, method) are read;
+    the rest are inert, so one config can drive a whole sweep.
+    """
+
+    # -- shared / prohd -----------------------------------------------------
+    alpha: float = 0.01              # selection / sampling fraction
+    prune: bool = False              # projection pruning in the scans
+    inner: str = "full"              # ProHD inner-min mode ("full"|"subset")
+    # Full ProHDConfig override: when set, alpha/prune/inner above are
+    # ignored and this config is used verbatim (its subset_backend is
+    # aligned to the dispatched backend).  This is how the repro.core
+    # compat shims guarantee bit-for-bit round-trips.
+    prohd: ProHDConfig | None = None
+
+    # -- partial ------------------------------------------------------------
+    quantile: float = 0.95           # K-th-largest fraction for partial HD
+
+    # -- sampling -----------------------------------------------------------
+    sampler: str = "random"          # "random" | "systematic"
+
+    # -- adaptive -----------------------------------------------------------
+    budget: float = 0.1              # certified-gap budget
+    budget_relative: bool = True     # gap relative to the lower bound
+    adaptive_alpha0: float = 0.005
+    adaptive_max_alpha: float = 0.5
+    adaptive_max_steps: int = 8
+
+    # -- machinery ----------------------------------------------------------
+    block_a: int | None = None       # None → resolver heuristics
+    block_b: int | None = None
+    interpret: bool | None = None    # Pallas interpret override (tests)
+
+    def prohd_config(self, backend: str) -> ProHDConfig:
+        """The ProHDConfig this dispatch runs, subset backend aligned."""
+        sb = _SUBSET_BACKEND[backend]
+        if self.prohd is not None:
+            return dataclasses.replace(self.prohd, subset_backend=sb)
+        return ProHDConfig(
+            alpha=self.alpha, prune=self.prune, inner=self.inner, subset_backend=sb
+        )

@@ -1,0 +1,138 @@
+"""(variant, method, backend) dispatch registry for the ``repro.hd`` front door.
+
+The paper positions ProHD as one estimator in a spectrum (exact, sampling,
+projection-guided), and the same Hausdorff query is served by very
+different algorithms depending on scale and hardware.  The registry makes
+that spectrum a first-class, extensible object: every implementation is a
+callable keyed by
+
+    (variant, method, backend)
+
+where the axes are
+
+    variant  — which set distance:  hausdorff | directed | partial | chamfer
+    method   — which estimator:     exact | prohd | sampling | adaptive
+    backend  — which machinery:     dense | tiled | fused_pallas | distributed
+               ("auto" is resolved by repro.hd.resolver before lookup)
+
+New methods self-register with the :func:`register` decorator (the pattern
+RT-HDIST-style specialized kernels will use); nothing else in the codebase
+needs to change for a new (variant, method, backend) cell to become
+callable through :func:`repro.hd.set_distance`.
+
+Unknown axis values raise ``ValueError``; known-but-unimplemented cells
+raise the structured :class:`UnsupportedCombination` so callers (and the
+parametrized matrix test) can distinguish "typo" from "not served".
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+__all__ = [
+    "VARIANTS",
+    "METHODS",
+    "BACKENDS",
+    "UnsupportedCombination",
+    "validate_axes",
+    "register",
+    "resolve",
+    "is_supported",
+    "supported_backends",
+    "supported_combinations",
+]
+
+VARIANTS = ("hausdorff", "directed", "partial", "chamfer")
+METHODS = ("exact", "prohd", "sampling", "adaptive")
+BACKENDS = ("dense", "tiled", "fused_pallas", "distributed", "auto")
+# Concrete (dispatchable) backends — "auto" resolves to one of these.
+CONCRETE_BACKENDS = tuple(b for b in BACKENDS if b != "auto")
+
+
+class UnsupportedCombination(ValueError):
+    """A (variant, method, backend) cell with no registered implementation.
+
+    Structured: carries the offending axes plus the backends that WOULD
+    work for this (variant, method), so callers can recover (e.g. fall
+    back to ``backend="auto"``) without parsing the message.
+    """
+
+    def __init__(self, variant: str, method: str, backend: str):
+        self.variant = variant
+        self.method = method
+        self.backend = backend
+        self.supported = supported_backends(variant, method)
+        hint = (
+            f"supported backends for ({variant}, {method}): {list(self.supported)}"
+            if self.supported
+            else f"method {method!r} is not implemented for variant {variant!r}"
+        )
+        super().__init__(
+            f"no implementation for variant={variant!r} method={method!r} "
+            f"backend={backend!r}; {hint}"
+        )
+
+
+_REGISTRY: dict[tuple[str, str, str], Callable] = {}
+
+
+def _check_axes(variant: str, method: str, backend: str, *, allow_auto: bool) -> None:
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    ok = BACKENDS if allow_auto else CONCRETE_BACKENDS
+    if backend not in ok:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {ok}")
+
+
+def validate_axes(variant: str, method: str, backend: str) -> None:
+    """Reject unknown axis VALUES (typos) with a plain ValueError — before
+    any auto-resolution can convert them into a misleading
+    UnsupportedCombination."""
+    _check_axes(variant, method, backend, allow_auto=True)
+
+
+def register(variant: str, method: str, backend: str):
+    """Decorator: install ``fn`` as the implementation of one matrix cell.
+
+    ``fn`` has the uniform signature ``fn(a, b, ctx) -> (value, lower,
+    upper, stats)`` (see repro.hd.methods for the context contract).
+    """
+    _check_axes(variant, method, backend, allow_auto=False)
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(variant, method, backend)] = fn
+        return fn
+
+    return deco
+
+
+def resolve(variant: str, method: str, backend: str) -> Callable:
+    """Look up the implementation for a concrete cell, or raise."""
+    _check_axes(variant, method, backend, allow_auto=False)
+    impl = _REGISTRY.get((variant, method, backend))
+    if impl is None:
+        raise UnsupportedCombination(variant, method, backend)
+    return impl
+
+
+def is_supported(variant: str, method: str, backend: str) -> bool:
+    return (variant, method, backend) in _REGISTRY
+
+
+def supported_backends(variant: str, method: str) -> tuple[str, ...]:
+    """Concrete backends registered for (variant, method), registry order."""
+    return tuple(
+        b for b in CONCRETE_BACKENDS if (variant, method, b) in _REGISTRY
+    )
+
+
+def supported_combinations() -> tuple[tuple[str, str, str], ...]:
+    """Every registered (variant, method, backend), in matrix order."""
+    return tuple(
+        (v, m, b)
+        for v in VARIANTS
+        for m in METHODS
+        for b in CONCRETE_BACKENDS
+        if (v, m, b) in _REGISTRY
+    )

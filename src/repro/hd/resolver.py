@@ -1,0 +1,109 @@
+"""Pure backend / block-size resolution for ``backend="auto"``.
+
+Everything here is plain Python over static shapes — no device is touched,
+so the heuristics are unit-testable anywhere (including the TPU rules on a
+CPU-only box).  The actual device kind is injected by the engine via
+:func:`default_device_kind`.
+
+Heuristics (ROADMAP "Autotune fused-scan block sizes per backend"):
+
+  * blocks — CPU favours 4096/4096 at low D (≤64), 2048/2048 at high D;
+    the TPU VMEM budget allows 512/512 (the Pallas kernel's native tile).
+  * backend — multi-device meshes dispatch to ``distributed`` whenever the
+    (variant, method) serves it; single-device inputs above the tile
+    threshold take the fused single-pass path: the Pallas kernel where it
+    is native (TPU), its pure-JAX mirror (``tiled``, which has been the
+    fused scan since PR 1) elsewhere — ``auto`` never picks interpret-mode
+    Pallas, that is an explicit-backend-only debugging path.  Inputs with
+    any side under the tile threshold go ``dense`` (one small GEMM beats
+    scan machinery).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.hd import registry
+
+__all__ = [
+    "TILE_THRESHOLD",
+    "default_device_kind",
+    "resolve_backend",
+    "resolve_block_sizes",
+]
+
+# The fused kernel's native block edge: below this, a whole cloud fits in
+# one tile and the scan/grid machinery is pure overhead.
+TILE_THRESHOLD = 512
+
+# Low-D cutoff for the CPU block heuristic: at D ≤ 64 the per-tile GEMM is
+# cheap enough that bigger (4096) tiles amortise scan overhead best; at
+# high D the d² tile dominates cache and 2048 wins.
+LOW_D = 64
+
+
+def default_device_kind() -> str:
+    """Platform of the default device: "cpu" | "gpu" | "tpu"."""
+    return jax.devices()[0].platform
+
+
+def resolve_backend(
+    variant: str,
+    method: str,
+    n_a: int,
+    n_b: int,
+    d: int,
+    *,
+    device_kind: str = "cpu",
+    n_devices: int = 1,
+) -> str:
+    """Pick a concrete backend for ``backend="auto"`` from static facts.
+
+    Pure function of (variant, method, n, m, D, device); only returns
+    backends actually registered for (variant, method), so the result
+    always dispatches.
+    """
+    supported = registry.supported_backends(variant, method)
+    if not supported:
+        # Nothing serves this (variant, method) on ANY backend — surface
+        # the structured error rather than a misleading "auto" failure.
+        raise registry.UnsupportedCombination(variant, method, "auto")
+
+    def pick(*prefs: str) -> str:
+        for p in prefs:
+            if p in supported:
+                return p
+        return supported[0]
+
+    if n_devices > 1 and "distributed" in supported:
+        return "distributed"
+    above_threshold = min(n_a, n_b) >= TILE_THRESHOLD
+    if not above_threshold:
+        # every exact variant (incl. partial/chamfer) serves dense; methods
+        # registered only on tiled (sampling/adaptive) fall through to it.
+        return pick("dense", "fused_pallas", "tiled")
+    if device_kind == "tpu":
+        return pick("fused_pallas", "tiled", "dense")
+    return pick("tiled", "fused_pallas", "dense")
+
+
+def resolve_block_sizes(
+    n_a: int,
+    n_b: int,
+    d: int,
+    *,
+    device_kind: str = "cpu",
+    backend: str = "tiled",
+) -> tuple[int, int]:
+    """(block_a, block_b) defaults per the ROADMAP autotune notes.
+
+    The scan/kernel entry points clamp blocks to the actual cloud sizes,
+    so these are upper bounds; tile values are bitwise-identical across
+    block choices (the GEMM's K dimension is never split), making this a
+    pure performance knob.
+    """
+    if backend == "fused_pallas" or device_kind == "tpu":
+        # TPU VMEM budget: 512×512 fp32 d² tile + operands fits ~16 MiB.
+        return 512, 512
+    if d <= LOW_D:
+        return 4096, 4096
+    return 2048, 2048

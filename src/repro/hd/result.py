@@ -1,0 +1,64 @@
+"""Uniform result type returned by every front-door dispatch.
+
+``HDResult`` is a registered-dataclass pytree: the numeric fields (value,
+bounds, stats) are leaves that flow through jit/vmap/grad, while ``meta``
+(which backend actually ran, the resolved block sizes, optional wall-clock
+timing) is static auxiliary data — hashable, so results can cross jit
+boundaries without turning strings into tracers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+
+__all__ = ["HDMeta", "HDResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HDMeta:
+    """Static dispatch metadata (pytree aux data — must stay hashable)."""
+
+    variant: str
+    method: str
+    backend: str          # the CONCRETE backend that ran ("auto" resolved)
+    block_a: int
+    block_b: int
+    # Wall-clock seconds for the dispatched call (block_until_ready'd).
+    # Only populated by set_distance(measure=True) outside a trace; None
+    # inside jit/vmap where wall time is meaningless.
+    elapsed_s: float | None = None
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["value", "lower", "upper", "stats"],
+    meta_fields=["meta"],
+)
+@dataclasses.dataclass(frozen=True)
+class HDResult:
+    """What ``set_distance`` returns, whatever the (variant, method, backend).
+
+    value  — the estimate/distance, scalar fp32 (batched under vmap).
+    lower  — certified lower bound on the true distance, or None when the
+             method carries no one-sided guarantee (sampling, chamfer, …).
+             For exact methods lower == upper == value.
+    upper  — certified upper bound, or None (see lower).
+    stats  — method-specific numeric extras (pytree): e.g. ProHD's
+             ``estimate`` (the full ProHDEstimate), ``n_sel_a/b``,
+             sampling's ``n_sampled``, pruning's ``skip_fraction``.
+    meta   — static dispatch record (HDMeta).
+    """
+
+    value: jax.Array
+    lower: jax.Array | None
+    upper: jax.Array | None
+    stats: dict[str, Any]
+    meta: HDMeta
+
+    @property
+    def certified(self) -> bool:
+        """True when the result carries a two-sided certified interval."""
+        return self.lower is not None and self.upper is not None

@@ -34,6 +34,7 @@ from repro.core.exact import finalize_mins as _finalize
 from repro.kernels.hausdorff import hausdorff as K
 
 __all__ = [
+    "fit_block",
     "fused_min_sqdists",
     "min_sqdists",
     "directed_hausdorff",
@@ -55,8 +56,14 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _fit_block(block: int, n: int) -> int:
+def fit_block(block: int, n: int) -> int:
+    """The block edge the kernel actually runs for a requested ``block`` on
+    ``n`` rows (clamped to the next power of two ≥ 128).  Public so the
+    front door's diagnostics can mirror the wrapper's real tile grid."""
     return min(block, max(128, 1 << (n - 1).bit_length()))
+
+
+_fit_block = fit_block
 
 
 # The kernel keeps a (1, n_b_chunk) fp32 col-min row fully VMEM-resident;

@@ -28,7 +28,6 @@ def main() -> None:
     args = ap.parse_args()
 
     from repro.configs.base import load_arch
-    from repro.core import ProHDConfig, prohd
     from repro.data import synth
     from repro.models import gnn as gnn_mod
     from repro.models import recsys as rec_mod

@@ -16,11 +16,16 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import exact
 from repro.core.bounds import additive_bound
 from repro.core.projected import projected_hd
 from repro.core.prohd import ProHDConfig
 from repro.core import projections, selection
+from repro.hd import HDEngine
+
+# The serving HD sweeps go through the front door like every other
+# consumer; the engine is a frozen all-static pytree, so closing the
+# vmapped request function over it is free.
+_DIRECTED = HDEngine(variant="directed", method="exact", backend="tiled")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,8 +93,8 @@ def _masked_prohd(a, va, b, vb, *, alpha: float, m: int):
     vb_sel &= jnp.any(mask_b)
 
     hd = jnp.maximum(
-        exact.directed_hd_tiled(a_sel, b, valid_a=va_sel, valid_b=vb),
-        exact.directed_hd_tiled(b_sel, a, valid_a=vb_sel, valid_b=va),
+        _DIRECTED(a_sel, b, masks=(va_sel, vb)).value,
+        _DIRECTED(b_sel, a, masks=(vb_sel, va)).value,
     )
     pa_m = jnp.where(va[:, None], pa, jnp.nan)
     pb_m = jnp.where(vb[:, None], pb, jnp.nan)

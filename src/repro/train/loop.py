@@ -51,6 +51,44 @@ class TrainConfig:
 
 
 # ---------------------------------------------------------------------------
+# Set-distance metrics (losses / drift signals) via the repro.hd front door
+# ---------------------------------------------------------------------------
+
+
+def make_set_distance_metric(
+    variant: str = "chamfer",
+    method: str = "exact",
+    backend: str = "auto",
+    config=None,
+):
+    """Build a jit-friendly ``metric(x, y) -> HDResult`` for training code.
+
+    The training loop's auxiliary losses and drift hooks used to hard-wire
+    one estimator each (``prohd(...)`` here, ``chamfer(...)`` there); this
+    returns a front-door engine call instead, so the estimator, variant and
+    backend are run-time configuration.  Chamfer is the smooth choice for a
+    loss term; ``method="prohd"`` gives the certified drift signal (see
+    repro.core.streaming for the stateful monitor).
+
+    Differentiability caveat: only the pure-JAX backends ("tiled",
+    "dense") have autodiff rules — the Pallas kernel defines no VJP, and
+    ``backend="auto"`` picks it on TPU at ≥512 rows/side.  Pass
+    ``backend="tiled"`` explicitly when the metric sits under ``jax.grad``.
+    """
+    from repro.hd import HDConfig, HDEngine
+
+    engine = HDEngine(
+        variant=variant, method=method, backend=backend,
+        config=config if config is not None else HDConfig(),
+    )
+
+    def metric(x, y, *, key=None):
+        return engine(x, y, key=key)
+
+    return metric
+
+
+# ---------------------------------------------------------------------------
 # Step builders
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,376 @@
+"""The unified ``repro.hd`` front door: dispatch matrix, resolver, shims.
+
+The matrix test is the PR's acceptance contract: EVERY (variant, method,
+backend) cell either computes a value bit-for-bit equal to the
+pre-existing direct call, or raises the structured UnsupportedCombination.
+"""
+import itertools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import bounds, exact, variants
+from repro.core.adaptive import prohd_with_budget
+from repro.core.distributed import ShardedCloud, distributed_exact_hd, distributed_prohd
+from repro.core.prohd import ProHDConfig, prohd, prohd_masks
+from repro.core.sampling import random_sampling_hd, systematic_sampling_hd
+from repro.core import tile_bounds
+from repro.data.pointclouds import random_clouds
+from repro.hd import (
+    BACKENDS,
+    METHODS,
+    TILE_THRESHOLD,
+    VARIANTS,
+    HDConfig,
+    HDEngine,
+    UnsupportedCombination,
+    resolve_backend,
+    resolve_block_sizes,
+    set_distance,
+    supported_combinations,
+)
+from repro.kernels.hausdorff import ops as hd_ops
+
+KEY = jax.random.PRNGKey(7)
+SKEY = jax.random.PRNGKey(11)
+BLOCK = 128
+ALPHA = 0.1
+QUANTILE = 0.9
+BUDGET = 0.5
+
+
+@pytest.fixture(scope="module")
+def clouds():
+    return random_clouds(KEY, 160, 140, 8)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _cfg(**kw):
+    kw.setdefault("block_a", BLOCK)
+    kw.setdefault("block_b", BLOCK)
+    return HDConfig(alpha=ALPHA, quantile=QUANTILE, budget=BUDGET, **kw)
+
+
+def _full_clouds(a, b):
+    va = jnp.ones((a.shape[0],), jnp.bool_)
+    vb = jnp.ones((b.shape[0],), jnp.bool_)
+    return ShardedCloud(a, va), ShardedCloud(b, vb)
+
+
+# Direct (pre-existing) calls per supported cell, matching _cfg()'s knobs.
+# Cells marked exact=False are NEW capability (no historical entry point);
+# they are checked against the closest reference to tight tolerance.
+def _direct_value(variant, method, backend, a, b, mesh):
+    pc = ProHDConfig(alpha=ALPHA, subset_backend={"dense": "dense", "tiled": "tiled", "fused_pallas": "pallas"}.get(backend, "tiled"))
+    if (variant, method) == ("hausdorff", "exact"):
+        if backend == "dense":
+            return exact.hausdorff_dense(a, b), True
+        if backend == "tiled":
+            return exact.hausdorff_fused_tiled(a, b, block_a=BLOCK, block_b=BLOCK), True
+        if backend == "fused_pallas":
+            return hd_ops.hausdorff(a, b, block_a=BLOCK, block_b=BLOCK), True
+        A, B = _full_clouds(a, b)
+        return distributed_exact_hd(mesh, A, B), True
+    if (variant, method) == ("directed", "exact"):
+        if backend == "dense":
+            return exact.directed_hd_dense(a, b), True
+        if backend == "tiled":
+            return exact.directed_hd_tiled(a, b, block=BLOCK), True
+        return hd_ops.directed_hausdorff(a, b, block_a=BLOCK, block_b=BLOCK), True
+    if (variant, method) == ("partial", "exact"):
+        return variants.partial_hausdorff(a, b, quantile=QUANTILE), backend == "fused_pallas"
+    if (variant, method) == ("chamfer", "exact"):
+        return variants.chamfer(a, b), backend == "fused_pallas"
+    if (variant, method) == ("hausdorff", "prohd"):
+        if backend == "distributed":
+            A, B = _full_clouds(a, b)
+            return distributed_prohd(mesh, A, B, pc)[0], True
+        return prohd(a, b, pc).hd, True
+    if (variant, method) == ("hausdorff", "sampling"):
+        return random_sampling_hd(SKEY, a, b, ALPHA, block=BLOCK)[0], True
+    if (variant, method) == ("hausdorff", "adaptive"):
+        return prohd_with_budget(a, b, budget=BUDGET).estimate.hd, True
+    raise AssertionError(f"no direct call mapped for {(variant, method, backend)}")
+
+
+CONCRETE = [b for b in BACKENDS if b != "auto"]
+
+
+class TestDispatchMatrix:
+    @pytest.mark.parametrize(
+        "variant,method,backend", list(itertools.product(VARIANTS, METHODS, CONCRETE))
+    )
+    def test_every_cell_computes_or_raises(self, variant, method, backend, clouds, mesh1):
+        a, b = clouds
+        supported = (variant, method, backend) in supported_combinations()
+        kwargs = dict(
+            variant=variant, method=method, backend=backend, config=_cfg(
+                prohd=ProHDConfig(
+                    alpha=ALPHA,
+                    subset_backend={"dense": "dense", "tiled": "tiled", "fused_pallas": "pallas"}.get(backend, "tiled"),
+                )
+                if method == "prohd"
+                else None
+            ),
+            key=SKEY, mesh=mesh1 if backend == "distributed" else None,
+        )
+        if not supported:
+            with pytest.raises(UnsupportedCombination) as ei:
+                set_distance(a, b, **kwargs)
+            # structured: the error carries its axes + the recovery set
+            assert (ei.value.variant, ei.value.method, ei.value.backend) == (
+                variant, method, backend,
+            )
+            assert all(s in CONCRETE for s in ei.value.supported)
+            return
+        res = set_distance(a, b, **kwargs)
+        assert res.meta.backend == backend
+        want, bitwise = _direct_value(variant, method, backend, a, b, mesh1)
+        got, want = np.asarray(res.value), np.asarray(want)
+        if bitwise:
+            assert got.tobytes() == want.tobytes(), (variant, method, backend, got, want)
+        else:
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_matrix_size_sane(self):
+        combos = supported_combinations()
+        assert len(combos) == len(set(combos))
+        # every served cell names known axis values
+        for v, m, b in combos:
+            assert v in VARIANTS and m in METHODS and b in CONCRETE
+
+    def test_unknown_axis_values_raise_value_error(self, clouds):
+        a, b = clouds
+        with pytest.raises(ValueError, match="unknown variant"):
+            set_distance(a, b, variant="levenshtein")
+        with pytest.raises(ValueError, match="unknown method"):
+            set_distance(a, b, method="oracle")
+        with pytest.raises(ValueError, match="unknown backend"):
+            set_distance(a, b, backend="quantum")
+
+    def test_distributed_without_mesh_is_actionable(self, clouds):
+        a, b = clouds
+        with pytest.raises(ValueError, match="requires mesh="):
+            set_distance(a, b, backend="distributed")
+
+    def test_subset_methods_reject_masks(self, clouds):
+        a, b = clouds
+        va = jnp.ones((a.shape[0],), jnp.bool_)
+        for method in ("prohd", "sampling", "adaptive"):
+            with pytest.raises(ValueError, match="does not accept masks"):
+                set_distance(a, b, method=method, backend="tiled", key=SKEY,
+                             masks=(va, None))
+
+    def test_sampling_requires_key(self, clouds):
+        a, b = clouds
+        with pytest.raises(ValueError, match="requires key="):
+            set_distance(a, b, method="sampling", backend="tiled")
+
+
+class TestAutoResolution:
+    def test_auto_picks_fused_pallas_above_tile_threshold_single_device(self):
+        # the acceptance rule: single-device inputs at/above the kernel's
+        # native tile edge take the fused Pallas path where it is native
+        n = TILE_THRESHOLD
+        assert resolve_backend("hausdorff", "exact", n, n, 64, device_kind="tpu", n_devices=1) == "fused_pallas"
+        assert resolve_backend("hausdorff", "exact", 8 * n, 8 * n, 256, device_kind="tpu", n_devices=1) == "fused_pallas"
+        assert resolve_backend("hausdorff", "prohd", n, n, 64, device_kind="tpu", n_devices=1) == "fused_pallas"
+
+    def test_auto_below_threshold_is_dense(self):
+        n = TILE_THRESHOLD
+        assert resolve_backend("hausdorff", "exact", n - 1, n, 16, device_kind="tpu") == "dense"
+        assert resolve_backend("hausdorff", "exact", 64, 64, 16, device_kind="cpu") == "dense"
+
+    def test_auto_multi_device_is_distributed(self):
+        assert resolve_backend("hausdorff", "exact", 4096, 4096, 64, device_kind="tpu", n_devices=8) == "distributed"
+        # directed has no distributed cell → falls back to single-device rules
+        assert resolve_backend("directed", "exact", 4096, 4096, 64, device_kind="tpu", n_devices=8) == "fused_pallas"
+
+    def test_auto_cpu_never_picks_interpret_pallas(self):
+        # interpret-mode Pallas is a debugging path; auto on cpu/gpu uses
+        # the pure-JAX fused scan instead
+        for n in (TILE_THRESHOLD, 4 * TILE_THRESHOLD):
+            assert resolve_backend("hausdorff", "exact", n, n, 64, device_kind="cpu") == "tiled"
+            assert resolve_backend("hausdorff", "exact", n, n, 64, device_kind="gpu") == "tiled"
+
+    def test_auto_end_to_end_sets_meta(self, clouds):
+        a, b = clouds
+        res = set_distance(a, b)  # 160×140 on cpu → dense
+        assert res.meta.backend == "dense"
+        assert res.meta.method == "exact"
+
+    def test_unserved_method_raises_through_auto(self, clouds):
+        a, b = clouds
+        with pytest.raises(UnsupportedCombination):
+            set_distance(a, b, variant="partial", method="sampling", key=SKEY)
+
+
+class TestBlockResolver:
+    """ROADMAP autotune defaults — pure function, no device needed."""
+
+    def test_cpu_low_d(self):
+        assert resolve_block_sizes(100_000, 100_000, 64, device_kind="cpu") == (4096, 4096)
+        assert resolve_block_sizes(100_000, 100_000, 8, device_kind="cpu") == (4096, 4096)
+
+    def test_cpu_high_d(self):
+        assert resolve_block_sizes(100_000, 100_000, 65, device_kind="cpu") == (2048, 2048)
+        assert resolve_block_sizes(100_000, 100_000, 512, device_kind="cpu") == (2048, 2048)
+
+    def test_tpu_vmem_budget(self):
+        assert resolve_block_sizes(100_000, 100_000, 64, device_kind="tpu") == (512, 512)
+        assert resolve_block_sizes(100_000, 100_000, 512, device_kind="tpu") == (512, 512)
+
+    def test_pallas_backend_uses_kernel_tiles_anywhere(self):
+        assert resolve_block_sizes(4096, 4096, 64, device_kind="cpu", backend="fused_pallas") == (512, 512)
+
+
+class TestCompatShims:
+    """Old repro.core names: importable, warning, identical values."""
+
+    @pytest.mark.parametrize(
+        "old_call,new_call",
+        [
+            (
+                lambda a, b: core.hausdorff_dense(a, b),
+                lambda a, b: set_distance(a, b, backend="dense").value,
+            ),
+            (
+                lambda a, b: core.hausdorff_tiled(a, b, block=BLOCK),
+                lambda a, b: set_distance(a, b, backend="tiled", config=_cfg()).value,
+            ),
+            (
+                lambda a, b: core.hausdorff_fused_tiled(a, b, block_a=BLOCK, block_b=BLOCK),
+                lambda a, b: set_distance(a, b, backend="tiled", config=_cfg()).value,
+            ),
+            (
+                lambda a, b: core.chamfer(a, b),
+                lambda a, b: set_distance(a, b, variant="chamfer", backend="fused_pallas").value,
+            ),
+            (
+                lambda a, b: core.partial_hausdorff(a, b, quantile=QUANTILE),
+                lambda a, b: set_distance(
+                    a, b, variant="partial", backend="fused_pallas",
+                    config=HDConfig(quantile=QUANTILE),
+                ).value,
+            ),
+            (
+                lambda a, b: core.prohd(a, b, ProHDConfig(alpha=ALPHA)).hd,
+                lambda a, b: set_distance(
+                    a, b, method="prohd", backend="tiled",
+                    config=HDConfig(prohd=ProHDConfig(alpha=ALPHA)),
+                ).value,
+            ),
+            (
+                lambda a, b: core.random_sampling_hd(SKEY, a, b, ALPHA)[0],
+                lambda a, b: set_distance(
+                    a, b, method="sampling", backend="tiled", key=SKEY,
+                    config=HDConfig(alpha=ALPHA),
+                ).value,
+            ),
+            (
+                lambda a, b: core.systematic_sampling_hd(SKEY, a, b, ALPHA)[0],
+                lambda a, b: set_distance(
+                    a, b, method="sampling", backend="tiled", key=SKEY,
+                    config=HDConfig(alpha=ALPHA, sampler="systematic"),
+                ).value,
+            ),
+            (
+                lambda a, b: core.prohd_with_budget(a, b, budget=BUDGET).estimate.hd,
+                lambda a, b: set_distance(
+                    a, b, method="adaptive", backend="tiled",
+                    config=HDConfig(budget=BUDGET),
+                ).value,
+            ),
+        ],
+        ids=[
+            "hausdorff_dense", "hausdorff_tiled", "hausdorff_fused_tiled",
+            "chamfer", "partial_hausdorff", "prohd", "random_sampling_hd",
+            "systematic_sampling_hd", "prohd_with_budget",
+        ],
+    )
+    def test_old_name_warns_and_matches_front_door(self, old_call, new_call, clouds):
+        a, b = clouds
+        with pytest.deprecated_call():
+            old = old_call(a, b)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            new = new_call(a, b)  # the front door itself must NOT warn
+        assert np.asarray(old).tobytes() == np.asarray(new).tobytes()
+
+
+class TestHDResult:
+    def test_exact_bounds_collapse_to_value(self, clouds):
+        a, b = clouds
+        res = set_distance(a, b, backend="tiled", config=_cfg())
+        assert res.certified
+        assert float(res.lower) == float(res.value) == float(res.upper)
+
+    def test_prohd_bounds_match_additive_bound(self, clouds):
+        """HDResult's interval IS the §II-E certificate: lower = hd_proj,
+        upper − lower = 2·min_u δ(u) from core/bounds.additive_bound."""
+        a, b = clouds
+        pc = ProHDConfig(alpha=ALPHA)
+        res = set_distance(a, b, method="prohd", backend="tiled", config=HDConfig(prohd=pc))
+        _, _, proj_a, proj_b = prohd_masks(a, b, pc)
+        want = bounds.additive_bound(a, b, proj_a, proj_b)
+        est = res.stats["estimate"]
+        assert np.asarray(est.bound).tobytes() == np.asarray(want).tobytes()
+        np.testing.assert_allclose(float(res.upper) - float(res.lower), float(want), rtol=1e-5)
+        assert float(res.lower) <= float(res.value) + 1e-6
+
+    def test_uncertified_methods_return_none_bounds(self, clouds):
+        a, b = clouds
+        res = set_distance(a, b, variant="chamfer", backend="tiled", config=_cfg())
+        assert not res.certified and res.lower is None and res.upper is None
+        res = set_distance(a, b, method="sampling", backend="tiled", key=SKEY, config=_cfg())
+        assert not res.certified
+
+    def test_measure_records_wall_time(self, clouds):
+        a, b = clouds
+        res = set_distance(a, b, backend="dense", measure=True)
+        assert res.meta.elapsed_s is not None and res.meta.elapsed_s > 0
+
+    def test_skip_fraction_stat_with_prune_projs(self, clouds):
+        a, b = clouds
+        pc = ProHDConfig(alpha=ALPHA)
+        _, _, proj_a, proj_b = prohd_masks(a, b, pc)
+        a_s, pa_s, _, _ = tile_bounds.order_by_projection(a, proj_a)
+        b_s, pb_s, _, _ = tile_bounds.order_by_projection(b, proj_b)
+        plain = set_distance(a_s, b_s, backend="tiled", config=_cfg())
+        pruned = set_distance(
+            a_s, b_s, backend="tiled", config=_cfg(), prune_projs=(pa_s, pb_s)
+        )
+        frac = float(pruned.stats["skip_fraction"])
+        assert 0.0 <= frac <= 1.0
+        # pruning is certified: bitwise-equal result
+        assert np.asarray(plain.value).tobytes() == np.asarray(pruned.value).tobytes()
+
+    def test_result_is_jit_and_vmap_friendly(self, clouds):
+        a, b = clouds
+        engine = HDEngine(variant="chamfer", backend="tiled", config=_cfg())
+        single = engine(a[:64], b[:64]).value
+        batched = jax.jit(jax.vmap(lambda x, y: engine(x, y).value))(
+            jnp.stack([a[:64], a[64:128]]), jnp.stack([b[:64], b[64:128]])
+        )
+        assert batched.shape == (2,)
+        np.testing.assert_allclose(float(batched[0]), float(single), rtol=1e-6)
+
+    def test_result_roundtrips_through_jit_as_pytree(self, clouds):
+        a, b = clouds
+
+        @jax.jit
+        def f(x, y):
+            return set_distance(x, y, backend="tiled", config=_cfg())
+
+        res = f(a, b)
+        assert res.meta.backend == "tiled"
+        want = exact.hausdorff_fused_tiled(a, b, block_a=BLOCK, block_b=BLOCK)
+        assert np.asarray(res.value).tobytes() == np.asarray(want).tobytes()

@@ -80,3 +80,64 @@ class TestAdaptiveAlpha:
         loose = prohd_with_budget(a, b, budget=100.0, relative=False, max_steps=1)
         tight = prohd_with_budget(a, b, budget=0.5, relative=False, max_steps=8)
         assert tight.certified_gap <= loose.certified_gap + 1e-6
+
+
+class TestPartialEdgeQuantiles:
+    """Boundary quantiles + all-masked rows (PR 2 satellite coverage)."""
+
+    def _dense_partial(self, a, b, q):
+        d = np.linalg.norm(np.asarray(a)[:, None] - np.asarray(b)[None], axis=-1)
+        min_a, min_b = d.min(1), d.min(0)
+
+        def kth_ranked(mins, q):
+            # Huttenlocher ranking: K-th smallest min-distance, K = ⌈q·n⌉
+            # (clamped to ≥1); q=1.0 recovers the max, i.e. plain HD.
+            k = max(1, int(np.ceil(q * mins.size)))
+            return np.sort(mins)[k - 1]
+
+        return max(kth_ranked(min_a, q), kth_ranked(min_b, q))
+
+    def test_quantile_zero_is_smallest_min_distance(self):
+        a, b = random_clouds(KEY, 120, 90, 6)
+        got = float(partial_hausdorff(a, b, quantile=0.0))
+        np.testing.assert_allclose(got, self._dense_partial(a, b, 0.0), rtol=1e-5)
+        # q=0 is the floor of the quantile family
+        assert got <= float(partial_hausdorff(a, b, quantile=0.5)) + 1e-6
+
+    def test_quantile_one_is_hausdorff_with_masks(self):
+        a, b = random_clouds(KEY, 128, 100, 6)
+        va = jnp.arange(128) < 100
+        vb = jnp.arange(100) < 80
+        ph = partial_hausdorff(a, b, quantile=1.0, valid_a=va, valid_b=vb)
+        h = hausdorff_dense(a[:100], b[:80])
+        np.testing.assert_allclose(float(ph), float(h), rtol=1e-5)
+
+    def test_all_masked_both_sides_is_zero(self):
+        # empty vs empty: both quantiles collapse to the empty-set
+        # convention (0.0, matching exact.finalize_mins), never NaN
+        a, b = random_clouds(KEY, 64, 64, 4)
+        va = jnp.zeros((64,), jnp.bool_)
+        for q in (0.0, 0.5, 1.0):
+            got = float(partial_hausdorff(a, b, quantile=q, valid_a=va, valid_b=va))
+            assert got == 0.0 and not np.isnan(got)
+
+    def test_all_masked_query_side_is_infinite(self):
+        # empty A vs non-empty B: the B→A inner min runs over an empty
+        # target set → +inf, same semantics as the exact variants
+        a, b = random_clouds(KEY, 64, 64, 4)
+        va = jnp.zeros((64,), jnp.bool_)
+        got = float(partial_hausdorff(a, b, quantile=0.9, valid_a=va))
+        assert np.isinf(got)
+
+    def test_front_door_masked_quantiles_match_direct(self):
+        from repro.hd import HDConfig, set_distance
+
+        a, b = random_clouds(KEY, 96, 80, 6)
+        va = jnp.arange(96) < 70
+        for q in (0.0, 0.5, 1.0):
+            direct = partial_hausdorff(a, b, quantile=q, valid_a=va)
+            via = set_distance(
+                a, b, variant="partial", backend="fused_pallas",
+                masks=(va, None), config=HDConfig(quantile=q),
+            ).value
+            assert np.asarray(direct).tobytes() == np.asarray(via).tobytes()
