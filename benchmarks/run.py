@@ -30,7 +30,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch",
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index",
     )
     ap.add_argument(
         "--quick", action="store_true", help="fig1 + phases + fused only"
@@ -60,6 +60,7 @@ def main() -> None:
         "backends": tables.bench_backends,
         "fused": tables.bench_fused_vs_twosweep,
         "dispatch": tables.bench_dispatch_overhead,
+        "index": tables.bench_index,
     }
     if args.quick:
         selected = ["fig1", "phases", "fused"]

@@ -1,0 +1,65 @@
+"""HD-k-NN retrieval over a 10k-set corpus — the paper's vector-DB story.
+
+Builds a :class:`repro.index.SetStore` of 10,000 ragged point sets
+(separated Gaussian clusters), then serves a top-10 Hausdorff-nearest-sets
+query two ways through the same front door:
+
+- ``repro.hd.search(...)``                  — the certified bound cascade
+- ``repro.hd.search(..., method="exact")``  — brute force over the corpus
+
+and checks the cascade returned the IDENTICAL top-k (it provably does —
+candidates are only pruned when their certified lower bound exceeds the
+k-th smallest certified upper bound).
+
+    PYTHONPATH=src python examples/retrieval.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pointclouds import clustered_sets
+from repro.hd import search
+from repro.index import SetStore
+
+N_SETS, D, K = 10_000, 16, 10
+
+key = jax.random.PRNGKey(0)
+sets, labels = clustered_sets(key, N_SETS, D, sizes=(64, 128, 256))
+
+t0 = time.perf_counter()
+store = SetStore(dim=D)
+store.add_many(sets)
+store.summaries()        # materialize the packed corpus up front
+store.packed_buckets()
+print(
+    f"corpus: {store.n_sets} sets / {store.total_points} points packed into "
+    f"buckets {list(store.bucket_capacities)} in {time.perf_counter()-t0:.2f}s"
+)
+
+# a fresh query blob near one cluster
+rng = np.random.RandomState(1)
+query = np.asarray(sets[42]).mean(axis=0) + rng.randn(128, D).astype(np.float32) * 0.5
+
+res = search(query, store, K, measure=True)          # warm (compiles)
+res = search(query, store, K, measure=True)
+print(f"\ncascade top-{K} in {res.meta.elapsed_s*1e3:.0f}ms:")
+for sid, v in zip(res.ids, res.values):
+    print(f"  set {sid:5d}  (cluster {labels[sid]:2d})  H = {v:.4f}")
+s = res.stats
+print(
+    f"stats: {s['candidates_scanned']} candidates -> "
+    f"{s['stage0_pruned']} pruned by summary bounds, "
+    f"{s['stage1_pruned']} by masked ProHD, "
+    f"{s['exact_refines']} exact refines "
+    f"(prune_fraction={s['prune_fraction']:.4f})"
+)
+
+ref = search(query, store, K, method="exact", measure=True)
+same = np.array_equal(res.ids, ref.ids) and np.array_equal(res.values, ref.values)
+print(
+    f"\nbrute force: {ref.meta.elapsed_s:.1f}s "
+    f"({ref.meta.elapsed_s/res.meta.elapsed_s:.0f}x slower), "
+    f"identical top-{K}: {same}"
+)
+assert same

@@ -36,4 +36,27 @@ print(f"front-door dispatch overhead: {overhead:+.2f}% "
       f"(direct {direct:.0f}us, front door {front:.0f}us)")
 assert overhead < 5.0, f"front-door overhead {overhead:.2f}% exceeds the 5% budget"
 PY
+
+  # PR 3 gate: on a separated-clusters corpus the certified bound cascade
+  # must (a) return top-k ids AND values bit-for-bit identical to brute
+  # force, (b) perform < 50% of brute force's exact refines, and
+  # (c) record prune_fraction > 0.5 in BENCH_PR3.json.
+  echo "== index-cascade benchmark (JSON -> BENCH_PR3.json) =="
+  python -m benchmarks.run --only index --json BENCH_PR3.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR3.json"))["rows"]}
+derived = dict(kv.split("=", 1) for kv in rows["index/cascade"]["derived"].split(";"))
+refines = int(derived["exact_refines"])
+candidates = int(derived["candidates"])
+prune = float(derived["prune_fraction"])
+identical = derived["identical"] == "True"
+print(f"index cascade: {refines}/{candidates} exact refines "
+      f"(prune_fraction={prune:.3f}), identical top-k: {identical}")
+assert identical, "cascade top-k differs from brute force"
+assert refines < 0.5 * candidates, (
+    f"cascade did {refines} exact refines, >= 50% of the {candidates}-set corpus")
+assert prune > 0.5, f"prune_fraction {prune:.3f} <= 0.5 on a separated corpus"
+PY
 fi

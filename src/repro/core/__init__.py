@@ -60,6 +60,12 @@ def _front_door():
 
 
 def _deprecated(old: str, new: str) -> None:
+    # stacklevel walks: 1 = this helper, 2 = the shim function that called
+    # it, 3 = the USER's frame.  The warning must be attributed to the
+    # caller's file/line (that is the code that needs migrating), never to
+    # this module — pinned by tests/test_deprecation.py.  Every shim calls
+    # this helper directly; adding an intermediate frame requires bumping
+    # the stacklevel with it.
     _warnings.warn(
         f"repro.core.{old} is deprecated; use repro.hd.{new}",
         DeprecationWarning,

@@ -1,0 +1,229 @@
+"""Masked (padding-tolerant) ProHD: estimate + certificate on padded clouds.
+
+The serving layer, the corpus index and the drift monitor all operate on
+fixed-capacity padded buffers with row-validity masks (the price of
+compile-once batching under jit/vmap).  ProHD's reference implementation
+(``repro.core.prohd``) deliberately rejects masks — its selection math is
+derived for full clouds — so the masked variant lives here, built from the
+same primitives, with every step made validity-aware:
+
+- centroid / PCA directions from masked moments (invalid rows contribute
+  zero weight to the mean and the Gram matrix);
+- α-extreme selection per direction with invalid rows pushed out of both
+  tails (±BIG sentinels), exactly the scheme ``repro.serve`` has always
+  used;
+- 1-D projected Hausdorff with invalid target rows sorted out of the
+  searchsorted window and invalid query rows excluded from the max — this
+  replaces the historical serve-layer shortcut of zero-filling invalid
+  projections, which injected a phantom point at the origin into every
+  1-D cloud and silently broke the §II-E certificate;
+- the additive bound's per-direction δ over valid rows only.
+
+``masked_prohd_certified`` returns the paper's full triple: the subset
+point estimate ``hd`` (full-inner, so it never overestimates — §II-E.5),
+the certified lower bound ``lower = max_u H_u``, and the certified upper
+bound ``upper = lower + 2·min_u δ(u)`` (Eq. 5).  All three are exact
+functions of the VALID rows only: any padding layout gives the same
+answers.
+
+Everything is shape-static and jit/vmap-friendly; the corpus cascade
+(``repro.index``) vmaps ``masked_prohd_certified`` across the candidate
+axis of each storage bucket.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact, selection
+
+__all__ = [
+    "MaskedCertificate",
+    "masked_centroid",
+    "masked_direction_set",
+    "masked_projected_hd",
+    "masked_additive_bound",
+    "masked_prohd_certified",
+]
+
+# Same large-but-finite sentinel as tile_bounds: ±inf would poison interval
+# arithmetic (inf − inf = NaN) in all-invalid corner cases.
+_BIG = 1e30
+
+
+def masked_centroid(points: jnp.ndarray, valid_f: jnp.ndarray) -> jnp.ndarray:
+    """Mean over valid rows; ``valid_f`` is the float mask (n,)."""
+    s = jnp.sum(points * valid_f[:, None], axis=0)
+    return s / jnp.maximum(jnp.sum(valid_f), 1.0)
+
+
+def masked_direction_set(a, va_f, b, vb_f, m: int) -> jnp.ndarray:
+    """Centroid direction + top-m masked-Gram PCA directions, (D, m+1).
+
+    The masked analogue of ``projections.direction_set``: means and the
+    Gram matrix accumulate valid rows only (invalid rows are zero-weighted,
+    which for the Gram equals dropping them).
+    """
+    ca = masked_centroid(a, va_f)
+    cb = masked_centroid(b, vb_f)
+    u0 = cb - ca
+    norm = jnp.linalg.norm(u0)
+    e1 = jnp.zeros_like(u0).at[0].set(1.0)
+    u0 = jnp.where(norm < 1e-9, e1, u0 / jnp.maximum(norm, 1e-9))
+
+    z = jnp.concatenate([a, b])
+    vz = jnp.concatenate([va_f, vb_f])
+    mean = jnp.sum(z * vz[:, None], axis=0) / jnp.maximum(jnp.sum(vz), 1.0)
+    zc = (z - mean) * vz[:, None]
+    gram = jnp.matmul(zc.T, zc, preferred_element_type=jnp.float32)
+    _, v = jnp.linalg.eigh(gram)  # ascending
+    return jnp.concatenate([u0[:, None], v[:, ::-1][:, :m]], axis=1)
+
+
+def _masked_directed_hd_1d(pa, va, pb, vb) -> jnp.ndarray:
+    """max over valid a of min over valid b of |pa − pb| (fixed shapes).
+
+    Invalid targets are +BIG-sentineled so they sort to the tail; candidate
+    indices are clipped into the valid prefix, so every query measures a
+    REAL valid target.  Invalid queries contribute −inf to the max.  The
+    result is clamped at 0, which also covers the degenerate all-invalid
+    sides (a distance is nonnegative, and the empty-set directed HD is 0.0
+    by the same convention as ``exact.finalize_mins``).
+    """
+    pbv = jnp.where(vb, pb.astype(jnp.float32), _BIG)
+    pbs = jnp.sort(pbv)
+    n_valid = jnp.sum(vb.astype(jnp.int32))
+    hi = jnp.maximum(n_valid - 1, 0)
+    pos = jnp.searchsorted(pbs, pa.astype(jnp.float32))
+    left = pbs[jnp.clip(pos - 1, 0, hi)]
+    right = pbs[jnp.clip(pos, 0, hi)]
+    nearest = jnp.minimum(jnp.abs(pa - left), jnp.abs(pa - right))
+    nearest = jnp.where(va, nearest, -jnp.inf)
+    # n_valid == 0 leaves only ±BIG sentinels to measure against; force the
+    # empty-target convention rather than returning a sentinel-sized "gap".
+    return jnp.where(n_valid > 0, jnp.maximum(jnp.max(nearest), 0.0), 0.0)
+
+
+def masked_projected_hd(proj_a, valid_a, proj_b, valid_b, *, directed: bool = False):
+    """max_u H_u over direction columns, valid rows only — certified ≤ H.
+
+    ``directed=True`` keeps only the A→B sweep (certified ≤ h(A→B)).
+    """
+    fwd = jax.vmap(_masked_directed_hd_1d, in_axes=(1, None, 1, None))(
+        proj_a, valid_a, proj_b, valid_b
+    )
+    if directed:
+        return jnp.max(fwd)
+    bwd = jax.vmap(_masked_directed_hd_1d, in_axes=(1, None, 1, None))(
+        proj_b, valid_b, proj_a, valid_a
+    )
+    return jnp.max(jnp.maximum(fwd, bwd))
+
+
+def _masked_delta(points, projs, valid) -> jnp.ndarray:
+    """Per-direction max orthogonal deviation over VALID rows, (m,)."""
+    p32 = points.astype(jnp.float32)
+    sq_norms = jnp.sum(p32 * p32, axis=1, keepdims=True)
+    orth_sq = jnp.maximum(sq_norms - projs.astype(jnp.float32) ** 2, 0.0)
+    orth_sq = jnp.where(valid[:, None], orth_sq, -jnp.inf)
+    return jnp.sqrt(jnp.maximum(jnp.max(orth_sq, axis=0), 0.0))
+
+
+def masked_additive_bound(a, proj_a, valid_a, b, proj_b, valid_b) -> jnp.ndarray:
+    """2 · min_u max(δ_A(u), δ_B(u)) over valid rows (Eq. 5, masked)."""
+    da = _masked_delta(a, proj_a, valid_a)
+    db = _masked_delta(b, proj_b, valid_b)
+    return 2.0 * jnp.min(jnp.maximum(da, db))
+
+
+class MaskedCertificate(NamedTuple):
+    """ProHD estimate + §II-E certificate on masked clouds.
+
+    ``hd`` (full-inner subset estimate) and ``lower`` (max_u H_u) are BOTH
+    certified lower bounds on the true masked H; ``upper`` bounds it from
+    above.  For directed queries the same holds against h(A→B).
+    """
+
+    hd: jnp.ndarray
+    lower: jnp.ndarray
+    upper: jnp.ndarray
+
+
+def _select_extreme_mask(proj, valid, m: int, k_centroid: int, k_pca: int):
+    """Union of per-direction α-extreme masks, invalid rows excluded."""
+    mask = jnp.zeros(proj.shape[:1], bool)
+    for col in range(proj.shape[1]):
+        k = k_centroid if col == 0 else k_pca
+        hi = jnp.where(valid, proj[:, col], -_BIG)
+        lo = jnp.where(valid, proj[:, col], _BIG)
+        mask |= selection.extreme_mask(hi, k) & valid
+        mask |= selection.extreme_mask(-lo, k) & valid
+    return mask
+
+
+def masked_prohd_certified(
+    a,
+    valid_a,
+    b,
+    valid_b,
+    *,
+    alpha: float,
+    m: int,
+    directed: bool = False,
+    block: int = 2048,
+) -> MaskedCertificate:
+    """Full masked ProHD pass: subset estimate + certified interval.
+
+    a: (n_a, D) with (n_a,) bool ``valid_a`` (True = real row); same for b.
+    ``alpha``/``m`` as in ``ProHDConfig`` (k counts are derived from the
+    PADDED sizes — static under jit; a looser α on a sparse buffer only
+    selects more rows, never fewer, so the certificate is unaffected).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    va_f = valid_a.astype(jnp.float32)
+    vb_f = valid_b.astype(jnp.float32)
+    n_a, _ = a.shape
+    n_b = b.shape[0]
+
+    dirs = masked_direction_set(a, va_f, b, vb_f, m)
+    proj_a = jnp.matmul(a, dirs, preferred_element_type=jnp.float32)
+    proj_b = jnp.matmul(b, dirs, preferred_element_type=jnp.float32)
+
+    k_a = selection.alpha_count(n_a, alpha)
+    k_b = selection.alpha_count(n_b, alpha)
+    k_a_pca = max(1, k_a // max(m, 1))
+    k_b_pca = max(1, k_b // max(m, 1))
+    mask_a = _select_extreme_mask(proj_a, valid_a, m, k_a, k_a_pca)
+
+    cap_a = selection.selection_capacity(n_a, m, alpha)
+    a_sel, va_sel = selection.take_selected(a, mask_a, cap_a)
+    va_sel &= jnp.any(mask_a)
+
+    if directed:
+        hd = exact.directed_hd_tiled(a_sel, b, valid_a=va_sel, valid_b=valid_b, block=block)
+    else:
+        mask_b = _select_extreme_mask(proj_b, valid_b, m, k_b, k_b_pca)
+        cap_b = selection.selection_capacity(n_b, m, alpha)
+        b_sel, vb_sel = selection.take_selected(b, mask_b, cap_b)
+        vb_sel &= jnp.any(mask_b)
+        # Full-inner mode (queries-from-subset vs full set): never
+        # overestimates, so hd is itself a certified lower bound.
+        hd = jnp.maximum(
+            exact.directed_hd_tiled(a_sel, b, valid_a=va_sel, valid_b=valid_b, block=block),
+            exact.directed_hd_tiled(b_sel, a, valid_a=vb_sel, valid_b=valid_a, block=block),
+        )
+
+    lower = masked_projected_hd(proj_a, valid_a, proj_b, valid_b, directed=directed)
+    upper = lower + masked_additive_bound(a, proj_a, valid_a, b, proj_b, valid_b)
+    return MaskedCertificate(hd=hd, lower=lower, upper=upper)
+
+
+# jit entry point for one-off (non-vmapped) callers; the cascade wraps its
+# own vmapped version per storage bucket.
+masked_prohd_certified_jit = functools.partial(
+    jax.jit, static_argnames=("alpha", "m", "directed", "block")
+)(masked_prohd_certified)

@@ -15,6 +15,7 @@ __all__ = [
     "gaussian_mixture_pca",
     "higgs_like",
     "make_dataset",
+    "clustered_sets",
 ]
 
 
@@ -64,6 +65,43 @@ def higgs_like(key: jax.Array, n_a: int, n_b: int, *, d: int = 28, dtype=jnp.flo
     shift = jnp.concatenate([jnp.full((d // 4,), 0.8), jnp.zeros((d - d // 4,))])
     b = jax.random.normal(k3, (n_b, d)) @ mixing * 1.15 + shift
     return a.astype(dtype), b.astype(dtype)
+
+
+def clustered_sets(
+    key: jax.Array,
+    n_sets: int,
+    d: int,
+    *,
+    sizes: tuple[int, ...] = (64, 128, 256),
+    n_clusters: int = 32,
+    spread: float = 10.0,
+    sigma: float = 0.5,
+):
+    """Separated-clusters CORPUS: ``n_sets`` ragged point sets for retrieval.
+
+    Each set is a Gaussian blob (σ = ``sigma``) around one of ``n_clusters``
+    well-separated centers (N(0, spread²) per coordinate), with its size
+    drawn from ``sizes``.  The separation is the regime the paper's
+    vector-DB story targets — and the one where the index cascade's
+    certified bounds actually prune (sets in far clusters are resolved
+    from summaries alone).
+
+    Returns ``(sets, labels)``: a list of (n_i, d) float32 numpy arrays and
+    an (n_sets,) int array of cluster assignments.  Host-side numpy by
+    design — corpus construction is data loading, not accelerator work.
+    """
+    import numpy as np
+
+    seed = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(n_clusters, d).astype(np.float32) * spread
+    labels = rng.randint(0, n_clusters, size=n_sets)
+    sets = []
+    for i in range(n_sets):
+        n = int(rng.choice(sizes))
+        pts = centers[labels[i]] + rng.randn(n, d).astype(np.float32) * sigma
+        sets.append(pts)
+    return sets, labels
 
 
 def make_dataset(name: str, key: jax.Array, n_a: int, n_b: int, d: int, **kw):

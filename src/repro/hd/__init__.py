@@ -17,6 +17,7 @@ Layout:
     result    — HDResult / HDMeta
     methods   — the registered adapters onto repro.core / repro.kernels
     engine    — set_distance + the jit/vmap-friendly HDEngine
+    search    — corpus top-k retrieval over a repro.index.SetStore
 
 The old module-level callables (``repro.core.prohd``,
 ``repro.core.hausdorff_fused_tiled``, …) remain importable as deprecated
@@ -41,9 +42,11 @@ from repro.hd.resolver import (
     resolve_block_sizes,
 )
 from repro.hd.result import HDMeta, HDResult
+from repro.hd.search import search
 
 __all__ = [
     "set_distance",
+    "search",
     "HDEngine",
     "HDConfig",
     "BACKEND_FOR_SUBSET",

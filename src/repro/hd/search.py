@@ -1,0 +1,52 @@
+"""Front-door corpus retrieval: ``repro.hd.search``.
+
+The corpus analogue of :func:`repro.hd.set_distance`: one entry point that
+takes a query cloud and a :class:`repro.index.SetStore` and returns the
+top-k nearest stored sets under a set distance, with the same axis
+discipline as the pairwise front door —
+
+    variant — hausdorff | directed            (which set distance ranks)
+    method  — cascade | exact                 (certified bound cascade, or
+                                               brute force over the corpus)
+    backend — dense | tiled | fused_pallas | auto
+                                              (machinery for the exact
+                                               refines, resolved per set
+                                               size like any exact call)
+
+The heavy lifting lives in ``repro.index.cascade`` (imported lazily here —
+``repro.index`` itself dispatches its exact refines back through this
+package).  Results reuse the front door's vocabulary: ``SearchResult.meta``
+is an :class:`HDMeta`, and ``stats`` carries ``candidates_scanned``,
+``exact_refines`` and ``prune_fraction``.
+"""
+from __future__ import annotations
+
+from repro.hd.config import HDConfig
+
+__all__ = ["search"]
+
+
+def search(
+    query,
+    store,
+    k: int,
+    *,
+    variant: str = "hausdorff",
+    method: str = "cascade",
+    backend: str = "auto",
+    config: HDConfig | None = None,
+    measure: bool = False,
+):
+    """Top-k nearest stored sets to ``query``; see repro.index.cascade.search.
+
+    The cascade's top-k is provably identical to ``method="exact"`` (brute
+    force) — certified pruning only ever discards candidates that at least
+    k others beat outright.
+    """
+    from repro.index import cascade
+
+    return cascade.search(
+        query, store, k,
+        variant=variant, method=method, backend=backend,
+        config=config, measure=measure,
+    )

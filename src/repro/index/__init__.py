@@ -1,0 +1,53 @@
+"""``repro.index`` — corpus-scale Hausdorff retrieval.
+
+The paper's vector-database deployment as a subsystem: a :class:`SetStore`
+packs many variable-size point sets into power-of-two padded buckets with
+per-set summaries precomputed at ``add()`` time, and :func:`search` runs a
+three-stage **certified bound cascade** (summary bounds → vmapped bucketed
+masked ProHD → exact refinement) whose top-k result is provably identical
+to brute force.  See ``repro.index.cascade`` for the certification
+argument and ``docs/api.md`` ("Corpus retrieval") for the API.
+
+The ``repro.hd`` front door re-exports :func:`search` so corpus queries
+dispatch from the same place as pairwise ones::
+
+    from repro.hd import search
+    from repro.index import SetStore
+
+    store = SetStore(dim=16)
+    store.add_many(sets)
+    res = search(query, store, k=10)      # res.ids, res.values, res.stats
+"""
+from repro.index.cascade import (
+    SEARCH_METHODS,
+    SEARCH_VARIANTS,
+    SearchResult,
+    bound_scale,
+    certified_margins,
+    interval_bounds,
+    search,
+)
+from repro.index.store import (
+    PackedBucket,
+    SetStore,
+    SetSummary,
+    bucket_capacity,
+    direction_bank,
+    summarize_set,
+)
+
+__all__ = [
+    "SetStore",
+    "SetSummary",
+    "PackedBucket",
+    "bucket_capacity",
+    "direction_bank",
+    "summarize_set",
+    "search",
+    "SearchResult",
+    "SEARCH_VARIANTS",
+    "SEARCH_METHODS",
+    "interval_bounds",
+    "bound_scale",
+    "certified_margins",
+]

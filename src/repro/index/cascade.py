@@ -1,0 +1,348 @@
+"""Certified bound-cascade top-k set-distance search over a SetStore.
+
+Three stages, each a strictly tighter (and strictly more expensive)
+certified interval around every candidate's true distance to the query:
+
+  stage 0 — **summary bounds, whole corpus, one shot.**  From per-set
+      summaries alone (centroid, centroid radii, projection intervals on
+      the store's direction bank):
+        lower: projection-interval gaps — an interval ENDPOINT is a real
+            projected point, and projections contract distances, so its
+            1-D gap to the other set's interval hull lower-bounds H;
+        upper: triangle inequality through the centroids —
+            dist(a, B) ≤ ||a − c_A|| + ||c_A − c_B|| + min_b ||c_B − b||.
+      Vectorized over all N stored sets without touching a single point.
+  stage 1 — **vmapped bucketed masked ProHD** on the survivors: the
+      full-inner subset estimate (never overestimates → certified lower
+      bound), max_u H_u (lower), and the Eq. 5 additive bound (upper),
+      one vmapped call per storage bucket.
+  stage 2 — **exact refinement** of the remaining frontier: candidates are
+      resolved in ascending-lower-bound order through the exact
+      ``repro.hd`` front door on their RAW (unpadded) points, so a refined
+      value is bit-for-bit the number brute force would compute.
+
+The prune rule is the certified one throughout: a candidate dies exactly
+when its certified lower bound exceeds τ, the current k-th smallest
+certified upper bound over all candidates.  Soundness: lb_i > τ implies
+ub_i > τ, so the k candidates whose upper bounds define τ are all others,
+and each of their true values is ≤ τ < lb_i ≤ value_i — at least k
+candidates beat i outright, ties included.  Stage 2 always drains (every
+alive candidate is refined or pruned), so the returned top-k — ranked by
+(value, id) — is **provably identical to brute force**, which the
+hypothesis suite and the ``scripts/check.sh`` gate both assert.
+
+Floating point: stage-0/1 bounds are certified for exact arithmetic, and
+the prune rule compares them against fp32 refined values — so the margin
+must absorb BOTH fp error sources, measured in the pair's MAGNITUDE scale
+(``bound_scale`` = Σ ||centroid|| + r_max, which dominates every point
+norm, projection and distance in play):
+
+- the bounds' own subtractions err by O(eps)·scale absolutely (a tiny
+  interval gap between huge projections — a relative-in-the-result margin
+  would miss this entirely);
+- the exact oracle's GEMM-form ``||a||² − 2ab + ||b||²`` errs by
+  O((D+2)·eps)·scale² in d², i.e. up to ``sqrt((D+2)·eps)·scale`` in the
+  DISTANCE when the true distance is near zero — the dominant term.
+
+``certified_margins`` therefore widens by ``2·sqrt((D+2)·eps_fp32)·scale``
+plus a 1e-6 absolute floor.  At sane magnitudes (unit-ish data) this is
+~1e-3·scale and invisible; at pathological magnitudes (coordinates ≫ 1e4)
+it honestly reports that fp32 can no longer separate candidates — pruning
+stops and the cascade degrades to brute force, preserving the identity
+guarantee instead of silently breaking it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masked, projections
+from repro.hd.config import HDConfig
+from repro.hd.result import HDMeta
+from repro.index.store import SetStore, SetSummary, bucket_capacity
+
+__all__ = [
+    "SearchResult",
+    "SEARCH_VARIANTS",
+    "SEARCH_METHODS",
+    "interval_bounds",
+    "bound_scale",
+    "certified_margins",
+    "search",
+]
+
+SEARCH_VARIANTS = ("hausdorff", "directed")
+SEARCH_METHODS = ("cascade", "exact")
+
+# fp safety margins applied to every certified bound (see module docstring).
+_EPS32 = float(np.finfo(np.float32).eps)
+_ABS = 1e-6
+
+
+def _margin_factor(dim: int) -> float:
+    """Per-unit-scale widening: covers the exact oracle's worst-case
+    distance error sqrt((D+2)·eps)·scale with a 2x safety factor."""
+    return 2.0 * float(np.sqrt((dim + 2) * _EPS32))
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Top-k result of a corpus search — the corpus analogue of HDResult.
+
+    ids/values are ranked ascending by (value, id); every returned value is
+    EXACT (stage-2 refined), so ``lower == upper == values`` for the
+    cascade.  ``stats`` carries the cascade's work accounting.  ``meta``
+    reuses HDMeta with one documented exception to its pairwise contract:
+    the exact refines re-resolve per candidate set's shape, so there is no
+    single concrete dispatch — ``backend`` is recorded AS REQUESTED
+    (possibly "auto") and the per-refine block sizes as 0.
+    """
+
+    ids: np.ndarray       # (k,) int32 set ids
+    values: np.ndarray    # (k,) fp32 exact distances
+    stats: dict[str, Any]
+    meta: HDMeta
+
+
+def interval_bounds(sa: SetSummary, sb: SetSummary, *, directed: bool = False):
+    """Certified (lower, upper) distance bounds from summaries alone.
+
+    Broadcasts: pass one plain summary and one (N,)-stacked summary to get
+    (N,) bounds (stage 0), or two plain summaries for a single pair (the
+    drift monitor's fast pre-check).  RAW bounds — callers must apply
+    :func:`certified_margins` before pruning on them.
+    """
+    dc = jnp.sqrt(jnp.maximum(jnp.sum((sa.centroid - sb.centroid) ** 2, axis=-1), 0.0))
+    if directed:
+        ub = dc + sa.r_max + sb.r_min
+    else:
+        ub = dc + jnp.maximum(sa.r_max + sb.r_min, sb.r_max + sa.r_min)
+
+    def gap(x, lo, hi):
+        return jnp.maximum(jnp.maximum(lo - x, x - hi), 0.0)
+
+    g = jnp.maximum(
+        gap(sa.proj_lo, sb.proj_lo, sb.proj_hi),
+        gap(sa.proj_hi, sb.proj_lo, sb.proj_hi),
+    )
+    if not directed:
+        g = jnp.maximum(
+            g,
+            jnp.maximum(
+                gap(sb.proj_lo, sa.proj_lo, sa.proj_hi),
+                gap(sb.proj_hi, sa.proj_lo, sa.proj_hi),
+            ),
+        )
+    lb = jnp.max(g, axis=-1)
+    return lb, ub
+
+
+_interval_bounds_jit = functools.partial(jax.jit, static_argnames=("directed",))(
+    interval_bounds
+)
+
+
+def bound_scale(sa: SetSummary, sb: SetSummary):
+    """Per-pair magnitude that dominates every quantity entering the bounds.
+
+    ``||centroid|| + r_max`` upper-bounds the norm of every point of a set,
+    hence (unit directions) every projection, every centroid coordinate and
+    every distance the bounds subtract — the right yardstick for absolute
+    fp32 error.  Broadcasts like :func:`interval_bounds`.
+    """
+    na = jnp.sqrt(jnp.maximum(jnp.sum(sa.centroid**2, axis=-1), 0.0)) + sa.r_max
+    nb = jnp.sqrt(jnp.maximum(jnp.sum(sb.centroid**2, axis=-1), 0.0)) + sb.r_max
+    return na + nb
+
+
+_bound_scale_jit = jax.jit(bound_scale)
+
+
+def certified_margins(lb, ub, scale, dim: int):
+    """Widen raw certified bounds so fp32 rounding cannot flip a prune.
+
+    ``scale`` is the :func:`bound_scale` of the pair (broadcastable) and
+    ``dim`` the point dimension: the widening is
+    ``2·sqrt((dim+2)·eps_fp32)·scale + 1e-6``, ABSOLUTE on both sides —
+    it must cover both the bounds' subtraction error AND the exact
+    oracle's own GEMM cancellation error (see the module docstring), both
+    of which are proportional to the operand magnitudes, not to the
+    (possibly tiny) result.
+    """
+    xp = jnp if isinstance(lb, jnp.ndarray) else np
+    pad = scale * _margin_factor(dim) + _ABS
+    return xp.maximum(lb - pad, 0.0), ub + pad
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "m", "directed"))
+def _stage1_batch(q, pts, valid, *, alpha: float, m: int, directed: bool):
+    """Masked ProHD certificates, query vs a (S, C, D) candidate slab."""
+    va = jnp.ones((q.shape[0],), jnp.bool_)
+
+    def one(p, v):
+        return masked.masked_prohd_certified(
+            q, va, p, v, alpha=alpha, m=m, directed=directed
+        )
+
+    return jax.vmap(one)(pts, valid)
+
+
+def _kth_smallest(ub: np.ndarray, k: int) -> float:
+    return float(np.partition(ub, k - 1)[k - 1])
+
+
+def _rank(values: np.ndarray, candidates: np.ndarray, k: int) -> np.ndarray:
+    """k candidate ids, ascending by (value, id) — the deterministic
+    tie-break shared with the brute-force reference."""
+    order = np.lexsort((candidates, values[candidates]))
+    return candidates[order[:k]]
+
+
+def _exact_value(query, pts, variant: str, backend: str, cfg: HDConfig) -> np.float32:
+    from repro import hd as _hd
+
+    res = _hd.set_distance(
+        query, pts, variant=variant, method="exact", backend=backend, config=cfg
+    )
+    return np.float32(res.value)
+
+
+def search(
+    query,
+    store: SetStore,
+    k: int,
+    *,
+    variant: str = "hausdorff",
+    method: str = "cascade",
+    backend: str = "auto",
+    config: HDConfig | None = None,
+    measure: bool = False,
+) -> SearchResult:
+    """Top-k nearest stored sets to ``query`` under a set distance.
+
+    query    — (n_q, D) points
+    store    — the SetStore to search
+    k        — how many neighbours (k ≥ corpus size returns the full
+               ranking)
+    variant  — hausdorff | directed (h(query → set))
+    method   — cascade (certified bound cascade) | exact (brute force —
+               every set refined; the reference the cascade provably
+               matches)
+    backend  — backend for the exact refines (``repro.hd`` names; "auto")
+    config   — HDConfig; ``alpha`` drives the stage-1 masked ProHD
+
+    Returns a :class:`SearchResult`; the top-k ids and values are
+    identical to brute force by construction (see module docstring).
+    """
+    if variant not in SEARCH_VARIANTS:
+        raise ValueError(f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}")
+    if method not in SEARCH_METHODS:
+        raise ValueError(f"unknown search method {method!r}; expected one of {SEARCH_METHODS}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if store.n_sets == 0:
+        raise ValueError("cannot search an empty SetStore")
+    cfg = config if config is not None else HDConfig()
+    q = jnp.asarray(query, jnp.float32)
+    if q.ndim != 2 or q.shape[1] != store.dim:
+        raise ValueError(f"expected (n_q, {store.dim}) query, got shape {q.shape}")
+
+    t0 = time.perf_counter() if measure else 0.0
+    n = store.n_sets
+    k_eff = min(k, n)
+    directed = variant == "directed"
+    values = np.full((n,), np.inf, np.float32)
+    resolved = np.zeros((n,), bool)
+    exact_refines = 0
+    stats: dict[str, Any] = {"candidates_scanned": n, "k": k_eff}
+
+    def refine(sid: int) -> None:
+        nonlocal exact_refines
+        values[sid] = _exact_value(q, store.get(sid), variant, backend, cfg)
+        resolved[sid] = True
+        exact_refines += 1
+
+    if method == "exact":
+        for sid in range(n):
+            refine(sid)
+        lb = ub = values.astype(np.float64)
+        stats.update(stage0_pruned=0, stage1_pruned=0)
+    else:
+        # -- stage 0: summary bounds over the whole corpus, one shot ------
+        qsum = store.summarize(q)
+        lb_j, ub_j = _interval_bounds_jit(qsum, store.summaries(), directed=directed)
+        scale = np.asarray(_bound_scale_jit(qsum, store.summaries()), np.float64)
+        lb_j, ub_j = certified_margins(lb_j, ub_j, jnp.asarray(scale), store.dim)
+        lb = np.asarray(lb_j, np.float64)
+        ub = np.asarray(ub_j, np.float64)
+
+        tau = _kth_smallest(ub, k_eff)
+        alive = lb <= tau
+        stats["stage0_pruned"] = int(n - alive.sum())
+
+        # -- stage 1: vmapped bucketed masked ProHD on the survivors ------
+        stats["stage1_pruned"] = 0
+        if int(alive.sum()) > k_eff:
+            m = projections.default_num_directions(store.dim)
+            for bucket in store.packed_buckets().values():
+                rows = np.nonzero(alive[bucket.set_ids])[0]
+                if rows.size == 0:
+                    continue
+                # pad the survivor batch to a power of two so the jit cache
+                # stays small across searches (padding repeats row 0 and is
+                # sliced off below)
+                padded = np.concatenate(
+                    [rows, np.full((bucket_capacity(rows.size, 1) - rows.size,), rows[0])]
+                )
+                take = jnp.asarray(padded)
+                cert = _stage1_batch(
+                    q,
+                    jnp.take(bucket.points, take, axis=0),
+                    jnp.take(bucket.valid, take, axis=0),
+                    alpha=cfg.alpha, m=m, directed=directed,
+                )
+                lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
+                sids = bucket.set_ids[rows]
+                lb1, ub1 = certified_margins(
+                    lo1.astype(np.float64)[: rows.size],
+                    np.asarray(cert.upper, np.float64)[: rows.size],
+                    scale[sids],
+                    store.dim,
+                )
+                lb[sids] = np.maximum(lb[sids], lb1)
+                ub[sids] = np.minimum(ub[sids], ub1)
+            tau = _kth_smallest(ub, k_eff)
+            still = alive & (lb <= tau)
+            stats["stage1_pruned"] = int(alive.sum() - still.sum())
+            alive = still
+
+        # -- stage 2: exact refinement, ascending lower bound -------------
+        while True:
+            tau = _kth_smallest(ub, k_eff)
+            alive &= lb <= tau
+            frontier = np.nonzero(alive & ~resolved)[0]
+            if frontier.size == 0:
+                break
+            sid = int(frontier[np.lexsort((frontier, lb[frontier]))[0]])
+            refine(sid)
+            lb[sid] = ub[sid] = float(values[sid])
+
+    top = _rank(values, np.nonzero(resolved)[0], k_eff)
+    stats.update(
+        exact_refines=exact_refines,
+        prune_fraction=1.0 - exact_refines / n,
+    )
+    elapsed = time.perf_counter() - t0 if measure else None
+    meta = HDMeta(
+        variant=variant, method=method, backend=backend,
+        block_a=0, block_b=0, elapsed_s=elapsed,
+    )
+    return SearchResult(
+        ids=top.astype(np.int32), values=values[top], stats=stats, meta=meta
+    )

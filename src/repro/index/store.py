@@ -1,0 +1,346 @@
+"""SetStore — packed ragged storage for a corpus of variable-size point sets.
+
+The paper's motivating deployment is a vector database of many SETS, each
+queried by set distance.  This module is the storage half of that story:
+
+- Sets are packed into **power-of-two padded buckets**: a set of n points
+  lands in the bucket of capacity ``next_pow2(max(n, min_bucket))`` as one
+  (capacity, D) slab plus a row-validity mask.  Every bucket stacks its
+  members into a single (B, capacity, D) array, so per-bucket corpus work
+  is ONE vmapped jit call (compile-once per capacity — the same batching
+  discipline as ``repro.serve``).
+- Row validity is additionally folded into **+inf-poisoned squared norms**
+  (the fused-kernel trick from PR 1): a distance scan consuming a bucket
+  never needs per-element mask selects.
+- Every ``add()`` precomputes a :class:`SetSummary` — centroid, min/max
+  centroid radius, and the set's projection INTERVALS on a direction bank
+  shared by the whole store.  These summaries are what makes corpus-scale
+  search cheap: stage 0 of the bound cascade (``repro.index.cascade``)
+  derives certified lower/upper Hausdorff bounds for ALL stored sets from
+  summaries alone, in one vectorized shot, without touching a single
+  point.
+
+The direction bank is any orthonormal (D, m) matrix: projections onto unit
+vectors 1-Lipschitz-contract distances, which is the only property the
+certificates use.  ``direction_bank`` builds one from a PRNG key (QR of a
+Gaussian) or, better, from a sample of corpus points (PCA — tighter
+intervals on anisotropic data).
+"""
+from __future__ import annotations
+
+from typing import Iterable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projections
+
+__all__ = [
+    "SetSummary",
+    "PackedBucket",
+    "SetStore",
+    "direction_bank",
+    "summarize_set",
+    "bucket_capacity",
+    "pack_sets",
+]
+
+
+class SetSummary(NamedTuple):
+    """Per-set facts the bound cascade prunes on (stackable: add a leading
+    corpus axis to every field and the same NamedTuple describes N sets)."""
+
+    centroid: jnp.ndarray  # (D,) fp32 mean of valid rows
+    r_min: jnp.ndarray     # () fp32 min distance centroid → valid point
+    r_max: jnp.ndarray     # () fp32 max distance centroid → valid point
+    proj_lo: jnp.ndarray   # (m,) fp32 per-direction projection minimum
+    proj_hi: jnp.ndarray   # (m,) fp32 per-direction projection maximum
+    count: jnp.ndarray     # () int32 number of valid rows
+
+
+class PackedBucket(NamedTuple):
+    """One capacity class of the store, stacked for vmapped consumption."""
+
+    capacity: int
+    set_ids: np.ndarray    # (B,) int32 store-wide set ids, slot order
+    points: jnp.ndarray    # (B, capacity, D) fp32, invalid rows zeroed
+    valid: jnp.ndarray     # (B, capacity) bool
+    sqnorms: jnp.ndarray   # (B, capacity) fp32, +inf on invalid rows
+
+
+def bucket_capacity(n: int, min_bucket: int = 8) -> int:
+    """Power-of-two padded capacity for an n-point set."""
+    n = max(int(n), min_bucket)
+    return 1 << (n - 1).bit_length()
+
+
+def pack_sets(sets: Sequence[np.ndarray], capacity: int, dim: int):
+    """Pad a list of (n_i, dim) sets into one (B, capacity, dim) slab.
+
+    THE padding rule for every packed consumer (SetStore buckets, the
+    serving batcher): each set occupies its slab row's prefix, the tail is
+    zero with validity False.  Returns ``(points, valid)`` float32/bool
+    numpy arrays.
+    """
+    b = len(sets)
+    pts = np.zeros((b, capacity, dim), np.float32)
+    val = np.zeros((b, capacity), bool)
+    for row, s in enumerate(sets):
+        n = s.shape[0]
+        pts[row, :n] = s
+        val[row, :n] = True
+    return pts, val
+
+
+def direction_bank(
+    d: int,
+    m: int | None = None,
+    *,
+    key: jax.Array | None = None,
+    data: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Orthonormal (D, m) direction bank shared by a whole store.
+
+    ``data`` (a sample of corpus points) → top-m PCA directions via
+    ``projections.pca_directions`` (tightest intervals); otherwise QR of a
+    Gaussian draw — isotropic, and still sound: the certificates only need
+    unit directions.  ``m`` defaults to the paper's floor(sqrt(D)).
+    """
+    m = projections.default_num_directions(d) if m is None else m
+    m = min(m, d)
+    if data is not None:
+        return projections.pca_directions(jnp.asarray(data, jnp.float32), m)
+    key = jax.random.PRNGKey(0) if key is None else key
+    g = jax.random.normal(key, (d, m), dtype=jnp.float32)
+    q, _ = jnp.linalg.qr(g)
+    return q
+
+
+def summarize_set(
+    points: jnp.ndarray, valid: jnp.ndarray, directions: jnp.ndarray
+) -> tuple[SetSummary, jnp.ndarray]:
+    """(SetSummary, poisoned sqnorms) of one padded set — jit/vmap friendly.
+
+    Invalid rows are excluded from every statistic; their squared norms are
+    +inf (the kernel poison convention).  An all-invalid set yields
+    r_min = +inf and hull-less intervals (lo > hi), both of which make the
+    cascade's bounds vacuous-but-sound; stores reject empty sets anyway.
+    """
+    p = points.astype(jnp.float32)
+    v = valid
+    vf = v.astype(jnp.float32)
+    count = jnp.sum(v.astype(jnp.int32))
+    centroid = jnp.sum(p * vf[:, None], axis=0) / jnp.maximum(count.astype(jnp.float32), 1.0)
+    r = jnp.sqrt(jnp.maximum(jnp.sum((p - centroid) ** 2, axis=1), 0.0))
+    r_min = jnp.min(jnp.where(v, r, jnp.inf))
+    r_max = jnp.maximum(jnp.max(jnp.where(v, r, -jnp.inf)), 0.0)
+    proj = projections.project(p, directions)  # (n, m) fp32
+    big = jnp.float32(1e30)
+    proj_lo = jnp.min(jnp.where(v[:, None], proj, big), axis=0)
+    proj_hi = jnp.max(jnp.where(v[:, None], proj, -big), axis=0)
+    sqn = jnp.where(v, jnp.sum(p * p, axis=1), jnp.inf)
+    return (
+        SetSummary(
+            centroid=centroid, r_min=r_min, r_max=r_max,
+            proj_lo=proj_lo, proj_hi=proj_hi, count=count,
+        ),
+        sqn,
+    )
+
+
+# One vmapped summarizer serves every bucket capacity (jit re-specializes
+# per shape; the math is the single source of truth above).
+_summarize_batch = jax.jit(jax.vmap(summarize_set, in_axes=(0, 0, None)))
+
+
+class SetStore:
+    """A growing corpus of point sets with precomputed search summaries.
+
+    >>> store = SetStore(dim=16)
+    >>> sid = store.add(points)              # (n, 16) array, n >= 1
+    >>> store.get(sid)                       # raw (n, 16) points back
+    >>> store.summaries()                    # stacked SetSummary, (N, ...)
+    >>> store.packed_buckets()               # {capacity: PackedBucket}
+
+    ``add_many`` groups incoming sets by capacity and summarizes each group
+    in one vmapped call — the bulk-load path for corpus construction.
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        *,
+        directions: jnp.ndarray | None = None,
+        num_directions: int | None = None,
+        key: jax.Array | None = None,
+        min_bucket: int = 8,
+    ):
+        if dim < 1:
+            raise ValueError(f"dim must be >= 1, got {dim}")
+        if min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+        self.dim = int(dim)
+        self.min_bucket = int(min_bucket)
+        if directions is None:
+            directions = direction_bank(dim, num_directions, key=key)
+        self._directions = jnp.asarray(directions, jnp.float32)
+        if self._directions.ndim != 2 or self._directions.shape[0] != dim:
+            raise ValueError(
+                f"directions must be (dim={dim}, m), got {self._directions.shape}"
+            )
+        self._raw: list[np.ndarray] = []
+        # bucket membership only: cap -> set ids in slot order.  The padded
+        # slabs themselves live ONLY in the per-capacity PackedBucket cache
+        # (rebuilt from _raw on demand) — no second host-resident padded
+        # copy of the corpus.
+        self._members: dict[int, list[int]] = {}
+        # staged per-set summary fields, set-id order
+        self._sums: dict[str, list[np.ndarray]] = {
+            f: [] for f in SetSummary._fields
+        }
+        self._summary_cache: SetSummary | None = None
+        # Packed buckets are cached PER CAPACITY with a member-count
+        # watermark: an add() only invalidates (and a later search only
+        # re-packs / re-uploads) the one bucket it landed in — interleaved
+        # add/search must not re-pack the whole corpus per request.
+        self._bucket_cache: dict[int, PackedBucket] = {}
+        self._bucket_watermark: dict[int, int] = {}
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def directions(self) -> jnp.ndarray:
+        """The shared (D, m) direction bank."""
+        return self._directions
+
+    @property
+    def num_directions(self) -> int:
+        return int(self._directions.shape[1])
+
+    @property
+    def n_sets(self) -> int:
+        return len(self._raw)
+
+    def __len__(self) -> int:
+        return self.n_sets
+
+    @property
+    def total_points(self) -> int:
+        return sum(p.shape[0] for p in self._raw)
+
+    @property
+    def bucket_capacities(self) -> tuple[int, ...]:
+        return tuple(sorted(self._members))
+
+    # -- ingestion ----------------------------------------------------------
+
+    def add(self, points) -> int:
+        """Store one (n, D) set; returns its corpus-wide id."""
+        return self.add_many([points])[0]
+
+    def add_many(self, sets: Iterable) -> list[int]:
+        """Bulk-load many sets; summaries are computed per capacity group in
+        one vmapped call.  Returns the new ids in input order."""
+        arrs: list[np.ndarray] = []
+        for p in sets:
+            p = np.asarray(p, np.float32)
+            if p.ndim != 2 or p.shape[1] != self.dim:
+                raise ValueError(
+                    f"expected (n, {self.dim}) points, got shape {p.shape}"
+                )
+            if p.shape[0] < 1:
+                raise ValueError("cannot store an empty set (HD is undefined)")
+            arrs.append(p)
+        if not arrs:
+            return []
+
+        first_id = self.n_sets
+        ids = list(range(first_id, first_id + len(arrs)))
+        by_cap: dict[int, list[int]] = {}
+        for j, p in enumerate(arrs):
+            by_cap.setdefault(bucket_capacity(p.shape[0], self.min_bucket), []).append(j)
+
+        # Summaries must land in self._sums in set-id order; stage per-group
+        # results into scratch lists first and mutate the store only after
+        # EVERY group has summarized — a mid-load failure (device OOM,
+        # interrupt) must leave the store exactly as it was, never with
+        # memberships pointing past _raw.  The padded group slabs are
+        # transient (summarization input only).
+        scratch: list[tuple | None] = [None] * len(arrs)
+        membership: list[tuple[int, int]] = []  # (cap, set id), staged
+        for cap, members in by_cap.items():
+            pts, val = pack_sets([arrs[j] for j in members], cap, self.dim)
+            sums, _ = _summarize_batch(
+                jnp.asarray(pts), jnp.asarray(val), self._directions
+            )
+            sums = jax.tree_util.tree_map(np.asarray, sums)
+            for row, j in enumerate(members):
+                scratch[j] = tuple(f[row] for f in sums)
+                membership.append((cap, ids[j]))
+
+        for cap, sid in membership:
+            self._members.setdefault(cap, []).append(sid)
+        for j, p in enumerate(arrs):
+            self._raw.append(p)
+            for field, value in zip(SetSummary._fields, scratch[j]):
+                self._sums[field].append(value)
+
+        self._summary_cache = None
+        return ids
+
+    # -- retrieval ----------------------------------------------------------
+
+    def get(self, sid: int) -> jnp.ndarray:
+        """The raw, UNPADDED (n, D) points of set ``sid`` — byte-identical
+        to what was added (this is what exact refinement runs on, so the
+        cascade's results cannot depend on the padding layout)."""
+        return jnp.asarray(self._raw[sid])
+
+    def counts(self) -> np.ndarray:
+        """(N,) int array of stored set sizes."""
+        return np.array([p.shape[0] for p in self._raw], np.int32)
+
+    def summaries(self) -> SetSummary:
+        """Stacked per-set summaries: every field gains a leading (N,) axis.
+
+        Rebuilt after adds — O(N · (D + 2m)) small-array stacking, cheap
+        next to the per-bucket point slabs (which rebuild incrementally,
+        see ``packed_buckets``).
+        """
+        if self.n_sets == 0:
+            raise ValueError("empty store has no summaries")
+        if self._summary_cache is None:
+            self._summary_cache = SetSummary(
+                *(jnp.asarray(np.stack(self._sums[f])) for f in SetSummary._fields)
+            )
+        return self._summary_cache
+
+    def packed_buckets(self) -> dict[int, PackedBucket]:
+        """{capacity: PackedBucket} with stacked (B, capacity, ...) arrays.
+
+        Only buckets whose membership grew since the last call are
+        re-packed from the raw sets and re-uploaded (count watermark per
+        capacity) — O(bucket) per touched bucket, O(1) for the rest.
+        """
+        for cap in sorted(self._members):
+            slots = self._members[cap]
+            if self._bucket_watermark.get(cap) != len(slots):
+                pts, val = pack_sets([self._raw[sid] for sid in slots], cap, self.dim)
+                sqn = np.where(val, np.sum(pts * pts, axis=-1), np.inf)
+                self._bucket_cache[cap] = PackedBucket(
+                    capacity=cap,
+                    set_ids=np.asarray(slots, np.int32),
+                    points=jnp.asarray(pts),
+                    valid=jnp.asarray(val),
+                    sqnorms=jnp.asarray(sqn.astype(np.float32)),
+                )
+                self._bucket_watermark[cap] = len(slots)
+        return dict(self._bucket_cache)
+
+    def summarize(self, points, valid=None) -> SetSummary:
+        """Summary of an EXTERNAL set (e.g. a query) on this store's bank."""
+        p = jnp.asarray(points, jnp.float32)
+        v = jnp.ones((p.shape[0],), bool) if valid is None else jnp.asarray(valid)
+        summary, _ = summarize_set(p, v, self._directions)
+        return summary

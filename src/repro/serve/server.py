@@ -1,31 +1,33 @@
 """Batched ProHD set-distance service — the paper's vector-DB use case as a
 serving component.
 
-Requests are (A, B) cloud pairs; the batcher buckets them by padded shape
-so each bucket runs as ONE jitted vmapped ProHD call (compile-once per
-bucket).  Clouds are padded to the bucket size with a validity mask, which
-the selection/HD pipeline honours exactly (same mechanism the distributed
-path uses).
+Two request types:
+
+- **pairwise** (``submit``): (A, B) cloud pairs.  The batcher buckets each
+  SIDE independently by padded shape (a small-vs-large pair no longer pads
+  both sides to the large bucket) so each (bucket_a, bucket_b, D) class
+  runs as ONE jitted vmapped masked-ProHD call (compile-once per class).
+  Clouds are padded to their bucket size with a validity mask, honoured
+  exactly by the shared masked pipeline (``repro.core.masked`` — the same
+  code the corpus cascade vmaps).
+- **corpus search** (``submit_search``): top-k HD retrieval against the
+  service's shared :class:`repro.index.SetStore` (``add_set`` to populate),
+  served by the certified bound cascade (``repro.hd.search``) — results
+  are provably identical to brute force over the corpus.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.bounds import additive_bound
-from repro.core.projected import projected_hd
-from repro.core.prohd import ProHDConfig
-from repro.core import projections, selection
-from repro.hd import HDEngine
+from repro.core import masked, projections
+from repro.index.store import bucket_capacity, pack_sets
 
-# The serving HD sweeps go through the front door like every other
-# consumer; the engine is a frozen all-static pytree, so closing the
-# vmapped request function over it is free.
-_DIRECTED = HDEngine(variant="directed", method="exact", backend="tiled")
+__all__ = ["ServeConfig", "ProHDService"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,91 +35,100 @@ class ServeConfig:
     alpha: float = 0.02
     bucket_sizes: tuple[int, ...] = (1024, 4096, 16384, 65536)
     max_batch: int = 8
+    # store bucketing for corpus-search requests (SetStore min_bucket)
+    min_store_bucket: int = 8
 
 
 def _bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest configured bucket holding n; beyond the largest configured
+    bucket, round UP to the next power of two (never return a capacity
+    smaller than the request — that would silently truncate it).  The
+    round-up rule is the SetStore's, so serve and index bucket alike."""
     for b in buckets:
         if n <= b:
             return b
-    return int(2 ** math.ceil(math.log2(n)))
+    return bucket_capacity(n, min_bucket=1)
 
 
 def _masked_prohd(a, va, b, vb, *, alpha: float, m: int):
-    """ProHD on padded clouds with validity masks (single pair)."""
-    # masked centroids + masked gram directions
-    def centroid(p, v):
-        s = jnp.sum(p * v[:, None], axis=0)
-        return s / jnp.maximum(jnp.sum(v), 1.0)
+    """ProHD on padded clouds with validity masks (single pair).
 
-    va_f = va.astype(jnp.float32)
-    vb_f = vb.astype(jnp.float32)
-    ca, cb = centroid(a, va_f), centroid(b, vb_f)
-    u0 = cb - ca
-    norm = jnp.linalg.norm(u0)
-    e1 = jnp.zeros_like(u0).at[0].set(1.0)
-    u0 = jnp.where(norm < 1e-9, e1, u0 / jnp.maximum(norm, 1e-9))
-
-    z = jnp.concatenate([a, b])
-    vz = jnp.concatenate([va_f, vb_f])
-    mean = jnp.sum(z * vz[:, None], 0) / jnp.maximum(jnp.sum(vz), 1.0)
-    zc = (z - mean) * vz[:, None]
-    gram = zc.T @ zc
-    w, v = jnp.linalg.eigh(gram)
-    dirs = jnp.concatenate([u0[:, None], v[:, ::-1][:, :m]], axis=1)
-
-    pa = a @ dirs
-    pb = b @ dirs
-    # mask invalid rows out of the extremes
-    big = 1e30
-    n_a, n_b = a.shape[0], b.shape[0]
-    k_a = selection.alpha_count(n_a, alpha)
-    k_b = selection.alpha_count(n_b, alpha)
-    mask_a = jnp.zeros((n_a,), bool)
-    mask_b = jnp.zeros((n_b,), bool)
-    for col in range(dirs.shape[1]):
-        frac_k_a = k_a if col == 0 else max(1, k_a // max(m, 1))
-        frac_k_b = k_b if col == 0 else max(1, k_b // max(m, 1))
-        pa_c = jnp.where(va, pa[:, col], -big)
-        pb_c = jnp.where(vb, pb[:, col], -big)
-        mask_a |= selection.extreme_mask(pa_c, frac_k_a) & va
-        mask_b |= selection.extreme_mask(pb_c, frac_k_b) & vb
-        pa_c = jnp.where(va, pa[:, col], big)
-        pb_c = jnp.where(vb, pb[:, col], big)
-        mask_a |= selection.extreme_mask(-pa_c, frac_k_a) & va
-        mask_b |= selection.extreme_mask(-pb_c, frac_k_b) & vb
-
-    cap = selection.selection_capacity(n_a, m, alpha)
-    a_sel, va_sel = selection.take_selected(a, mask_a, cap)
-    b_sel, vb_sel = selection.take_selected(b, mask_b, min(n_b, cap))
-    va_sel &= jnp.any(mask_a)
-    vb_sel &= jnp.any(mask_b)
-
-    hd = jnp.maximum(
-        _DIRECTED(a_sel, b, masks=(va_sel, vb)).value,
-        _DIRECTED(b_sel, a, masks=(vb_sel, va)).value,
-    )
-    pa_m = jnp.where(va[:, None], pa, jnp.nan)
-    pb_m = jnp.where(vb[:, None], pb, jnp.nan)
-    lo = projected_hd(jnp.nan_to_num(pa_m, nan=0.0), jnp.nan_to_num(pb_m, nan=0.0))
-    bound = additive_bound(a * va_f[:, None], b * vb_f[:, None], pa * va_f[:, None], pb * vb_f[:, None])
-    return hd, lo, bound
+    Thin adapter onto the shared masked pipeline: returns the full-inner
+    subset estimate plus the certified [lower, upper] interval.
+    """
+    cert = masked.masked_prohd_certified(a, va, b, vb, alpha=alpha, m=m)
+    return cert.hd, cert.lower, cert.upper
 
 
 class ProHDService:
-    """Collects requests, flushes them in shape buckets."""
+    """Collects requests, flushes them in shape buckets.
 
-    def __init__(self, cfg: ServeConfig = ServeConfig()):
+    Request ids are unique within one flush window (the counter resets at
+    ``flush()``, matching the historical per-flush id semantics).
+    """
+
+    def __init__(self, cfg: ServeConfig = ServeConfig(), store=None):
         self.cfg = cfg
+        self.store = store  # repro.index.SetStore; lazily created by add_set
         self._pending: list[tuple[int, jnp.ndarray, jnp.ndarray]] = []
-        self._compiled: dict[tuple[int, int, int], any] = {}
+        self._pending_searches: list[tuple[int, jnp.ndarray, int, str]] = []
+        self._next_rid = 0
+        self._compiled: dict[tuple[int, int, int, int], any] = {}
+
+    # -- pairwise requests ---------------------------------------------------
 
     def submit(self, a, b) -> int:
-        rid = len(self._pending)
+        rid = self._next_rid
+        self._next_rid += 1
         self._pending.append((rid, jnp.asarray(a), jnp.asarray(b)))
         return rid
 
-    def _fn(self, n: int, d: int, batch: int):
-        key = (n, d, batch)
+    # -- corpus requests -----------------------------------------------------
+
+    def add_set(self, points) -> int:
+        """Add one set to the service's corpus; returns its store id."""
+        points = jnp.asarray(points)
+        if points.ndim != 2:
+            raise ValueError(f"expected (n, D) points, got shape {points.shape}")
+        if self.store is None:
+            from repro.index import SetStore
+
+            self.store = SetStore(
+                dim=points.shape[1], min_bucket=self.cfg.min_store_bucket
+            )
+        return self.store.add(points)
+
+    def submit_search(self, query, k: int = 1, *, variant: str = "hausdorff") -> int:
+        """Queue a top-k corpus retrieval against the shared SetStore.
+
+        Validates the request HERE, not at flush(): a malformed queued
+        search must bounce to its submitter, never abort a flush that is
+        carrying everyone else's requests.
+        """
+        from repro.index import SEARCH_VARIANTS
+
+        if self.store is None or self.store.n_sets == 0:
+            raise ValueError("no corpus to search; add_set() first")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if variant not in SEARCH_VARIANTS:
+            raise ValueError(
+                f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}"
+            )
+        query = jnp.asarray(query)
+        if query.ndim != 2 or query.shape[1] != self.store.dim:
+            raise ValueError(
+                f"expected (n_q, {self.store.dim}) query, got shape {query.shape}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending_searches.append((rid, query, k, variant))
+        return rid
+
+    # -- execution -----------------------------------------------------------
+
+    def _fn(self, n_a: int, n_b: int, d: int, batch: int):
+        key = (n_a, n_b, d, batch)
         if key not in self._compiled:
             m = projections.default_num_directions(d)
             f = jax.jit(
@@ -129,32 +140,45 @@ class ProHDService:
         return self._compiled[key]
 
     def flush(self) -> dict[int, dict]:
-        """Run all pending requests; returns {rid: {hd, lower, upper}}."""
-        out: dict[int, dict] = {}
-        by_bucket: dict[tuple[int, int], list] = {}
-        for rid, a, b in self._pending:
-            n = _bucket(max(a.shape[0], b.shape[0]), self.cfg.bucket_sizes)
-            by_bucket.setdefault((n, a.shape[1]), []).append((rid, a, b))
-        self._pending.clear()
+        """Run all pending requests.
 
-        for (n, d), reqs in by_bucket.items():
+        Pairwise results: {rid: {hd, lower, upper}}.
+        Search results:   {rid: {ids, values, stats}} (exact top-k).
+        """
+        out: dict[int, dict] = {}
+        by_bucket: dict[tuple[int, int, int], list] = {}
+        for rid, a, b in self._pending:
+            n_a = _bucket(a.shape[0], self.cfg.bucket_sizes)
+            n_b = _bucket(b.shape[0], self.cfg.bucket_sizes)
+            by_bucket.setdefault((n_a, n_b, a.shape[1]), []).append((rid, a, b))
+        self._pending.clear()
+        searches = list(self._pending_searches)
+        self._pending_searches.clear()
+        self._next_rid = 0
+
+        for (n_a, n_b, d), reqs in by_bucket.items():
             for i in range(0, len(reqs), self.cfg.max_batch):
                 chunk = reqs[i : i + self.cfg.max_batch]
                 batch = len(chunk)
-                pa = jnp.zeros((batch, n, d))
-                pb = jnp.zeros((batch, n, d))
-                va = jnp.zeros((batch, n), bool)
-                vb = jnp.zeros((batch, n), bool)
-                for j, (_, a, b) in enumerate(chunk):
-                    pa = pa.at[j, : a.shape[0]].set(a)
-                    va = va.at[j, : a.shape[0]].set(True)
-                    pb = pb.at[j, : b.shape[0]].set(b)
-                    vb = vb.at[j, : b.shape[0]].set(True)
-                hd, lo, bound = self._fn(n, d, batch)(pa, va, pb, vb)
+                pa, va = pack_sets([np.asarray(a) for _, a, _ in chunk], n_a, d)
+                pb, vb = pack_sets([np.asarray(b) for _, _, b in chunk], n_b, d)
+                hd, lo, up = self._fn(n_a, n_b, d, batch)(
+                    jnp.asarray(pa), jnp.asarray(va), jnp.asarray(pb), jnp.asarray(vb)
+                )
                 for j, (rid, _, _) in enumerate(chunk):
                     out[rid] = {
                         "hd": float(hd[j]),
                         "lower": float(lo[j]),
-                        "upper": float(lo[j]) + float(bound[j]),
+                        "upper": float(up[j]),
                     }
+
+        for rid, query, k, variant in searches:
+            from repro.hd import search as hd_search
+
+            res = hd_search(query, self.store, k, variant=variant)
+            out[rid] = {
+                "ids": res.ids.tolist(),
+                "values": res.values.tolist(),
+                "stats": res.stats,
+            }
         return out

@@ -1,0 +1,49 @@
+"""The repro.core compat shims must attribute their DeprecationWarning to
+the CALLER's frame (the code that needs migrating), not to the shim module
+itself — pinned here by filename."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as core
+
+A = jnp.asarray(jax.random.normal(jax.random.PRNGKey(0), (12, 4)))
+B = jnp.asarray(jax.random.normal(jax.random.PRNGKey(1), (10, 4)))
+
+
+def _sole_deprecation(record):
+    msgs = [w for w in record if w.category is DeprecationWarning]
+    assert len(msgs) == 1, [str(w.message) for w in record]
+    return msgs[0]
+
+
+@pytest.mark.parametrize(
+    "call",
+    [
+        lambda: core.hausdorff_dense(A, B),
+        lambda: core.hausdorff_tiled(A, B),
+        lambda: core.hausdorff_fused_tiled(A, B),
+        lambda: core.chamfer(A, B),
+        lambda: core.partial_hausdorff(A, B),
+        lambda: core.prohd(A, B, core.ProHDConfig(alpha=0.3)),
+        lambda: core.random_sampling_hd(jax.random.PRNGKey(2), A, B, 0.3),
+        lambda: core.systematic_sampling_hd(jax.random.PRNGKey(2), A, B, 0.3),
+        lambda: core.prohd_with_budget(A, B, budget=10.0),
+    ],
+    ids=[
+        "hausdorff_dense", "hausdorff_tiled", "hausdorff_fused_tiled",
+        "chamfer", "partial_hausdorff", "prohd",
+        "random_sampling_hd", "systematic_sampling_hd", "prohd_with_budget",
+    ],
+)
+def test_shim_warning_names_the_caller(call):
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        call()
+    w = _sole_deprecation(record)
+    # the reported location is THIS test file (the lambda's frame), never
+    # src/repro/core/__init__.py where the shim lives
+    assert w.filename == __file__, (w.filename, str(w.message))
+    assert "repro.core." in str(w.message) and "repro.hd." in str(w.message)

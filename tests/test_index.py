@@ -1,0 +1,323 @@
+"""repro.index: SetStore packing/summaries + certified cascade search.
+
+The headline invariant is the certification: ``search()`` top-k ids and
+values must be BIT-FOR-BIT identical to brute-force exact ranking, for any
+corpus, any k (including ties and k ≥ corpus size), any padding layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masked
+from repro.core.exact import hausdorff_dense
+from repro.hd import search as hd_search
+from repro.index import (
+    SetStore,
+    bound_scale,
+    bucket_capacity,
+    certified_margins,
+    direction_bank,
+    interval_bounds,
+    search,
+    summarize_set,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _corpus(seed, n_sets=24, d=4, max_n=20, n_clusters=6, spread=8.0, dup_every=0):
+    """Ragged clustered corpus; every ``dup_every``-th set is an exact
+    duplicate of an earlier one (forcing exactly-tied distances)."""
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(n_clusters, d).astype(np.float32) * spread
+    sets = []
+    for i in range(n_sets):
+        if dup_every and i % dup_every == 0 and i > 0:
+            sets.append(sets[rng.randint(len(sets))].copy())
+            continue
+        n = rng.randint(1, max_n + 1)
+        c = centers[rng.randint(n_clusters)]
+        sets.append((c + rng.randn(n, d) * 0.5).astype(np.float32))
+    return sets, rng
+
+
+def _query(rng, sets, d, n_q=9):
+    return (np.asarray(sets[0]).mean(axis=0) + rng.randn(n_q, d) * 0.5).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# SetStore
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_capacity_power_of_two():
+    assert bucket_capacity(1) == 8            # min_bucket floor
+    assert bucket_capacity(8) == 8
+    assert bucket_capacity(9) == 16
+    assert bucket_capacity(100) == 128
+    assert bucket_capacity(3, min_bucket=2) == 4
+
+
+def test_store_roundtrip_and_packing():
+    sets, _ = _corpus(0)
+    store = SetStore(dim=4)
+    ids = store.add_many(sets)
+    assert ids == list(range(len(sets)))
+    assert store.n_sets == len(sets)
+    assert store.total_points == sum(s.shape[0] for s in sets)
+    for sid, pts in zip(ids, sets):
+        np.testing.assert_array_equal(np.asarray(store.get(sid)), pts)
+    # every set appears in exactly one bucket, with its padding masked off
+    # and its sqnorms +inf-poisoned outside the valid rows
+    seen = []
+    for cap, bucket in store.packed_buckets().items():
+        assert bucket.points.shape[1:] == (cap, 4)
+        for row, sid in enumerate(bucket.set_ids):
+            n = sets[sid].shape[0]
+            assert cap >= n
+            np.testing.assert_array_equal(
+                np.asarray(bucket.points[row, :n]), sets[sid]
+            )
+            assert bool(jnp.all(bucket.valid[row, :n]))
+            assert not bool(jnp.any(bucket.valid[row, n:]))
+            assert bool(jnp.all(jnp.isinf(bucket.sqnorms[row, n:])))
+            seen.append(int(sid))
+    assert sorted(seen) == ids
+
+
+def test_store_rejects_bad_sets():
+    store = SetStore(dim=3)
+    with pytest.raises(ValueError):
+        store.add(np.zeros((0, 3), np.float32))     # empty set
+    with pytest.raises(ValueError):
+        store.add(np.zeros((4, 5), np.float32))     # wrong dim
+    with pytest.raises(ValueError):
+        search(np.zeros((4, 3), np.float32), store, 1)  # empty store
+
+
+def test_summaries_match_numpy_reference():
+    sets, _ = _corpus(1, n_sets=10)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    sums = store.summaries()
+    dirs = np.asarray(store.directions)
+    for sid, pts in enumerate(sets):
+        c = pts.mean(axis=0)
+        r = np.linalg.norm(pts - c, axis=1)
+        proj = pts @ dirs
+        np.testing.assert_allclose(np.asarray(sums.centroid[sid]), c, atol=1e-5)
+        np.testing.assert_allclose(float(sums.r_min[sid]), r.min(), atol=1e-5)
+        np.testing.assert_allclose(float(sums.r_max[sid]), r.max(), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(sums.proj_lo[sid]), proj.min(axis=0), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(sums.proj_hi[sid]), proj.max(axis=0), rtol=1e-4, atol=1e-4
+        )
+        assert int(sums.count[sid]) == pts.shape[0]
+
+
+def test_summarize_is_padding_invariant():
+    rng = np.random.RandomState(2)
+    pts = rng.randn(11, 4).astype(np.float32)
+    dirs = direction_bank(4, 2)
+    raw, _ = summarize_set(jnp.asarray(pts), jnp.ones((11,), bool), dirs)
+    padded = np.zeros((32, 4), np.float32)
+    padded[:11] = pts
+    # poison the padding with garbage: summaries must not see it
+    padded[11:] = 1e9
+    valid = np.zeros((32,), bool)
+    valid[:11] = True
+    masked_sum, sqn = summarize_set(jnp.asarray(padded), jnp.asarray(valid), dirs)
+    for f_raw, f_masked in zip(raw, masked_sum):
+        np.testing.assert_allclose(np.asarray(f_raw), np.asarray(f_masked), rtol=1e-6)
+    assert bool(jnp.all(jnp.isinf(sqn[11:])))
+
+
+# ---------------------------------------------------------------------------
+# certified bounds
+# ---------------------------------------------------------------------------
+
+
+def test_interval_bounds_contain_true_hd():
+    rng = np.random.RandomState(3)
+    dirs = direction_bank(6, 3)
+    # the 1e5 offset is the catastrophic-cancellation regime: projection
+    # gaps of huge-coordinate clouds carry absolute fp32 error far larger
+    # than any relative-in-the-gap margin — bound_scale must absorb it
+    for trial, offset in [(t, o) for t in range(10) for o in (0.0, 1e5)]:
+        a = (rng.randn(rng.randint(1, 30), 6) * rng.choice([0.3, 1.0, 5.0]) + offset).astype(np.float32)
+        b = (rng.randn(rng.randint(1, 30), 6) + rng.randn(6) * 4 + offset).astype(np.float32)
+        sa, _ = summarize_set(jnp.asarray(a), jnp.ones((a.shape[0],), bool), dirs)
+        sb, _ = summarize_set(jnp.asarray(b), jnp.ones((b.shape[0],), bool), dirs)
+        h = float(hausdorff_dense(a, b))
+        scale = bound_scale(sa, sb)
+        lb, ub = certified_margins(*interval_bounds(sa, sb), scale, 6)
+        assert float(lb) <= h <= float(ub), (trial, offset, float(lb), h, float(ub))
+        # directed bounds against directed truth
+        from repro.core.exact import directed_hd_dense
+
+        hd = float(directed_hd_dense(a, b))
+        lbd, ubd = certified_margins(*interval_bounds(sa, sb, directed=True), scale, 6)
+        assert float(lbd) <= hd <= float(ubd), (trial, offset, float(lbd), hd, float(ubd))
+
+
+def test_masked_prohd_certificate_contains_truth_and_ignores_padding():
+    rng = np.random.RandomState(4)
+    a = rng.randn(13, 4).astype(np.float32)
+    b = (rng.randn(9, 4) + 3.0).astype(np.float32)
+
+    def padded(x, cap):
+        p = np.full((cap, 4), 7.7e8, np.float32)  # garbage padding
+        p[: x.shape[0]] = x
+        v = np.zeros((cap,), bool)
+        v[: x.shape[0]] = True
+        return jnp.asarray(p), jnp.asarray(v)
+
+    h = float(hausdorff_dense(a, b))
+    certs = []
+    for cap_a, cap_b in ((16, 16), (32, 64)):
+        pa, va = padded(a, cap_a)
+        pb, vb = padded(b, cap_b)
+        cert = masked.masked_prohd_certified_jit(pa, va, pb, vb, alpha=0.2, m=2)
+        assert float(cert.lower) <= h * (1 + 1e-5) + 1e-6
+        assert h <= float(cert.upper) * (1 + 1e-5) + 1e-6
+        assert float(cert.hd) <= h * (1 + 1e-5) + 1e-6  # full-inner: never over
+        certs.append(cert)
+    # the certificate is a function of the valid rows only — padding
+    # layouts agree up to fp re-association (selection k's differ with
+    # capacity, which may move hd; lower/upper are selection-free)
+    np.testing.assert_allclose(float(certs[0].lower), float(certs[1].lower), rtol=2e-3)
+    np.testing.assert_allclose(float(certs[0].upper), float(certs[1].upper), rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# cascade == brute force
+# ---------------------------------------------------------------------------
+
+
+def _assert_search_matches_bruteforce(sets, q, k, variant="hausdorff", min_bucket=8):
+    store = SetStore(dim=q.shape[1], min_bucket=min_bucket)
+    store.add_many(sets)
+    res = search(q, store, k, variant=variant)
+    ref = search(q, store, k, variant=variant, method="exact")
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)
+    assert res.stats["exact_refines"] <= ref.stats["exact_refines"]
+    return res
+
+
+def test_search_matches_bruteforce_with_duplicates_and_large_k():
+    sets, rng = _corpus(5, n_sets=22, dup_every=3)
+    q = _query(rng, sets, 4)
+    _assert_search_matches_bruteforce(sets, q, 5)
+    _assert_search_matches_bruteforce(sets, q, 100)   # k >= corpus size
+    _assert_search_matches_bruteforce(sets, q, 5, variant="directed")
+
+
+def test_search_is_padding_invariant():
+    sets, rng = _corpus(6, n_sets=18)
+    q = _query(rng, sets, 4)
+    results = [
+        _assert_search_matches_bruteforce(sets, q, 4, min_bucket=mb)
+        for mb in (2, 8, 32)
+    ]
+    for r in results[1:]:
+        np.testing.assert_array_equal(r.ids, results[0].ids)
+        np.testing.assert_array_equal(r.values, results[0].values)
+
+
+def test_search_prunes_separated_corpus():
+    from repro.data.pointclouds import clustered_sets
+
+    sets, _ = clustered_sets(
+        jax.random.PRNGKey(7), 64, 4, sizes=(8, 16), n_clusters=8, spread=20.0
+    )
+    rng = np.random.RandomState(8)
+    q = _query(rng, sets, 4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    res = search(q, store, 3)
+    ref = search(q, store, 3, method="exact")
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)
+    assert res.stats["prune_fraction"] > 0.5
+    assert res.stats["exact_refines"] < 32
+
+
+def test_front_door_search_is_the_cascade():
+    sets, rng = _corpus(9, n_sets=12)
+    q = _query(rng, sets, 4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    res = hd_search(q, store, 3, measure=True)
+    ref = search(q, store, 3)
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)
+    assert res.meta.variant == "hausdorff"
+    assert res.meta.method == "cascade"
+    assert res.meta.elapsed_s is not None
+    assert {"candidates_scanned", "exact_refines", "prune_fraction"} <= set(res.stats)
+
+
+def test_search_validates_axes():
+    sets, rng = _corpus(10, n_sets=4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    q = _query(rng, sets, 4)
+    with pytest.raises(ValueError):
+        search(q, store, 1, variant="chamfer")
+    with pytest.raises(ValueError):
+        search(q, store, 1, method="prohd")
+    with pytest.raises(ValueError):
+        search(q, store, 0)
+    with pytest.raises(ValueError):
+        search(q[:, :2], store, 1)
+
+
+def test_search_matches_bruteforce_on_large_magnitude_corpus():
+    # coordinates ~1e5: certification must survive fp32 cancellation in
+    # every stage's bounds (regression for the scale-aware margins)
+    sets, rng = _corpus(14, n_sets=20, dup_every=4)
+    sets = [s + np.float32(1e5) for s in sets]
+    q = _query(rng, sets, 4)
+    _assert_search_matches_bruteforce(sets, q, 4)
+
+
+def test_interleaved_add_search_repacks_only_the_touched_bucket():
+    sets, rng = _corpus(15, n_sets=12, max_n=7)   # all land in the 8-bucket
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    q = _query(rng, sets, 4)
+    search(q, store, 2)
+    before = store.packed_buckets()
+    store.add(np.zeros((30, 4), np.float32) + 50.0)  # lands in the 32-bucket
+    res = search(q, store, 2)
+    after = store.packed_buckets()
+    # the untouched 8-bucket's device arrays were reused, not re-stacked
+    assert after[8].points is before[8].points
+    assert set(after) == {8, 32}
+    ref = search(q, store, 2, method="exact")
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)
+
+
+def test_masked_projected_hd_empty_target_side_is_zero():
+    pa = jnp.asarray(np.random.RandomState(0).randn(6, 2), jnp.float32)
+    va = jnp.ones((6,), bool)
+    pb = jnp.full((4, 2), 123.0, jnp.float32)
+    vb = jnp.zeros((4,), bool)  # no valid targets at all
+    assert float(masked.masked_projected_hd(pa, va, pb, vb, directed=True)) == 0.0
+
+
+# Deterministic sweep of the same property the hypothesis module
+# (tests/test_index_properties.py) hunts adversarially — keeps the
+# certification exercised even where hypothesis is not installed.
+@pytest.mark.parametrize("seed,k,dup_every", [(11, 1, 0), (12, 3, 3), (13, 1000, 2)])
+def test_cascade_identical_to_bruteforce_seeded(seed, k, dup_every):
+    sets, rng = _corpus(seed, n_sets=16, d=4, max_n=14, dup_every=dup_every)
+    q = _query(rng, sets, 4)
+    _assert_search_matches_bruteforce(sets, q, k)

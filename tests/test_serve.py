@@ -1,10 +1,11 @@
 """ProHD serving layer: bucketing, masking correctness, certified bounds."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hausdorff_tiled
 from repro.data.pointclouds import random_clouds
-from repro.serve.server import ProHDService, ServeConfig
+from repro.serve.server import ProHDService, ServeConfig, _bucket
 
 KEY = jax.random.PRNGKey(0)
 
@@ -50,3 +51,92 @@ def test_flush_clears_queue():
     first = svc.flush()
     assert len(first) == 1
     assert svc.flush() == {}
+
+
+def test_bucket_rounds_up_beyond_largest_configured():
+    buckets = (128, 512)
+    assert _bucket(100, buckets) == 128
+    assert _bucket(512, buckets) == 512
+    # beyond the largest configured bucket: next power of two, NEVER a
+    # capacity smaller than the request
+    assert _bucket(513, buckets) == 1024
+    assert _bucket(1024, buckets) == 1024
+    assert _bucket(1025, buckets) == 2048
+    for n in (513, 700, 4097):
+        assert _bucket(n, buckets) >= n
+
+
+def test_oversized_request_is_served_not_truncated():
+    svc = ProHDService(ServeConfig(alpha=0.1, bucket_sizes=(64,)))
+    a, b = random_clouds(KEY, 200, 150, 4)  # larger than every bucket
+    rid = svc.submit(a, b)
+    out = svc.flush()
+    h = float(hausdorff_tiled(a, b))
+    assert out[rid]["lower"] <= h * 1.0001
+    assert h <= out[rid]["upper"] * 1.0001 + 1e-4
+
+
+def test_sides_bucket_independently():
+    svc = ProHDService(ServeConfig(alpha=0.1, bucket_sizes=(128, 1024)))
+    a, b = random_clouds(KEY, 100, 1000, 4)  # small vs large
+    svc.submit(a, b)
+    out = svc.flush()
+    assert len(out) == 1
+    # the small side must NOT be padded up to the large side's bucket
+    assert list(svc._compiled) == [(128, 1024, 4, 1)]
+
+
+def test_corpus_search_requests():
+    rng = np.random.RandomState(0)
+    centers = rng.randn(4, 6).astype(np.float32) * 10.0
+    svc = ProHDService(ServeConfig(alpha=0.1))
+    sids = [
+        svc.add_set(centers[i % 4] + rng.randn(20, 6).astype(np.float32) * 0.5)
+        for i in range(12)
+    ]
+    assert sids == list(range(12))
+    q = centers[2] + rng.randn(15, 6).astype(np.float32) * 0.5
+    # mixed flush: one pairwise + one corpus request, distinct rids
+    r_pair = svc.submit(q, svc.store.get(0))
+    r_search = svc.submit_search(q, k=3)
+    assert r_pair != r_search
+    out = svc.flush()
+    assert set(out) == {r_pair, r_search}
+    res = out[r_search]
+    assert len(res["ids"]) == 3 and len(res["values"]) == 3
+    # the nearest sets are the cluster-2 members, exactly ranked
+    from repro.hd import search as hd_search
+
+    ref = hd_search(q, svc.store, 3, method="exact")
+    assert res["ids"] == ref.ids.tolist()
+    assert res["values"] == ref.values.tolist()
+    assert res["stats"]["exact_refines"] <= 12
+
+
+def test_search_without_corpus_raises():
+    svc = ProHDService()
+    try:
+        svc.submit_search(jnp.ones((4, 3)), k=1)
+    except ValueError as e:
+        assert "add_set" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected ValueError")
+
+
+def test_bad_search_request_bounces_at_submit_not_flush():
+    import pytest
+
+    svc = ProHDService()
+    svc.add_set(jnp.ones((8, 3)))
+    a, b = random_clouds(KEY, 40, 40, 3)
+    rid = svc.submit(a, b)
+    with pytest.raises(ValueError):
+        svc.submit_search(jnp.ones((4, 3)), k=0)          # bad k
+    with pytest.raises(ValueError):
+        svc.submit_search(jnp.ones((4, 5)), k=1)          # wrong dim
+    with pytest.raises(ValueError):
+        svc.submit_search(jnp.ones((4, 3)), k=1, variant="chamfer")
+    # the malformed submissions must not have poisoned the queue: the
+    # pairwise request still flushes and returns
+    out = svc.flush()
+    assert set(out) == {rid}

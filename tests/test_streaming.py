@@ -59,6 +59,39 @@ def test_reservoir_warms_sequentially():
     assert jnp.allclose(state.buffer, batch)
 
 
+def test_ref_summary_precomputed_once_and_tightens_interval():
+    ref, ks = _ref_and_stream()
+    cfg = DriftMonitorConfig(window=256, dim=16, prohd=ProHDConfig(alpha=0.1))
+    state = init_drift_monitor(cfg, ref, ks)
+    # the reference summary rides in the state (computed once at init)
+    assert state.ref_summary.centroid.shape == (16,)
+    assert state.directions.shape[0] == 16
+    assert int(state.ref_summary.count) == ref.shape[0]
+    state = observe(state, jax.random.normal(jax.random.fold_in(ks, 9), (128, 16)) + 6.0)
+    rep = check_drift(state, cfg)
+    # interval still contains the truth after intersecting summary bounds
+    from repro.core.exact import hausdorff_dense
+
+    H = float(hausdorff_dense(state.reference, state.buffer))
+    assert float(rep.lower) <= H + 1e-3
+    assert H <= float(rep.upper) + 1e-3
+
+
+def test_summary_bounds_replace_vacuous_interval():
+    # An estimator config with no certificate of its own used to yield
+    # [0, inf); the precomputed summaries now bound it for free.
+    ref, ks = _ref_and_stream()
+    cfg = DriftMonitorConfig(
+        window=128, dim=16,
+        prohd=ProHDConfig(alpha=0.1, compute_projected=False, compute_bound=False),
+    )
+    state = init_drift_monitor(cfg, ref, ks)
+    state = observe(state, jax.random.normal(jax.random.fold_in(ks, 3), (128, 16)) + 12.0)
+    rep = check_drift(state, cfg)
+    assert float(rep.lower) > 0.0
+    assert jnp.isfinite(rep.upper)
+
+
 def test_observe_is_jittable():
     ref, ks = _ref_and_stream(dim=8)
     cfg = DriftMonitorConfig(window=16, dim=8)
