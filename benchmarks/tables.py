@@ -370,6 +370,82 @@ def bench_index(n_sets: int = 5000, d: int = 16, k: int = 10) -> list[str]:
     return rows
 
 
+def bench_index_stage2(n_sets: int = 2000, d: int = 16, k: int = 10) -> list[str]:
+    """PR 4 tentpole: batched vs sequential stage-2 frontier refinement.
+
+    Same certified cascade, same corpus, same query — only the stage-2
+    dispatch granularity differs:
+
+    - ``batched``    — one vmapped masked exact pass per surviving bucket
+      (±fp_margin tightening), then raw refines for the ≈ k boundary
+      candidates only;
+    - ``sequential`` — the legacy loop: one raw front-door refine per
+      frontier candidate.
+
+    The corpus sizes are RAGGED on purpose (quantized to multiples of 8 so
+    brute force stays compilable): sequential stage 2 pays one jit trace
+    per distinct raw set shape it refines, batched one per (bucket
+    capacity, pow2 batch) pair.  Derived fields carry the
+    ``scripts/check.sh`` gate: ``identical`` (vs brute force, bit for
+    bit), ``refines``, ``stage2_calls``, ``stage2_shapes`` and the
+    batched-vs-sequential speedup.
+    """
+    import numpy as np
+
+    from repro.data.pointclouds import clustered_sets
+    from repro.hd import search
+    from repro.index import SetStore
+
+    key = jax.random.fold_in(KEY, 2718)
+    sets, _ = clustered_sets(key, n_sets, d, sizes=tuple(range(48, 257, 8)))
+
+    store = SetStore(dim=d)
+    store.add_many(sets)
+    store.summaries()
+    store.packed_buckets()
+
+    qrng = np.random.RandomState(11)
+    q = np.asarray(sets[0]).mean(axis=0) + qrng.randn(128, d).astype(np.float32) * 0.5
+
+    t_bat, res_bat = timed(lambda: search(q, store, k, stage2="batched"), iters=3)
+    t_seq, res_seq = timed(lambda: search(q, store, k, stage2="sequential"), iters=3)
+    t_bru, ref = timed_once(lambda: search(q, store, k, method="exact"))
+
+    def against_ref(res):
+        return bool(
+            np.array_equal(res.ids, ref.ids) and np.array_equal(res.values, ref.values)
+        )
+
+    def derived(res, t, identical):
+        s = res.stats
+        return (
+            f"k={k};candidates={s['candidates_scanned']};"
+            f"refines={s['exact_refines']};stage2_calls={s['stage2_calls']};"
+            f"stage2_shapes={s['stage2_distinct_shapes']};"
+            f"speedup_vs_sequential={t_seq/t:.2f}x;identical={identical}"
+        )
+
+    ib, isq = against_ref(res_bat), against_ref(res_seq)
+    rows = [
+        csv_row("index_stage2/batched", t_bat * 1e6, derived(res_bat, t_bat, ib)),
+        csv_row("index_stage2/sequential", t_seq * 1e6, derived(res_seq, t_seq, isq)),
+        csv_row(
+            "index_stage2/bruteforce", t_bru * 1e6,
+            f"k={k};refines={ref.stats['exact_refines']};"
+            f"speedup_vs_batched={t_bru/t_bat:.2f}x",
+        ),
+    ]
+    REPORT.append(
+        f"index stage2 ({n_sets} ragged sets, D={d}, k={k}): batched "
+        f"{t_seq/t_bat:.2f}x vs sequential "
+        f"({res_bat.stats['exact_refines']} vs {res_seq.stats['exact_refines']} raw "
+        f"refines, {res_bat.stats['stage2_distinct_shapes']} vs "
+        f"{res_seq.stats['stage2_distinct_shapes']} stage-2 jit shapes), "
+        f"identical top-k: {ib and isq}"
+    )
+    return rows
+
+
 def bench_dispatch_overhead() -> list[str]:
     """PR 2: the front door's python dispatch cost vs the direct kernel call.
 

@@ -60,3 +60,42 @@ assert refines < 0.5 * candidates, (
 assert prune > 0.5, f"prune_fraction {prune:.3f} <= 0.5 on a separated corpus"
 PY
 fi
+
+# PR 4 gates.
+# (a) The conformance harness: padded-masked vs raw reductions bitwise per
+#     backend on this platform, layout invariances, and the pinned
+#     fp-margin contract everywhere bitwise is unattainable.  Also part of
+#     tier-1 collection; run explicitly so a gate failure names the suite.
+echo "== conformance suite (padded-vs-raw reductions) =="
+python -m pytest -q -m conformance tests/conformance
+
+# (b) Batched vs sequential stage-2 frontier refinement: identical top-k
+#     (both bit-for-bit vs brute force), no more raw refines, fewer
+#     distinct stage-2 jit shapes, and wall clock no slower (10% timing
+#     grace) -> BENCH_PR4.json.
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  echo "== batched stage-2 benchmark (JSON -> BENCH_PR4.json) =="
+  python -m benchmarks.run --only index_stage2 --json BENCH_PR4.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR4.json"))["rows"]}
+bat = rows["index_stage2/batched"]
+seq = rows["index_stage2/sequential"]
+db = dict(kv.split("=", 1) for kv in bat["derived"].split(";"))
+ds = dict(kv.split("=", 1) for kv in seq["derived"].split(";"))
+print(f"stage2 batched:    {bat['us_per_call']:.0f}us, refines={db['refines']}, "
+      f"jit shapes={db['stage2_shapes']}, identical={db['identical']}")
+print(f"stage2 sequential: {seq['us_per_call']:.0f}us, refines={ds['refines']}, "
+      f"jit shapes={ds['stage2_shapes']}, identical={ds['identical']}")
+assert db["identical"] == "True", "batched stage-2 top-k differs from brute force"
+assert ds["identical"] == "True", "sequential stage-2 top-k differs from brute force"
+assert int(db["refines"]) <= int(ds["refines"]), (
+    "batched stage 2 raw-refined MORE candidates than sequential")
+assert int(db["stage2_shapes"]) < int(ds["stage2_shapes"]), (
+    "batched stage 2 did not reduce distinct stage-2 jit shapes")
+assert bat["us_per_call"] <= seq["us_per_call"] * 1.10, (
+    f"batched stage 2 slower than sequential: "
+    f"{bat['us_per_call']:.0f}us vs {seq['us_per_call']:.0f}us")
+PY
+fi

@@ -42,6 +42,8 @@ from repro.core import exact, selection
 
 __all__ = [
     "MaskedCertificate",
+    "EXACT_MASKED_BACKENDS",
+    "masked_exact_hd",
     "masked_centroid",
     "masked_direction_set",
     "masked_projected_hd",
@@ -52,6 +54,108 @@ __all__ = [
 # Same large-but-finite sentinel as tile_bounds: ±inf would poison interval
 # arithmetic (inf − inf = NaN) in all-invalid corner cases.
 _BIG = 1e30
+
+
+# ---------------------------------------------------------------------------
+# exact masked reductions — the padded mirrors of the raw oracles
+# ---------------------------------------------------------------------------
+#
+# Each backend below computes the EXACT set distance of (possibly padded)
+# clouds using the same op sequence as its raw front-door counterpart, with
+# validity folded in as zeroed rows + +inf-poisoned norms.  The contract —
+# pinned empirically by the conformance harness (tests/conformance/) and
+# relied on by the cascade's batched stage-2 tightening — is layered:
+#
+#   * DETERMINISM: identical inputs at identical shapes give identical
+#     bits — min/max reductions are exact, +inf entries lose every min
+#     exactly, and retiling (block sizes) only reassociates exact mins, so
+#     block layout provably cannot move a bit.  Under vmap, lane results
+#     are invariant to batch size and composition.
+#   * ACROSS GEMM SHAPES (raw n vs padded capacity, batched vs unbatched
+#     matmul, backend formulation ``(a²−2ab)+b²`` vs ``(b²−2ba)+a²``),
+#     bitwise equality is NOT a contract: XLA may lower different shapes
+#     through different kernels whose contraction rounding differs — the
+#     harness records a real one-ulp CPU counterexample on cancellation-
+#     heavy data.  What IS certified is the pinned fp margin
+#     ``2·sqrt((D+2)·eps32)·scale`` (``repro.index.cascade.fp_margin``):
+#     every formulation lands within it of the float64 truth, hence any
+#     two land within 2× it of each other.  Same-shape padded-vs-raw
+#     equality does hold bitwise across the harness's whole CPU sweep; the
+#     cascade deliberately does not lean on it.
+#
+# Empty-side conventions (shared with ``exact.finalize_mins``): an
+# all-invalid QUERY side reduces to 0.0; an all-invalid TARGET side leaves
+# every nearest-distance at +inf (the sup-distance to an empty set).
+
+
+def _masked_exact_dense(a, b, valid_a, valid_b, *, directed, block_a, block_b):
+    del block_a, block_b  # dense is one unblocked GEMM per direction
+    if directed:
+        return exact.directed_hd_dense(a, b, valid_a=valid_a, valid_b=valid_b)
+    return exact.hausdorff_dense(a, b, valid_a=valid_a, valid_b=valid_b)
+
+
+def _masked_exact_tiled(a, b, valid_a, valid_b, *, directed, block_a, block_b):
+    if directed:
+        return exact.directed_hd_tiled(
+            a, b, valid_a=valid_a, valid_b=valid_b, block=block_b
+        )
+    return exact.hausdorff_fused_tiled(
+        a, b, valid_a=valid_a, valid_b=valid_b, block_a=block_a, block_b=block_b
+    )
+
+
+def _masked_exact_fused_mirror(a, b, valid_a, valid_b, *, directed, block_a, block_b):
+    min_a, min_b = exact.fused_min_sqdists_tiled(
+        a, b, valid_a=valid_a, valid_b=valid_b, block_a=block_a, block_b=block_b
+    )
+    h = exact.finalize_mins(min_a, valid_a)
+    if directed:
+        return h
+    return jnp.maximum(h, exact.finalize_mins(min_b, valid_b))
+
+
+# Registry the conformance harness sweeps: name -> masked exact reduction.
+# "dense" and "tiled" mirror the front door's exact/dense and exact/tiled
+# dispatches op-for-op (the batched cascade leans on that); "fused_mirror"
+# is the raw min-vector reduction of the fused Pallas kernel's pure-JAX
+# mirror, kept distinct so single-pass kernels inherit the same contract.
+EXACT_MASKED_BACKENDS = {
+    "dense": _masked_exact_dense,
+    "tiled": _masked_exact_tiled,
+    "fused_mirror": _masked_exact_fused_mirror,
+}
+
+
+def masked_exact_hd(
+    a,
+    b,
+    *,
+    valid_a=None,
+    valid_b=None,
+    directed: bool = False,
+    backend: str = "dense",
+    block_a: int = 2048,
+    block_b: int = 2048,
+) -> jnp.ndarray:
+    """EXACT (directed) Hausdorff distance of padded masked clouds.
+
+    Exact arithmetic over the valid rows only — any padding layout yields
+    the same value up to GEMM-shape rounding, which the conformance
+    harness pins to ``fp_margin`` (bitwise wherever shapes agree).  Safe
+    to vmap over a storage bucket's candidate axis — exactly what the
+    cascade's batched stage-2 tightening does.
+    """
+    try:
+        impl = EXACT_MASKED_BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown masked exact backend {backend!r}; expected one of "
+            f"{tuple(EXACT_MASKED_BACKENDS)}"
+        ) from None
+    return impl(
+        a, b, valid_a, valid_b, directed=directed, block_a=block_a, block_b=block_b
+    )
 
 
 def masked_centroid(points: jnp.ndarray, valid_f: jnp.ndarray) -> jnp.ndarray:

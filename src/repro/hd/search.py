@@ -34,6 +34,7 @@ def search(
     variant: str = "hausdorff",
     method: str = "cascade",
     backend: str = "auto",
+    stage2: str = "batched",
     config: HDConfig | None = None,
     measure: bool = False,
 ):
@@ -41,12 +42,14 @@ def search(
 
     The cascade's top-k is provably identical to ``method="exact"`` (brute
     force) — certified pruning only ever discards candidates that at least
-    k others beat outright.
+    k others beat outright.  ``stage2`` picks the frontier-refinement
+    dispatch (``"batched"`` vmapped per bucket, the default, or the legacy
+    ``"sequential"`` per-candidate loop); both return identical bits.
     """
     from repro.index import cascade
 
     return cascade.search(
         query, store, k,
-        variant=variant, method=method, backend=backend,
+        variant=variant, method=method, backend=backend, stage2=stage2,
         config=config, measure=measure,
     )

@@ -21,9 +21,12 @@ dispatch from the same place as pairwise ones::
 from repro.index.cascade import (
     SEARCH_METHODS,
     SEARCH_VARIANTS,
+    STAGE2_MODES,
     SearchResult,
     bound_scale,
     certified_margins,
+    fp_margin,
+    fp_value_margin,
     interval_bounds,
     search,
 )
@@ -47,7 +50,10 @@ __all__ = [
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
+    "STAGE2_MODES",
     "interval_bounds",
     "bound_scale",
     "certified_margins",
+    "fp_margin",
+    "fp_value_margin",
 ]

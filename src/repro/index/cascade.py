@@ -16,10 +16,35 @@ certified interval around every candidate's true distance to the query:
       full-inner subset estimate (never overestimates → certified lower
       bound), max_u H_u (lower), and the Eq. 5 additive bound (upper),
       one vmapped call per storage bucket.
-  stage 2 — **exact refinement** of the remaining frontier: candidates are
-      resolved in ascending-lower-bound order through the exact
-      ``repro.hd`` front door on their RAW (unpadded) points, so a refined
-      value is bit-for-bit the number brute force would compute.
+  stage 2 — **exact refinement** of the remaining frontier, in two beats
+      under ``stage2="batched"`` (the default):
+
+      2a. one vmapped masked EXACT pass per surviving bucket
+          (``core/masked.masked_exact_hd`` over the padded slabs, batch
+          padded to a power of two).  The padded value is exact arithmetic
+          on the valid rows, but its GEMM runs at a different shape than
+          the raw oracle's, and fp32 GEMM bits are NOT invariant across
+          shapes (the conformance harness demonstrates a real one-ulp
+          counterexample on CPU) — so 2a's result enters the cascade as a
+          certified interval ``value ± fp_margin(D, scale)``, never as
+          "the" value.  The margin is the conformance-pinned bound on how
+          far two fp32 exact computations of the same distance can land
+          apart.  One such pass collapses every frontier interval to
+          ±margin at a jit-cache cost of one entry per distinct (bucket
+          capacity, batch size) pair — the per-candidate dispatch overhead
+          of the historical loop is gone from the hot path.
+      2b. raw resolution of the candidates still straddling the top-k
+          boundary after 2a — ascending-lower-bound through the exact
+          ``repro.hd`` front door on RAW (unpadded) points, exactly the
+          historical loop, but now over ≈ k candidates (+ exact ties)
+          instead of the whole frontier.  Every RETURNED value therefore
+          remains bit-for-bit the number brute force computes, independent
+          of padding layout, batch composition, or stage-2 mode.
+
+      ``stage2="sequential"`` keeps the pure historical loop (every
+      frontier candidate raw-refined one at a time); both modes return
+      identical bits, and ``scripts/check.sh`` gates identity, jit-trace
+      reduction and wall clock.
 
 The prune rule is the certified one throughout: a candidate dies exactly
 when its certified lower bound exceeds τ, the current k-th smallest
@@ -63,6 +88,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masked, projections
+from repro.hd import resolver
 from repro.hd.config import HDConfig
 from repro.hd.result import HDMeta
 from repro.index.store import SetStore, SetSummary, bucket_capacity
@@ -71,14 +97,18 @@ __all__ = [
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
+    "STAGE2_MODES",
     "interval_bounds",
     "bound_scale",
     "certified_margins",
+    "fp_margin",
+    "fp_value_margin",
     "search",
 ]
 
 SEARCH_VARIANTS = ("hausdorff", "directed")
 SEARCH_METHODS = ("cascade", "exact")
+STAGE2_MODES = ("batched", "sequential")
 
 # fp safety margins applied to every certified bound (see module docstring).
 _EPS32 = float(np.finfo(np.float32).eps)
@@ -89,6 +119,49 @@ def _margin_factor(dim: int) -> float:
     """Per-unit-scale widening: covers the exact oracle's worst-case
     distance error sqrt((D+2)·eps)·scale with a 2x safety factor."""
     return 2.0 * float(np.sqrt((dim + 2) * _EPS32))
+
+
+def fp_margin(dim: int, scale):
+    """THE pinned fp32 margin: ``2·sqrt((dim+2)·eps32)·scale + 1e-6``.
+
+    The single source of truth for "how far apart may two fp32 exact-HD
+    computations of the same quantity legitimately land": it covers the
+    GEMM-form ``||a||² − 2ab + ||b||²`` cancellation error of operands
+    whose magnitudes are dominated by ``scale`` (see the module
+    docstring's error budget).  ``certified_margins`` widens the cascade's
+    bounds by exactly this; the conformance harness pins cross-backend
+    disagreement to it wherever bitwise equality is not the contract.
+    """
+    return scale * _margin_factor(dim) + _ABS
+
+
+def fp_value_margin(dim: int, scale, value):
+    """Value-aware sharpening of :func:`fp_margin` — still fully certified.
+
+    Both margins bound how far apart two fp32 exact-HD computations of the
+    same pair can land; ``fp_margin`` is the near-zero worst case.  Away
+    from zero the sqrt de-amplifies the GEMM's d² error: with
+    ``E = (dim+2)·eps32·scale²`` bounding ``|d̂² − d²|``, the identity
+    ``|√x − √y| = |x − y|/(√x + √y)`` gives a per-computation distance
+    error of ``min(√E, E/v)``.  For an observed value ``v̂`` (one of the
+    two computations), the other and the truth all live within
+    ``v̂ ± √E``, so a two-sided envelope of
+
+        2·√E                      if v̂ ≤ 2·√E   (the fp_margin regime)
+        2·E/(v̂ − √E) + 1e-6      otherwise
+
+    is certified — and orders of magnitude tighter than ``fp_margin`` at
+    ordinary distances, which is what lets the batched stage 2a actually
+    separate a frontier whose value gaps are small relative to ``scale``.
+    Host-side math: broadcasts over anything ``np.asarray`` accepts (jax
+    arrays included) and always computes in float64 — ``jnp`` would
+    silently truncate to fp32 without x64 — returning numpy.  Always
+    ≤ ``fp_margin + √E`` and monotone in ``scale``.
+    """
+    e = (dim + 2) * _EPS32 * np.asarray(scale, dtype=np.float64) ** 2
+    sqrt_e = np.sqrt(e)
+    lo = np.maximum(np.asarray(value, dtype=np.float64) - sqrt_e, 0.0)
+    return np.where(lo > sqrt_e, 2.0 * e / np.maximum(lo, 1e-300), 2.0 * sqrt_e) + _ABS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,7 +249,7 @@ def certified_margins(lb, ub, scale, dim: int):
     (possibly tiny) result.
     """
     xp = jnp if isinstance(lb, jnp.ndarray) else np
-    pad = scale * _margin_factor(dim) + _ABS
+    pad = fp_margin(dim, scale)
     return xp.maximum(lb - pad, 0.0), ub + pad
 
 
@@ -193,8 +266,41 @@ def _stage1_batch(q, pts, valid, *, alpha: float, m: int, directed: bool):
     return jax.vmap(one)(pts, valid)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("directed", "backend", "block_a", "block_b")
+)
+def _stage2_batch(q, pts, valid, *, directed, backend, block_a, block_b):
+    """EXACT masked HD, query vs a (B, cap, D) candidate slab — one bucket's
+    whole surviving frontier measured in a single jitted call.
+
+    Exact arithmetic over the valid rows of every lane; each lane's result
+    is certified (conformance harness, ``tests/conformance/``) to land
+    within ``fp_margin(D, scale)`` of the raw front-door value — the
+    batched GEMM's shape differs from the raw one's, so agreement is
+    margin-pinned, NOT bitwise.  Lane results are invariant to batch size
+    and composition (also conformance-pinned), so the cascade's bounds
+    never depend on which candidates happened to survive together.
+    """
+
+    def one(p, v):
+        return masked.masked_exact_hd(
+            q, p, valid_b=v, directed=directed, backend=backend,
+            block_a=block_a, block_b=block_b,
+        )
+
+    return jax.vmap(one)(pts, valid)
+
+
 def _kth_smallest(ub: np.ndarray, k: int) -> float:
     return float(np.partition(ub, k - 1)[k - 1])
+
+
+def _pow2_take(rows: np.ndarray) -> jnp.ndarray:
+    """Gather indices padded to a power of two by repeating row 0 — THE
+    jit-cache discipline for every batched slab gather (stage 1 and stage
+    2a share it); callers slice results back to ``rows.size``."""
+    pad = bucket_capacity(rows.size, 1) - rows.size
+    return jnp.asarray(np.concatenate([rows, np.full((pad,), rows[0])]))
 
 
 def _rank(values: np.ndarray, candidates: np.ndarray, k: int) -> np.ndarray:
@@ -221,20 +327,29 @@ def search(
     variant: str = "hausdorff",
     method: str = "cascade",
     backend: str = "auto",
+    stage2: str = "batched",
     config: HDConfig | None = None,
     measure: bool = False,
 ) -> SearchResult:
     """Top-k nearest stored sets to ``query`` under a set distance.
 
-    query    — (n_q, D) points
+    query    — (n_q, D) points, n_q ≥ 1 (HD is undefined on empty sets)
     store    — the SetStore to search
     k        — how many neighbours (k ≥ corpus size returns the full
-               ranking)
+               ranking; k == 0 returns an empty result without touching
+               the corpus)
     variant  — hausdorff | directed (h(query → set))
     method   — cascade (certified bound cascade) | exact (brute force —
                every set refined; the reference the cascade provably
                matches)
     backend  — backend for the exact refines (``repro.hd`` names; "auto")
+    stage2   — batched (one vmapped masked exact pass per surviving
+               bucket tightens every interval to ±fp_margin, then only the
+               ≈ k boundary candidates are raw-refined) | sequential (the
+               legacy per-candidate front-door loop over the whole
+               frontier).  Both return identical bits; batched keeps the
+               stage-2 jit cache at O(distinct bucket shapes) + O(k)
+               instead of O(frontier).
     config   — HDConfig; ``alpha`` drives the stage-1 masked ProHD
 
     Returns a :class:`SearchResult`; the top-k ids and values are
@@ -244,14 +359,36 @@ def search(
         raise ValueError(f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}")
     if method not in SEARCH_METHODS:
         raise ValueError(f"unknown search method {method!r}; expected one of {SEARCH_METHODS}")
-    if k < 1:
-        raise ValueError(f"k must be >= 1, got {k}")
+    if stage2 not in STAGE2_MODES:
+        raise ValueError(f"unknown stage2 mode {stage2!r}; expected one of {STAGE2_MODES}")
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
     if store.n_sets == 0:
         raise ValueError("cannot search an empty SetStore")
     cfg = config if config is not None else HDConfig()
     q = jnp.asarray(query, jnp.float32)
     if q.ndim != 2 or q.shape[1] != store.dim:
         raise ValueError(f"expected (n_q, {store.dim}) query, got shape {q.shape}")
+    if q.shape[0] < 1:
+        raise ValueError("query must contain at least one point (HD is undefined on empty sets)")
+    if k == 0:
+        # Well-defined degenerate request: nothing asked for, nothing done.
+        meta = HDMeta(
+            variant=variant, method=method, backend=backend,
+            block_a=0, block_b=0, elapsed_s=0.0 if measure else None,
+        )
+        return SearchResult(
+            ids=np.zeros((0,), np.int32),
+            values=np.zeros((0,), np.float32),
+            stats={
+                "candidates_scanned": store.n_sets, "k": 0,
+                "stage0_pruned": 0, "stage1_pruned": 0,
+                "stage2_mode": stage2, "stage2_calls": 0,
+                "stage2_distinct_shapes": 0, "stage2_batched_candidates": 0,
+                "exact_refines": 0, "prune_fraction": 1.0,
+            },
+            meta=meta,
+        )
 
     t0 = time.perf_counter() if measure else 0.0
     n = store.n_sets
@@ -294,13 +431,7 @@ def search(
                 rows = np.nonzero(alive[bucket.set_ids])[0]
                 if rows.size == 0:
                     continue
-                # pad the survivor batch to a power of two so the jit cache
-                # stays small across searches (padding repeats row 0 and is
-                # sliced off below)
-                padded = np.concatenate(
-                    [rows, np.full((bucket_capacity(rows.size, 1) - rows.size,), rows[0])]
-                )
-                take = jnp.asarray(padded)
+                take = _pow2_take(rows)
                 cert = _stage1_batch(
                     q,
                     jnp.take(bucket.points, take, axis=0),
@@ -322,16 +453,101 @@ def search(
             stats["stage1_pruned"] = int(alive.sum() - still.sum())
             alive = still
 
-        # -- stage 2: exact refinement, ascending lower bound -------------
-        while True:
+        # -- stage 2: exact refinement of the frontier --------------------
+        # Both modes drain the frontier under the same certified prune
+        # rule; they differ only in dispatch granularity.  Work accounting:
+        # ``stage2_calls`` counts jitted refinement dispatches and
+        # ``stage2_shapes`` the distinct jit-cache keys they exercise —
+        # sequential pays one call per frontier candidate and one cache
+        # entry per distinct RAW set shape; batched pays one masked pass
+        # per surviving bucket (cache key: capacity × padded batch ×
+        # family) plus one raw call per boundary candidate (≈ k).
+        stage2_shapes: set[tuple] = set()
+        stage2_calls = 0
+        stats["stage2_batched_candidates"] = 0   # frontier measured by 2a
+
+        def drain_raw() -> None:
+            """Raw front-door resolution, ascending lower bound, until the
+            frontier is empty — the WHOLE of sequential mode, and stage 2b
+            of batched mode (one shared loop so the modes cannot diverge)."""
+            nonlocal alive, stage2_calls
+            while True:
+                tau = _kth_smallest(ub, k_eff)
+                alive &= lb <= tau
+                frontier = np.nonzero(alive & ~resolved)[0]
+                if frontier.size == 0:
+                    return
+                sid = int(frontier[np.lexsort((frontier, lb[frontier]))[0]])
+                refine(sid)
+                stage2_shapes.add((store.get(sid).shape[0],))
+                stage2_calls += 1
+                lb[sid] = ub[sid] = float(values[sid])
+
+        if stage2 == "sequential":
+            drain_raw()
+        else:
+            # -- 2a: one vmapped masked EXACT pass per surviving bucket.
+            # The padded value is certified to land within fp_margin of the
+            # raw front-door value (both err ≤ sqrt((D+2)·eps)·scale from
+            # the true distance; GEMM bits legitimately differ across
+            # padded shapes — the conformance harness pins the margin), so
+            # every frontier interval collapses to ±fp_margin without a
+            # single per-candidate dispatch.  Final values still come from
+            # stage 2b's raw refines, so batching cannot perturb a bit of
+            # the output.
+            slot = store.slot_index()
+            buckets = store.packed_buckets()
+            device_kind = resolver.default_device_kind()
+            n_q = int(q.shape[0])
             tau = _kth_smallest(ub, k_eff)
             alive &= lb <= tau
             frontier = np.nonzero(alive & ~resolved)[0]
-            if frontier.size == 0:
-                break
-            sid = int(frontier[np.lexsort((frontier, lb[frontier]))[0]])
-            refine(sid)
-            lb[sid] = ub[sid] = float(values[sid])
+            groups: dict[int, list[int]] = {}
+            for sid in frontier:
+                groups.setdefault(slot[int(sid)][0], []).append(int(sid))
+            # Ascending best-lower-bound bucket order, re-deriving τ between
+            # buckets: one bucket's tight intervals prune the next bucket's
+            # stragglers, preserving the sequential loop's adaptivity at
+            # batch granularity.
+            for cap in sorted(groups, key=lambda c: min(lb[s] for s in groups[c])):
+                tau = _kth_smallest(ub, k_eff)
+                sids = [s for s in groups[cap] if lb[s] <= tau]
+                if not sids:
+                    continue
+                stats["stage2_batched_candidates"] += len(sids)
+                fam = "dense" if min(n_q, cap) < resolver.TILE_THRESHOLD else "tiled"
+                bucket = buckets[cap]
+                rows = np.asarray([slot[s][1] for s in sids])
+                take = _pow2_take(rows)
+                batch = int(take.shape[0])
+                block_a, block_b = resolver.resolve_block_sizes(
+                    n_q, cap, store.dim, device_kind=device_kind, backend="tiled"
+                )
+                vals = np.asarray(
+                    _stage2_batch(
+                        q,
+                        jnp.take(bucket.points, take, axis=0),
+                        jnp.take(bucket.valid, take, axis=0),
+                        directed=directed, backend=fam,
+                        block_a=block_a, block_b=block_b,
+                    ),
+                    np.float64,
+                )[: rows.size]
+                pad = fp_value_margin(store.dim, scale[sids], vals)
+                lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
+                ub[sids] = np.minimum(ub[sids], vals + pad)
+                stage2_shapes.add((cap, batch, fam))
+                stage2_calls += 1
+            # -- 2b: raw exact resolution of whatever still straddles the
+            # top-k boundary — after 2a that is ≈ k candidates (+ exact
+            # ties), each refined on its RAW points so the returned value
+            # is bit-for-bit the brute-force number.
+            drain_raw()
+        stats.update(
+            stage2_mode=stage2,
+            stage2_calls=stage2_calls,
+            stage2_distinct_shapes=len(stage2_shapes),
+        )
 
     top = _rank(values, np.nonzero(resolved)[0], k_eff)
     stats.update(

@@ -206,6 +206,8 @@ class SetStore:
         # add/search must not re-pack the whole corpus per request.
         self._bucket_cache: dict[int, PackedBucket] = {}
         self._bucket_watermark: dict[int, int] = {}
+        self._slot_cache: dict[int, tuple[int, int]] = {}
+        self._slot_cache_size = 0
 
     # -- introspection ------------------------------------------------------
 
@@ -337,6 +339,24 @@ class SetStore:
                 )
                 self._bucket_watermark[cap] = len(slots)
         return dict(self._bucket_cache)
+
+    def slot_index(self) -> dict[int, tuple[int, int]]:
+        """{set id: (bucket capacity, slab row)} for every stored set.
+
+        The row is the set's position in its capacity's
+        :class:`PackedBucket` arrays — what a batched consumer (the
+        cascade's stage-2 bucket refiner) needs to ``jnp.take`` a frontier
+        straight out of the packed slabs.  Rebuilt only when membership
+        grew (same watermark discipline as ``packed_buckets``).
+        """
+        if self._slot_cache_size != self.n_sets:
+            self._slot_cache = {
+                sid: (cap, row)
+                for cap, slots in self._members.items()
+                for row, sid in enumerate(slots)
+            }
+            self._slot_cache_size = self.n_sets
+        return dict(self._slot_cache)
 
     def summarize(self, points, valid=None) -> SetSummary:
         """Summary of an EXTERNAL set (e.g. a query) on this store's bank."""

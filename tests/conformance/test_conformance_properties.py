@@ -1,0 +1,49 @@
+"""Adversarial conformance: hypothesis hunts for a (cloud, padding, mask)
+combination that moves a bit between the padded-masked and raw reductions.
+
+The deterministic sweeps in this package pin the known axes; this module
+lets hypothesis compose them adversarially (ragged shapes × capacity
+doublings × interior masks × backends), same optional-dependency pattern
+as ``tests/test_index_properties.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import masked
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+
+pytestmark = pytest.mark.conformance
+
+
+@given(strategies.padded_reduction_cases())
+@settings(max_examples=20, deadline=None)
+def test_property_padded_equals_raw_every_backend(case):
+    seed, nq, nb, d, doublings, with_mask = case
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(nq, d).astype(np.float32))
+    b = (rng.randn(nb, d) * rng.choice([0.2, 1.0, 30.0])).astype(np.float32)
+    keep = np.ones((nb,), bool)
+    if with_mask and nb > 1:
+        keep = rng.rand(nb) < 0.7
+        keep[0] = True
+    raw = b[keep]
+    cap = strategies.pow2_capacities(nb, extra=doublings)[-1]
+    pb, vb = strategies.pad_cloud(b, cap, fill=1e9)
+    vb = vb & np.concatenate([keep, np.zeros(cap - nb, bool)])
+    for backend in sorted(masked.EXACT_MASKED_BACKENDS):
+        want = np.float32(
+            masked.masked_exact_hd(
+                q, jnp.asarray(raw), backend=backend, block_a=64, block_b=64
+            )
+        )
+        got = np.float32(
+            masked.masked_exact_hd(
+                q, jnp.asarray(pb), valid_b=jnp.asarray(vb),
+                backend=backend, block_a=64, block_b=64,
+            )
+        )
+        assert got == want, (backend, case)

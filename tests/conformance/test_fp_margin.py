@@ -1,0 +1,145 @@
+"""Conformance: where bitwise equality is NOT the contract, the pinned
+fp-margin formula is.
+
+Backends associate the GEMM form differently (``(a²−2ab)+b²`` row-major vs
+``(b²−2ba)+a²`` in the transposed sweep), so CROSS-backend equality is not
+guaranteed bitwise.  What IS pinned — by ``repro.index.cascade.fp_margin``,
+the same formula the cascade widens its certified bounds by — is the
+absolute envelope ``2·sqrt((D+2)·eps32)·scale + 1e-6``, where ``scale``
+dominates every operand norm in play.  This suite nails the formula to a
+float64 oracle so any future kernel claiming the contract can be dropped
+into the same sweep:
+
+  * every backend lands within fp_margin of the float64 truth, padded or
+    raw, at unit AND catastrophic-cancellation (offset 1e5) magnitudes;
+  * hence any two backends land within 2·fp_margin of each other (each
+    side's error budget), asserted directly as the cross-backend pin.
+
+A loose rtol would silently pass here; the margin is absolute-in-scale by
+design (see the cascade module docstring's error budget).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import masked
+from repro.index import fp_margin, fp_value_margin
+
+pytestmark = pytest.mark.conformance
+
+BACKENDS = sorted(masked.EXACT_MASKED_BACKENDS)
+
+
+def _hd64(q, b):
+    """Float64 numpy oracle, difference form (no GEMM cancellation)."""
+    d2 = np.sum(
+        (q.astype(np.float64)[:, None, :] - b.astype(np.float64)[None, :, :]) ** 2,
+        axis=-1,
+    )
+    return max(np.sqrt(d2.min(axis=1)).max(), np.sqrt(d2.min(axis=0)).max())
+
+
+def _scale(q, b):
+    return float(
+        np.linalg.norm(q.astype(np.float64), axis=1).max()
+        + np.linalg.norm(b.astype(np.float64), axis=1).max()
+    )
+
+
+@pytest.mark.parametrize("offset", [0.0, 1e5], ids=["unit", "cancellation"])
+@pytest.mark.parametrize("d", [2, 8, 33])
+def test_every_backend_within_pinned_margin_of_float64(offset, d):
+    rng = np.random.RandomState(d)
+    for trial in range(5):
+        q = (rng.randn(20, d) * rng.choice([0.3, 1.0, 5.0]) + offset).astype(np.float32)
+        b = (rng.randn(31, d) + rng.randn(d) * 2 + offset).astype(np.float32)
+        truth = _hd64(q, b)
+        margin = fp_margin(d, _scale(q, b))
+        pb, vb = strategies.pad_cloud(b, 64)
+        for backend in BACKENDS:
+            for bj, vj in ((jnp.asarray(b), None), (jnp.asarray(pb), jnp.asarray(vb))):
+                got = float(
+                    masked.masked_exact_hd(
+                        jnp.asarray(q), bj, valid_b=vj, backend=backend,
+                        block_a=16, block_b=16,
+                    )
+                )
+                assert abs(got - truth) <= margin, (
+                    backend, offset, d, trial, got, truth, margin
+                )
+                # the value-aware sharpening (what stage 2a prunes on) is
+                # tighter yet still certified — and never looser than the
+                # flat margin
+                vmargin = float(fp_value_margin(d, _scale(q, b), got))
+                assert abs(got - truth) <= vmargin <= margin + 1e-9, (
+                    backend, offset, d, trial, got, truth, vmargin, margin
+                )
+
+
+@pytest.mark.parametrize("offset", [0.0, 1e5], ids=["unit", "cancellation"])
+def test_cross_backend_disagreement_pinned(offset):
+    """Any two registered backends disagree by at most the sum of their
+    individual envelopes — the cross-formulation contract batched callers
+    may rely on when mixing backends."""
+    d = 8
+    rng = np.random.RandomState(17)
+    for trial in range(8):
+        q = (rng.randn(25, d) + offset).astype(np.float32)
+        b = (rng.randn(40, d) * 3 + offset).astype(np.float32)
+        margin = 2.0 * fp_margin(d, _scale(q, b))
+        vals = [
+            float(
+                masked.masked_exact_hd(
+                    jnp.asarray(q), jnp.asarray(b), backend=be,
+                    block_a=32, block_b=32,
+                )
+            )
+            for be in BACKENDS
+        ]
+        assert max(vals) - min(vals) <= margin, (offset, trial, vals, margin)
+
+
+def test_counterexample_regime_batched_lanes_pinned_by_margin():
+    """The regime that KILLED the bitwise-across-shapes hypothesis during
+    PR 4: rank-1-dominated clouds (strong common component, tiny residual)
+    make the GEMM form cancellation-heavy, and XLA's shape-dependent
+    lowering of the batched/vmapped matmul demonstrably moves an ulp vs
+    the raw call on CPU.  The pinned margin must absorb it — this is the
+    exact property the cascade's batched stage 2a consumes.
+    """
+    from repro.core import exact
+    from repro.index import cascade
+    from repro.index.store import bucket_capacity, pack_sets
+
+    d = 16
+    sets, rng = strategies.anisotropic_corpus(30, d=d)
+    q = (np.asarray(sets[0]).mean(axis=0) + rng.randn(9, d) * 0.5).astype(np.float32)
+    qj = jnp.asarray(q)
+    qn = float(np.linalg.norm(q, axis=1).max())
+    for cap in (16, 32):
+        members = [s for s in sets if bucket_capacity(s.shape[0]) <= cap]
+        pts, val = pack_sets(members, cap, d)
+        lanes = np.asarray(
+            cascade._stage2_batch(
+                qj, jnp.asarray(pts), jnp.asarray(val),
+                directed=False, backend="dense", block_a=64, block_b=64,
+            ),
+            np.float64,
+        )
+        for i, s in enumerate(members):
+            raw = float(exact.hausdorff_dense(qj, jnp.asarray(s)))
+            scale = qn + float(np.linalg.norm(s, axis=1).max())
+            # the value-aware margin — the exact quantity stage 2a widens
+            # its intervals by — must already absorb the ulp drift
+            vmargin = float(fp_value_margin(d, scale, lanes[i]))
+            assert abs(lanes[i] - raw) <= vmargin, (cap, i, lanes[i], raw, vmargin)
+
+
+def test_margin_formula_is_the_cascades():
+    """The harness and the cascade must widen by the SAME formula — a
+    drive-by 'fix' loosening one without the other breaks certification."""
+    eps32 = float(np.finfo(np.float32).eps)
+    for dim, scale in [(2, 1.0), (16, 3.5), (256, 2e5)]:
+        want = 2.0 * np.sqrt((dim + 2) * eps32) * scale + 1e-6
+        assert np.isclose(float(fp_margin(dim, scale)), want, rtol=1e-12)

@@ -1,0 +1,133 @@
+"""Conformance: layout invariances that make BATCHED refinement safe.
+
+The cascade's batched stage 2 replaces per-candidate exact calls with one
+vmapped masked pass per storage bucket.  Its bit-for-bit-identical-to-
+brute-force guarantee rests on three invariances, pinned here:
+
+  * **batch-position invariance** — a vmap lane's result must not depend
+    on the batch size or on WHICH other candidates share the batch;
+  * **capacity invariance** — re-bucketing a set into a bigger pow2 slab
+    (min_bucket configs, frontier-batch pow2 padding) moves nothing;
+  * **block invariance** — the tiled/fused scans' block sizes only retile
+    exact min-reductions, so resolver block choices can differ between
+    the batched (capacity-shaped) and raw (set-shaped) dispatches.
+
+Plus the end-to-end contract itself: each lane of the cascade's actual
+``_stage2_batch`` equals the front door's raw-point exact value, bit for
+bit — the statement "batched stage 2 returns what brute force computes".
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import masked
+from repro.hd import set_distance
+from repro.index import cascade
+
+pytestmark = pytest.mark.conformance
+
+
+def _bucket(seed, batch, cap, d, nq):
+    rng = np.random.RandomState(seed)
+    q = rng.randn(nq, d).astype(np.float32)
+    raws = [rng.randn(rng.randint(1, cap + 1), d).astype(np.float32) * rng.choice([0.5, 1, 20])
+            for _ in range(batch)]
+    pts = np.zeros((batch, cap, d), np.float32)
+    val = np.zeros((batch, cap), bool)
+    for i, r in enumerate(raws):
+        pts[i, : r.shape[0]] = r
+        val[i, : r.shape[0]] = True
+    return jnp.asarray(q), raws, jnp.asarray(pts), jnp.asarray(val)
+
+
+@pytest.mark.parametrize("backend", sorted(masked.EXACT_MASKED_BACKENDS))
+def test_vmap_lane_invariant_to_batch_size_and_members(backend):
+    q, _, pts, val = _bucket(0, batch=13, cap=16, d=4, nq=9)
+
+    @jax.jit
+    def run(p, v):
+        return jax.vmap(
+            lambda pp, vv: masked.masked_exact_hd(
+                q, pp, valid_b=vv, backend=backend, block_a=64, block_b=64
+            )
+        )(p, v)
+
+    full = np.asarray(run(pts, val))
+    for i in range(13):
+        solo = np.asarray(run(pts[i : i + 1], val[i : i + 1]))[0]
+        assert solo == full[i], (backend, i)
+    # a shuffled sub-batch: lane values stick to their candidates
+    perm = np.random.RandomState(1).permutation(13)[:8]
+    sub = np.asarray(run(pts[perm], val[perm]))
+    np.testing.assert_array_equal(sub, full[perm])
+
+
+@pytest.mark.parametrize("backend", sorted(masked.EXACT_MASKED_BACKENDS))
+def test_capacity_invariance(backend):
+    rng = np.random.RandomState(2)
+    q = jnp.asarray(rng.randn(9, 4).astype(np.float32))
+    b = rng.randn(6, 4).astype(np.float32)
+    got = []
+    for cap in strategies.pow2_capacities(6, extra=3):
+        pb, vb = strategies.pad_cloud(b, cap)
+        got.append(
+            np.float32(
+                masked.masked_exact_hd(
+                    q, jnp.asarray(pb), valid_b=jnp.asarray(vb),
+                    backend=backend, block_a=64, block_b=64,
+                )
+            )
+        )
+    assert len(set(got)) == 1, (backend, got)
+
+
+@pytest.mark.parametrize("backend", ["tiled", "fused_mirror"])
+def test_block_layout_invariance(backend):
+    """Retiling an exact min-reduction cannot move bits: every block combo
+    (including non-divisors and full-cloud blocks) agrees bitwise."""
+    a, b = strategies.clouds(300, 411, 17)
+    va, vb = strategies.masks(300, 411)
+    ref = None
+    for ba, bb in [(4096, 4096), (2048, 2048), (128, 96), (64, 33)]:
+        got = np.float32(
+            masked.masked_exact_hd(
+                a, b, valid_a=va, valid_b=vb, backend=backend,
+                block_a=ba, block_b=bb,
+            )
+        )
+        ref = got if ref is None else ref
+        assert got == ref, (backend, ba, bb)
+
+
+@pytest.mark.parametrize("directed", [False, True], ids=["H", "h"])
+@pytest.mark.parametrize("family", ["dense", "tiled"])
+def test_stage2_batch_within_fp_margin_of_front_door(directed, family):
+    """The cascade contract itself: every lane of the REAL ``_stage2_batch``
+    lands within ``fp_margin`` of the value the raw-refinement path's
+    front-door exact dispatch computes on the candidate's raw points.
+
+    NOT a bitwise assertion: the batched GEMM runs at (batch, n_q, cap)
+    shapes the raw call never sees, and XLA's shape-dependent lowering can
+    legally move an ulp (see test_fp_margin's counterexample regime).  The
+    margin is what stage 2a feeds the certified prune rule, so this is
+    precisely the property the top-k identity proof consumes.
+    """
+    q, raws, pts, val = _bucket(7, batch=11, cap=32, d=6, nq=14)
+    got = np.asarray(
+        cascade._stage2_batch(
+            q, pts, val, directed=directed, backend=family, block_a=2048, block_b=2048
+        ),
+        np.float64,
+    )
+    variant = "directed" if directed else "hausdorff"
+    qn = float(np.linalg.norm(np.asarray(q), axis=1).max())
+    for i, raw in enumerate(raws):
+        want = float(
+            set_distance(q, raw, variant=variant, method="exact", backend=family).value
+        )
+        margin = float(
+            cascade.fp_margin(6, qn + float(np.linalg.norm(raw, axis=1).max()))
+        )
+        assert abs(got[i] - want) <= margin, (family, variant, i, got[i], want, margin)

@@ -1,0 +1,153 @@
+"""Conformance: unbatched padded-masked reductions equal raw ones BITWISE
+— on this platform, across this whole sweep.
+
+For every registered masked exact backend
+(``repro.core.masked.EXACT_MASKED_BACKENDS``), padding a cloud to a
+power-of-two capacity — validity folded in as zeroed rows and
++inf-poisoned norms — holds bit-for-bit here because
+
+  * extra zero rows only add GEMM OUTPUT entries; on every swept shape the
+    valid entries' contraction over D lowers identically,
+  * a +inf-poisoned entry loses every min exactly, and
+  * min/max reductions are exact (no rounding), so tile layout and
+    reduction order cannot reassociate anything.
+
+Scope honestly stated: the first bullet is an XLA lowering fact, not an
+IEEE theorem — sufficiently different GEMM shapes (wide flattened batches,
+vmapped batch dims) DO move an ulp on cancellation-heavy data (see
+``test_fp_margin.py``'s counterexample regime).  This suite is the
+platform record of where bitwise equality actually holds, and the canary
+that flags when a toolchain bump moves it; the cascade itself only ever
+relies on the fp-margin contract, never on these bits.
+
+Swept axes: backend × raw shape (incl. n=1 on either side) × validity
+masks × pow2 capacities × input dtype × garbage padding fill × duplicated
+points × tied distances.  Assertions are ``==`` on fp32 bits — never a
+tolerance.  Cross-BACKEND equality is deliberately NOT asserted here
+(different GEMM association); that contract lives in ``test_fp_margin.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import masked
+
+pytestmark = pytest.mark.conformance
+
+BACKENDS = sorted(masked.EXACT_MASKED_BACKENDS)
+
+# (n_q, n_b): degenerate singletons, ragged smalls, one cross-block case
+SHAPES = [(1, 1), (1, 17), (9, 1), (9, 6), (33, 48), (200, 150)]
+
+
+def _hd(a, b, *, valid_b=None, backend="dense", directed=False, blocks=(64, 64)):
+    return np.float32(
+        masked.masked_exact_hd(
+            jnp.asarray(a), jnp.asarray(b), valid_b=valid_b,
+            directed=directed, backend=backend,
+            block_a=blocks[0], block_b=blocks[1],
+        )
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("directed", [False, True], ids=["H", "h"])
+def test_padded_equals_raw_bitwise(backend, shape, directed):
+    nq, nb = shape
+    d = 5
+    rng = np.random.RandomState(nq * 100 + nb)
+    q = rng.randn(nq, d).astype(np.float32)
+    b = (rng.randn(nb, d) * rng.choice([0.3, 1.0, 50.0])).astype(np.float32)
+    raw = _hd(q, b, backend=backend, directed=directed)
+    for cap in strategies.pow2_capacities(nb):
+        for fill in (0.0, 1e9):
+            pb, vb = strategies.pad_cloud(b, cap, fill=fill)
+            got = _hd(q, pb, valid_b=jnp.asarray(vb), backend=backend, directed=directed)
+            assert got == raw, (backend, shape, cap, fill, float(got), float(raw))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_padded_equals_raw_with_interior_masks(backend):
+    """A user mask on the RAW cloud composes with padding: masking rows of
+    the padded buffer must equal physically removing them from the raw one."""
+    d = 7
+    rng = np.random.RandomState(3)
+    q = rng.randn(12, d).astype(np.float32)
+    b = rng.randn(21, d).astype(np.float32)
+    keep = rng.rand(21) < 0.6
+    keep[0] = True
+    raw = _hd(q, b[keep], backend=backend)
+    for cap in strategies.pow2_capacities(21):
+        pb, vb = strategies.pad_cloud(b, cap, fill=7.7e8)
+        vb = vb & np.concatenate([keep, np.zeros(cap - 21, bool)])
+        got = _hd(q, pb, valid_b=jnp.asarray(vb), backend=backend)
+        assert got == raw, (backend, cap)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", ["float32", "float64", "bfloat16"])
+def test_padded_equals_raw_across_input_dtypes(backend, dtype):
+    """Every backend casts inputs to fp32 before the GEMM; padded and raw
+    must take the identical cast path for any supported input dtype."""
+
+    def cast(x):
+        # via-numpy for the numpy dtypes (x64 stays off), jnp for bf16
+        if dtype == "bfloat16":
+            return jnp.asarray(np.asarray(x, np.float32)).astype(jnp.bfloat16)
+        return jnp.asarray(np.asarray(x, dtype))
+
+    rng = np.random.RandomState(11)
+    q = rng.randn(10, 4)
+    b = rng.randn(13, 4)
+    raw = np.float32(masked.masked_exact_hd(cast(q), cast(b), backend=backend))
+    pb, vb = strategies.pad_cloud(b, 32)
+    got = np.float32(
+        masked.masked_exact_hd(
+            cast(q), cast(pb), valid_b=jnp.asarray(vb), backend=backend
+        )
+    )
+    assert got == raw, (backend, dtype)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_duplicated_points_and_ties(backend):
+    """Exact duplicates and distance TIES (the k-th-bound regime the
+    cascade's ranking tie-break leans on) survive padding bitwise: a tied
+    min is still exact, whichever duplicate row wins it."""
+    d = 4
+    rng = np.random.RandomState(5)
+    base = rng.randn(6, d).astype(np.float32)
+    b = np.concatenate([base, base, base[:2]])          # exact duplicates
+    q = np.concatenate([base[:3], rng.randn(4, d).astype(np.float32)])
+    # symmetric pair equidistant from the origin-query row: a forced tie
+    q[0] = 0.0
+    b[0], b[6] = np.eye(d, dtype=np.float32)[0] * 2.0, -np.eye(d, dtype=np.float32)[0] * 2.0
+    raw = _hd(q, b, backend=backend)
+    for cap in strategies.pow2_capacities(b.shape[0]):
+        pb, vb = strategies.pad_cloud(b, cap, fill=np.float32(np.nan))
+        got = _hd(q, pb, valid_b=jnp.asarray(vb), backend=backend)
+        assert got == raw, (backend, cap)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_padded_side_conventions_agree(backend):
+    """Degenerate all-invalid sides have no raw counterpart; what IS pinned
+    is the shared convention (``exact.finalize_mins``): empty QUERY side
+    reduces to 0.0, empty TARGET side to +inf — identically on every
+    backend, at every capacity."""
+    rng = np.random.RandomState(9)
+    q = jnp.asarray(rng.randn(7, 3).astype(np.float32))
+    pb, _ = strategies.pad_cloud(rng.randn(5, 3).astype(np.float32), 16, fill=1e9)
+    none = jnp.zeros((16,), bool)
+    # empty target: every nearest-distance is vacuously +inf
+    assert np.isinf(_hd(q, pb, valid_b=none, backend=backend, directed=True))
+    # empty query side: directed h(∅ → B) collapses to 0.0
+    got = np.float32(
+        masked.masked_exact_hd(
+            jnp.asarray(pb), q, valid_a=none, directed=True, backend=backend,
+            block_a=64, block_b=64,
+        )
+    )
+    assert got == np.float32(0.0), backend

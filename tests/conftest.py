@@ -1,0 +1,12 @@
+"""Test-tree conftest: make ``tests/`` shared modules importable.
+
+Sub-suites (``tests/conformance/``) import the shared generator module as
+``import strategies``; pytest only auto-inserts a test file's OWN dirname,
+so the tests root is pinned onto sys.path here for every collected file.
+"""
+import sys
+from pathlib import Path
+
+_TESTS_ROOT = str(Path(__file__).resolve().parent)
+if _TESTS_ROOT not in sys.path:
+    sys.path.insert(0, _TESTS_ROOT)

@@ -1,0 +1,193 @@
+"""Shared test-data generators: seeded fixtures + hypothesis strategies.
+
+One home for the point-cloud / corpus generators that used to be copied
+across ``test_fused.py``, ``test_index.py`` and
+``test_index_properties.py`` (and that the conformance harness under
+``tests/conformance/`` now also consumes).  Everything seeded is
+DETERMINISTIC: same arguments, same bits — several suites assert bitwise
+properties on top of these clouds.
+
+The hypothesis strategies at the bottom are optional-dependency guarded
+(``requirements-dev.txt``): importing this module never requires
+hypothesis; calling a ``*_strategy``/``*_cases`` helper without it raises
+the same skip-worthy ImportError ``pytest.importorskip`` produces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The historical test_fused seed — kept verbatim so the fused-kernel suite
+# sweeps the exact same clouds it always has.
+CLOUD_KEY = jax.random.PRNGKey(20260730)
+
+# Deliberately ragged pair shapes: n_a ≠ n_b, neither a block multiple,
+# D ∤ 128 (the fused-kernel sweep's classic worst cases).
+RAGGED_SHAPES = [
+    (100, 130, 7),
+    (513, 129, 100),
+    (300, 777, 28),
+    (64, 2000, 130),
+]
+
+
+# ---------------------------------------------------------------------------
+# pairwise clouds (the test_fused generators, verbatim semantics)
+# ---------------------------------------------------------------------------
+
+
+def clouds(na: int, nb: int, d: int, spread: float = 0.3):
+    """Two seeded gaussian clouds, (na, d) and (nb, d) fp32, B offset by
+    ``spread`` — deterministic in (na, nb, d)."""
+    ka, kb = jax.random.split(jax.random.fold_in(CLOUD_KEY, na * 31 + nb * 7 + d))
+    a = jax.random.normal(ka, (na, d), jnp.float32) * 1.5
+    b = jax.random.normal(kb, (nb, d), jnp.float32) + spread
+    return a, b
+
+
+def masks(na: int, nb: int, p: float = 0.6):
+    """Seeded bernoulli validity masks with row 0 forced True per side."""
+    ka, kb = jax.random.split(jax.random.fold_in(CLOUD_KEY, na + nb), 2)
+    va = jax.random.bernoulli(ka, p, (na,)).at[0].set(True)
+    vb = jax.random.bernoulli(kb, p, (nb,)).at[0].set(True)
+    return va, vb
+
+
+def proj_pair(a, b, m: int = 3):
+    """(proj_a, proj_b) on a shared ``direction_set`` — the prune-table
+    input every projection-pruning test needs."""
+    from repro.core.projections import direction_set
+
+    dirs = direction_set(a, b, m)
+    return (
+        jnp.matmul(a, dirs, preferred_element_type=jnp.float32),
+        jnp.matmul(b, dirs, preferred_element_type=jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# padding helpers (the conformance harness's vocabulary)
+# ---------------------------------------------------------------------------
+
+
+def pad_cloud(points: np.ndarray, capacity: int, *, fill: float = 0.0):
+    """Pad an (n, d) cloud to (capacity, d) with a validity mask.
+
+    ``fill`` defaults to the store's zero-fill rule; pass garbage (1e9,
+    NaN) to assert that masked consumers never look at padding.
+    """
+    points = np.asarray(points)
+    n, d = points.shape
+    if capacity < n:
+        raise ValueError(f"capacity {capacity} < n {n}")
+    padded = np.full((capacity, d), fill, points.dtype)
+    padded[:n] = points
+    valid = np.zeros((capacity,), bool)
+    valid[:n] = True
+    return padded, valid
+
+
+def pow2_capacities(n: int, *, min_bucket: int = 8, extra: int = 2) -> list[int]:
+    """The bucket capacity ``n`` lands in plus ``extra`` further doublings
+    — the padding layouts a stored set can meet across min_bucket configs."""
+    from repro.index.store import bucket_capacity
+
+    cap = bucket_capacity(n, min_bucket)
+    return [cap << i for i in range(extra + 1)]
+
+
+# ---------------------------------------------------------------------------
+# ragged corpora (the test_index generators, verbatim semantics)
+# ---------------------------------------------------------------------------
+
+
+def ragged_corpus(
+    seed: int,
+    n_sets: int = 24,
+    d: int = 4,
+    max_n: int = 20,
+    n_clusters: int = 6,
+    spread: float = 8.0,
+    dup_every: int = 0,
+):
+    """Ragged clustered corpus; every ``dup_every``-th set is an exact
+    duplicate of an earlier one (forcing exactly-tied distances).
+
+    Returns ``(sets, rng)`` — the still-live RandomState so callers can
+    draw a query from the same stream (matching the historical fixtures
+    bit-for-bit).
+    """
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(n_clusters, d).astype(np.float32) * spread
+    sets = []
+    for i in range(n_sets):
+        if dup_every and i % dup_every == 0 and i > 0:
+            sets.append(sets[rng.randint(len(sets))].copy())
+            continue
+        n = rng.randint(1, max_n + 1)
+        c = centers[rng.randint(n_clusters)]
+        sets.append((c + rng.randn(n, d) * 0.5).astype(np.float32))
+    return sets, rng
+
+
+def query_near(rng: np.random.RandomState, sets, d: int, n_q: int = 9) -> np.ndarray:
+    """A query blob near set 0's centroid — guarantees a real
+    neighbourhood exists without ever equalling a stored set."""
+    return (np.asarray(sets[0]).mean(axis=0) + rng.randn(n_q, d) * 0.5).astype(
+        np.float32
+    )
+
+
+def anisotropic_corpus(seed: int, n_sets: int = 16, d: int = 16):
+    """Rank-1-dominated corpus: sets separated along ONE random axis with
+    tiny residual variance.  Two jobs share it (same bits, same regime):
+    the data-driven direction-bank tests (PCA should crush a random bank
+    here) and the conformance counterexample hunt (the strong common
+    component makes the GEMM form cancellation-heavy — the regime where
+    XLA's shape-dependent lowering demonstrably moves an ulp).  Returns
+    ``(sets, rng)``.
+    """
+    rng = np.random.RandomState(seed)
+    axis = np.linalg.qr(rng.randn(d, d))[0][:, 0].astype(np.float32)
+    sets = [
+        (np.float32(rng.randn() * 40.0) * axis
+         + rng.randn(rng.randint(4, 12), d).astype(np.float32) * 0.05)
+        for _ in range(n_sets)
+    ]
+    return sets, rng
+
+
+# ---------------------------------------------------------------------------
+# hypothesis strategies (optional dev dependency)
+# ---------------------------------------------------------------------------
+
+
+def corpus_search_cases():
+    """Strategy tuple for the cascade-identity property test:
+    (corpus seed, k, duplicate cadence, variant, min_bucket, stage2)."""
+    from hypothesis import strategies as st
+
+    return st.tuples(
+        st.integers(0, 10_000),             # corpus seed
+        st.sampled_from([1, 3, 7, 1000]),   # k (1000 >> corpus: full rank)
+        st.sampled_from([0, 3]),            # duplicate cadence (exact ties)
+        st.sampled_from(["hausdorff", "directed"]),
+        st.sampled_from([2, 8]),            # store min_bucket (padding layouts)
+        st.sampled_from(["batched", "sequential"]),
+    )
+
+
+def padded_reduction_cases():
+    """Strategy tuple for the padded-vs-raw conformance property:
+    (cloud seed, n_q, n_b, d, capacity doublings, mask flag)."""
+    from hypothesis import strategies as st
+
+    return st.tuples(
+        st.integers(0, 10_000),
+        st.integers(1, 40),     # n_q
+        st.integers(1, 48),     # n_b (raw candidate size)
+        st.sampled_from([1, 3, 8, 17]),
+        st.integers(0, 2),      # extra pow2 doublings past the home bucket
+        st.booleans(),          # mask some candidate rows invalid too
+    )

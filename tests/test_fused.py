@@ -9,47 +9,20 @@ Swept over ragged shapes, D not a multiple of 128, validity masks, and
 pruning on/off (which must be bit-for-bit-equivalent in result, only
 cheaper).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import exact, tile_bounds
-from repro.core.projections import direction_set
 from repro.kernels.hausdorff import ops as hd_ops
 from repro.kernels.hausdorff import ref as hd_ref
 
-KEY = jax.random.PRNGKey(20260730)
-
-# deliberately ragged: n_a ≠ n_b, neither a block multiple, D ∤ 128
-SHAPES = [
-    (100, 130, 7),
-    (513, 129, 100),
-    (300, 777, 28),
-    (64, 2000, 130),
-]
-
-
-def _clouds(na, nb, d, spread=0.3):
-    ka, kb = jax.random.split(jax.random.fold_in(KEY, na * 31 + nb * 7 + d))
-    a = jax.random.normal(ka, (na, d), jnp.float32) * 1.5
-    b = jax.random.normal(kb, (nb, d), jnp.float32) + spread
-    return a, b
-
-
-def _masks(na, nb, p=0.6):
-    ka, kb = jax.random.split(jax.random.fold_in(KEY, na + nb), 2)
-    va = jax.random.bernoulli(ka, p, (na,)).at[0].set(True)
-    vb = jax.random.bernoulli(kb, p, (nb,)).at[0].set(True)
-    return va, vb
-
-
-def _projs(a, b, m=3):
-    dirs = direction_set(a, b, m)
-    return (
-        jnp.matmul(a, dirs, preferred_element_type=jnp.float32),
-        jnp.matmul(b, dirs, preferred_element_type=jnp.float32),
-    )
+# Shared seeded generators (tests/strategies.py): same key, same clouds as
+# the historical module-local copies.
+from strategies import RAGGED_SHAPES as SHAPES
+from strategies import clouds as _clouds
+from strategies import masks as _masks
+from strategies import proj_pair as _projs
 
 
 # ---------------------------------------------------------------------------

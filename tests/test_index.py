@@ -25,27 +25,10 @@ from repro.index import (
 
 KEY = jax.random.PRNGKey(0)
 
-
-def _corpus(seed, n_sets=24, d=4, max_n=20, n_clusters=6, spread=8.0, dup_every=0):
-    """Ragged clustered corpus; every ``dup_every``-th set is an exact
-    duplicate of an earlier one (forcing exactly-tied distances)."""
-    rng = np.random.RandomState(seed)
-    centers = rng.randn(n_clusters, d).astype(np.float32) * spread
-    sets = []
-    for i in range(n_sets):
-        if dup_every and i % dup_every == 0 and i > 0:
-            sets.append(sets[rng.randint(len(sets))].copy())
-            continue
-        n = rng.randint(1, max_n + 1)
-        c = centers[rng.randint(n_clusters)]
-        sets.append((c + rng.randn(n, d) * 0.5).astype(np.float32))
-    return sets, rng
-
-
-def _query(rng, sets, d, n_q=9):
-    return (np.asarray(sets[0]).mean(axis=0) + rng.randn(n_q, d) * 0.5).astype(
-        np.float32
-    )
+# Shared seeded generators (tests/strategies.py): same RandomState stream
+# as the historical module-local copies, so every corpus is bit-identical.
+from strategies import query_near as _query  # noqa: E402
+from strategies import ragged_corpus as _corpus  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +256,9 @@ def test_search_validates_axes():
     with pytest.raises(ValueError):
         search(q, store, 1, method="prohd")
     with pytest.raises(ValueError):
-        search(q, store, 0)
+        search(q, store, -1)            # k=0 is now a valid empty request
+    with pytest.raises(ValueError):
+        search(q, store, 1, stage2="vectorized")
     with pytest.raises(ValueError):
         search(q[:, :2], store, 1)
 
@@ -321,3 +306,141 @@ def test_cascade_identical_to_bruteforce_seeded(seed, k, dup_every):
     sets, rng = _corpus(seed, n_sets=16, d=4, max_n=14, dup_every=dup_every)
     q = _query(rng, sets, 4)
     _assert_search_matches_bruteforce(sets, q, k)
+
+
+# ---------------------------------------------------------------------------
+# batched stage 2 (PR 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,k,variant", [(21, 3, "hausdorff"), (22, 1000, "hausdorff"), (23, 4, "directed")])
+def test_stage2_batched_and_sequential_identical(seed, k, variant):
+    """Both stage-2 dispatch modes return the SAME BITS as brute force —
+    batching tightens bounds, it never touches a returned value."""
+    sets, rng = _corpus(seed, n_sets=20, d=4, max_n=18, dup_every=4)
+    q = _query(rng, sets, 4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    bat = search(q, store, k, variant=variant, stage2="batched")
+    seq = search(q, store, k, variant=variant, stage2="sequential")
+    ref = search(q, store, k, variant=variant, method="exact")
+    for res in (bat, seq):
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+    assert bat.stats["stage2_mode"] == "batched"
+    assert seq.stats["stage2_mode"] == "sequential"
+    # one dispatch per frontier candidate sequentially…
+    assert seq.stats["stage2_calls"] == seq.stats["exact_refines"]
+    # …while batching only ever raw-refines a subset of that frontier
+    assert bat.stats["exact_refines"] <= seq.stats["exact_refines"]
+
+
+def test_stage2_batched_raw_refines_only_the_boundary():
+    """On an overlapping corpus (stage 0/1 can barely prune, so the whole
+    corpus reaches stage 2) the batched mode measures the ENTIRE frontier
+    in O(buckets) jitted calls and raw-refines only the ≈ k candidates
+    whose ±fp_margin intervals straddle the top-k boundary — while the
+    sequential mode pays one dispatch per candidate it inspects."""
+    sets, rng = _corpus(24, n_sets=60, d=8, max_n=25, n_clusters=1, spread=0.5)
+    q = _query(rng, sets, 8)
+    store = SetStore(dim=8)
+    store.add_many(sets)
+    k = 3
+    bat = search(q, store, k, stage2="batched")
+    seq = search(q, store, k, stage2="sequential")
+    ref = search(q, store, k, method="exact")
+    for res in (bat, seq):
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+    # the overlapping regime floods stage 2a with (almost) the whole corpus…
+    assert bat.stats["stage2_batched_candidates"] > 3 * k
+    # …which the batched pass absorbs in O(buckets) calls, leaving only the
+    # boundary for raw per-candidate dispatch — never more than sequential
+    assert bat.stats["exact_refines"] <= k + 2
+    assert bat.stats["exact_refines"] <= seq.stats["exact_refines"]
+    assert seq.stats["exact_refines"] > k
+    n_buckets = len(store.bucket_capacities)
+    assert bat.stats["stage2_calls"] <= 2 * n_buckets + bat.stats["exact_refines"]
+    assert bat.stats["stage2_distinct_shapes"] <= n_buckets + bat.stats["exact_refines"]
+
+
+def test_slot_index_tracks_packed_buckets():
+    sets, _ = _corpus(25, n_sets=12)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    slot = store.slot_index()
+    buckets = store.packed_buckets()
+    assert sorted(slot) == list(range(len(sets)))
+    for sid, (cap, row) in slot.items():
+        assert int(buckets[cap].set_ids[row]) == sid
+    # grows with the store, including for fresh capacities
+    sid = store.add(np.full((40, 4), 3.0, np.float32))
+    cap, row = store.slot_index()[sid]
+    assert cap == 64 and int(store.packed_buckets()[64].set_ids[row]) == sid
+
+
+# ---------------------------------------------------------------------------
+# direction banks (satellite: data-driven banks)
+# ---------------------------------------------------------------------------
+
+
+from strategies import anisotropic_corpus as _anisotropic_corpus  # noqa: E402
+
+
+def test_direction_bank_orthonormal_and_deterministic():
+    key = jax.random.PRNGKey(5)
+    for bank in (
+        direction_bank(16, 4, key=key),
+        direction_bank(16, 4, data=jnp.asarray(np.random.RandomState(1).randn(64, 16), jnp.float32)),
+        direction_bank(3, 7),     # m > d clamps to d
+    ):
+        b = np.asarray(bank)
+        assert b.shape[0] in (16, 3) and b.shape[1] <= b.shape[0]
+        np.testing.assert_allclose(b.T @ b, np.eye(b.shape[1]), atol=1e-5)
+    # deterministic: same seed → same bits; different seed → different bank
+    np.testing.assert_array_equal(
+        np.asarray(direction_bank(16, 4, key=key)),
+        np.asarray(direction_bank(16, 4, key=jax.random.PRNGKey(5))),
+    )
+    assert not np.array_equal(
+        np.asarray(direction_bank(16, 4, key=key)),
+        np.asarray(direction_bank(16, 4, key=jax.random.PRNGKey(6))),
+    )
+    data = jnp.asarray(np.random.RandomState(2).randn(128, 16), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(direction_bank(16, 4, data=data)),
+        np.asarray(direction_bank(16, 4, data=data)),
+    )
+
+
+def test_data_driven_bank_tightens_stage0_lower_bounds():
+    """On an anisotropic corpus, PCA directions capture the separation axis
+    a random bank mostly misses — stage-0 interval-gap lower bounds must
+    come out strictly tighter (ROADMAP: 'nothing refits yet')."""
+    sets, rng = _anisotropic_corpus(30)
+    q = (np.asarray(sets[0]) + 0.0).astype(np.float32)
+    sample = np.concatenate(sets)
+
+    def stage0_lbs(directions):
+        store = SetStore(dim=16, directions=directions)
+        store.add_many(sets)
+        qsum = store.summarize(q)
+        lb, _ = interval_bounds(qsum, store.summaries())
+        return np.asarray(lb, np.float64)
+
+    lb_rand = stage0_lbs(direction_bank(16, 4, key=jax.random.PRNGKey(0)))
+    lb_pca = stage0_lbs(direction_bank(16, 4, data=jnp.asarray(sample)))
+    # sound either way (never above the true distance)…
+    for sid, pts in enumerate(sets):
+        h = float(hausdorff_dense(jnp.asarray(q), jnp.asarray(pts)))
+        assert lb_pca[sid] <= h + 1e-3 and lb_rand[sid] <= h + 1e-3
+    # …but the data-driven bank is decisively tighter in aggregate
+    assert lb_pca.mean() > 1.5 * lb_rand.mean()
+    # …and the cascade stays brute-force-identical under a data-driven bank
+    store = SetStore(dim=16, directions=direction_bank(16, 4, data=jnp.asarray(sample)))
+    store.add_many(sets)
+    q2 = _query(rng, sets, 16)
+    res = search(q2, store, 3)
+    ref = search(q2, store, 3, method="exact")
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)

@@ -6,7 +6,6 @@ ranking — including exactly-tied distances (duplicated sets), k ≥ corpus
 size, singleton sets, and both supported variants.  hypothesis hunts for
 the corpus that breaks it.
 """
-import jax
 import numpy as np
 import pytest
 
@@ -17,38 +16,25 @@ from repro.index import SetStore, search
 # tests/test_properties.py).  A deterministic sweep of the same invariant
 # runs unconditionally in tests/test_index.py.
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+import strategies  # noqa: E402  (tests/strategies.py — shared generators)
 
 
-def _corpus(seed, n_sets, d, max_n, dup_every):
-    rng = np.random.RandomState(seed)
-    centers = rng.randn(6, d).astype(np.float32) * 8.0
-    sets = []
-    for i in range(n_sets):
-        if dup_every and i % dup_every == 0 and i > 0:
-            sets.append(sets[rng.randint(len(sets))].copy())
-            continue
-        c = centers[rng.randint(6)]
-        sets.append((c + rng.randn(rng.randint(1, max_n + 1), d) * 0.5).astype(np.float32))
-    return sets, rng
-
-
-@given(
-    st.integers(0, 10_000),             # corpus seed
-    st.sampled_from([1, 3, 7, 1000]),   # k (1000 >> any corpus size: full rank)
-    st.sampled_from([0, 3]),            # duplicate cadence (exact ties on/off)
-    st.sampled_from(["hausdorff", "directed"]),
-    st.sampled_from([2, 8]),            # store min_bucket (padding layouts)
-)
+@given(strategies.corpus_search_cases())
 @settings(max_examples=12, deadline=None)
-def test_property_cascade_identical_to_bruteforce(seed, k, dup_every, variant, min_bucket):
+def test_property_cascade_identical_to_bruteforce(case):
+    seed, k, dup_every, variant, min_bucket, stage2 = case
     # d=4 / n_q in {9} keeps the jit cache small across examples while the
-    # corpus shapes (ragged sizes, ties, k regime) vary adversarially.
-    sets, rng = _corpus(seed, n_sets=16, d=4, max_n=14, dup_every=dup_every)
-    q = (np.asarray(sets[0]).mean(axis=0) + rng.randn(9, 4) * 0.5).astype(np.float32)
+    # corpus shapes (ragged sizes, ties, k regime, stage-2 dispatch mode)
+    # vary adversarially.
+    sets, rng = strategies.ragged_corpus(
+        seed, n_sets=16, d=4, max_n=14, dup_every=dup_every
+    )
+    q = strategies.query_near(rng, sets, 4)
     store = SetStore(dim=4, min_bucket=min_bucket)
     store.add_many(sets)
-    res = search(q, store, k, variant=variant)
+    res = search(q, store, k, variant=variant, stage2=stage2)
     ref = search(q, store, k, variant=variant, method="exact")
     np.testing.assert_array_equal(res.ids, ref.ids)
     np.testing.assert_array_equal(res.values, ref.values)

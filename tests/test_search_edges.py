@@ -1,0 +1,151 @@
+"""Edge cases of ``repro.hd.search`` (satellite of the batched-stage-2 PR):
+k=0, empty query sets, single-set corpora, and corpora where EVERY
+candidate ties at the k-th upper bound.
+
+The contract under test: degenerate requests either return a well-formed
+(possibly empty) :class:`SearchResult` or raise a clear ``ValueError`` —
+never an obscure shape/NaN crash from deep inside a reduction — and the
+cascade==bruteforce identity survives every degeneracy, in both stage-2
+dispatch modes.
+"""
+import numpy as np
+import pytest
+
+from repro.hd import search as hd_search
+from repro.hd import set_distance
+from repro.index import SetStore, fp_margin, search
+
+from strategies import query_near, ragged_corpus
+
+STAGE2 = ["batched", "sequential"]
+
+
+def _store(sets, d=4, **kw):
+    store = SetStore(dim=d, **kw)
+    store.add_many(sets)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# k = 0
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["cascade", "exact"])
+def test_k0_returns_well_formed_empty_result(method):
+    sets, rng = ragged_corpus(40, n_sets=6)
+    store = _store(sets)
+    res = search(query_near(rng, sets, 4), store, 0, method=method)
+    assert res.ids.shape == (0,) and res.ids.dtype == np.int32
+    assert res.values.shape == (0,) and res.values.dtype == np.float32
+    assert res.stats["k"] == 0
+    assert res.stats["exact_refines"] == 0          # no work was done
+    assert res.stats["prune_fraction"] == 1.0
+    assert res.meta.method == method
+
+
+def test_k0_through_the_front_door_and_measure():
+    sets, rng = ragged_corpus(41, n_sets=5)
+    store = _store(sets)
+    res = hd_search(query_near(rng, sets, 4), store, 0, measure=True)
+    assert res.ids.size == 0 and res.meta.elapsed_s is not None
+
+
+def test_negative_k_still_rejected():
+    sets, rng = ragged_corpus(42, n_sets=4)
+    with pytest.raises(ValueError, match="k must be >= 0"):
+        search(query_near(rng, sets, 4), _store(sets), -1)
+
+
+# ---------------------------------------------------------------------------
+# empty query set
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["cascade", "exact"])
+def test_empty_query_raises_cleanly(method):
+    sets, _ = ragged_corpus(43, n_sets=4)
+    store = _store(sets)
+    with pytest.raises(ValueError, match="at least one point"):
+        search(np.zeros((0, 4), np.float32), store, 1, method=method)
+    # …and k=0 does not sneak an empty query past validation either
+    with pytest.raises(ValueError, match="at least one point"):
+        search(np.zeros((0, 4), np.float32), store, 0)
+
+
+# ---------------------------------------------------------------------------
+# single-set corpus
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stage2", STAGE2)
+@pytest.mark.parametrize("n_points", [1, 7])
+def test_single_set_corpus(stage2, n_points):
+    """The smallest real corpus: one stored set (down to a single point).
+    Every k ≥ 1 returns exactly that set, with the front-door exact value."""
+    rng = np.random.RandomState(44)
+    pts = rng.randn(n_points, 4).astype(np.float32)
+    store = _store([pts])
+    q = rng.randn(3, 4).astype(np.float32)
+    want = np.float32(set_distance(q, pts, method="exact").value)
+    for k in (1, 5):
+        res = search(q, store, k, stage2=stage2)
+        np.testing.assert_array_equal(res.ids, np.asarray([0], np.int32))
+        np.testing.assert_array_equal(res.values, np.asarray([want], np.float32))
+        ref = search(q, store, k, method="exact")
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+
+
+# ---------------------------------------------------------------------------
+# every candidate tied at the k-th upper bound
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stage2", STAGE2)
+@pytest.mark.parametrize("variant", ["hausdorff", "directed"])
+def test_all_candidates_tied_at_kth_bound(stage2, variant):
+    """A corpus of N exact copies of one set: every certified interval and
+    every exact value coincides, so τ ties across the WHOLE corpus and
+    nothing is prunable.  The ranking must fall back to the deterministic
+    (value, id) tie-break and still match brute force bit-for-bit."""
+    rng = np.random.RandomState(45)
+    base = rng.randn(9, 4).astype(np.float32)
+    n = 12
+    store = _store([base.copy() for _ in range(n)])
+    q = rng.randn(5, 4).astype(np.float32)
+    for k in (1, 4, n, n + 5):
+        res = search(q, store, k, variant=variant, stage2=stage2)
+        ref = search(q, store, k, variant=variant, method="exact")
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+        k_eff = min(k, n)
+        np.testing.assert_array_equal(res.ids, np.arange(k_eff, dtype=np.int32))
+        assert np.unique(res.values).size == 1     # genuinely all tied
+
+
+@pytest.mark.parametrize("stage2", STAGE2)
+def test_near_ties_straddling_the_boundary(stage2):
+    """Duplicates + near-duplicates around the k-th slot: the regime where
+    a sloppy margin or an unstable sort silently reorders the tail."""
+    sets, rng = ragged_corpus(46, n_sets=18, dup_every=2)
+    q = query_near(rng, sets, 4)
+    store = _store(sets)
+    for k in (2, 3, 9):
+        res = search(q, store, k, stage2=stage2)
+        ref = search(q, store, k, method="exact")
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+
+
+def test_query_identical_to_a_stored_set_wins_at_distance_zero():
+    sets, rng = ragged_corpus(47, n_sets=8)
+    store = _store(sets)
+    res = search(np.asarray(sets[3]), store, 1)
+    ref = search(np.asarray(sets[3]), store, 1, method="exact")
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)
+    # the self-match wins; its fp32 GEMM-form distance is 0 up to exactly
+    # the cancellation envelope the pinned margin formula budgets for
+    scale = 2.0 * float(np.linalg.norm(np.asarray(sets[3]), axis=1).max())
+    assert res.ids[0] == 3 and res.values[0] <= fp_margin(4, scale)
