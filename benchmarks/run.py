@@ -30,7 +30,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2",
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel",
     )
     ap.add_argument(
         "--quick", action="store_true", help="fig1 + phases + fused only"
@@ -62,6 +62,7 @@ def main() -> None:
         "dispatch": tables.bench_dispatch_overhead,
         "index": tables.bench_index,
         "index_stage2": tables.bench_index_stage2,
+        "bucket_kernel": tables.bench_bucket_kernel,
     }
     if args.quick:
         selected = ["fig1", "phases", "fused"]

@@ -219,6 +219,19 @@ def fused_min_sqdists_tiled(
         col_tile = jnp.min(d2, axis=0)
         return row_min, col_tile
 
+    if gi == 1 and gj == 1 and prune_projs is None:
+        # Single tile pair: the scan would run exactly one step whose
+        # carries start at +inf, and ``min(+inf, x) == x`` bitwise — so the
+        # loop machinery can be elided without moving a bit (the block
+        # layout invariance the conformance harness pins).  This keeps the
+        # hot vmapped-bucket case (every slab lane is one tile) free of
+        # per-lane lax.scan overhead.
+        row_min, col_min = tile_mins(
+            jnp.full((block_a,), _POS, jnp.float32),
+            a_tiles[0], a2_tiles[0], b_tiles[0], b2_tiles[0],
+        )
+        return row_min[:n_a], col_min[:n_b]
+
     def inner(carry, tile):
         row_min = carry
         if skip is None:

@@ -43,7 +43,9 @@ from repro.core import exact, selection
 __all__ = [
     "MaskedCertificate",
     "EXACT_MASKED_BACKENDS",
+    "BATCHED_NATIVE_BACKENDS",
     "masked_exact_hd",
+    "masked_exact_hd_batched",
     "masked_centroid",
     "masked_direction_set",
     "masked_projected_hd",
@@ -115,16 +117,53 @@ def _masked_exact_fused_mirror(a, b, valid_a, valid_b, *, directed, block_a, blo
     return jnp.maximum(h, exact.finalize_mins(min_b, valid_b))
 
 
+def _masked_exact_batched(
+    a, b, valid_a, valid_b, *, directed, block_a, block_b, use_pallas
+):
+    """Single-pair view of the batched bucket kernel: a slab of one set.
+
+    Under an outer vmap the slab axis batches like any other operand —
+    Pallas's batching rule folds it into the kernel grid — so the same
+    entry serves both the conformance sweep's unbatched calls and the
+    cascade's vmapped lanes.
+    """
+    from repro.kernels.hausdorff import batched
+
+    vb = None if valid_b is None else valid_b[None]
+    return batched.batched_bucket_hd(
+        a, b[None], valid_q=valid_a, valid_slab=vb, directed=directed,
+        block_a=block_a, block_b=block_b, use_pallas=use_pallas,
+    )[0]
+
+
+_masked_exact_batched_pallas = functools.partial(
+    _masked_exact_batched, use_pallas=True
+)
+_masked_exact_batched_mirror = functools.partial(
+    _masked_exact_batched, use_pallas=False
+)
+
+
 # Registry the conformance harness sweeps: name -> masked exact reduction.
 # "dense" and "tiled" mirror the front door's exact/dense and exact/tiled
 # dispatches op-for-op (the batched cascade leans on that); "fused_mirror"
 # is the raw min-vector reduction of the fused Pallas kernel's pure-JAX
 # mirror, kept distinct so single-pass kernels inherit the same contract.
+# "batched_pallas" is the batched bucket kernel (native on TPU,
+# interpret-mode elsewhere — a testing path, never picked by auto) and
+# "batched_mirror" its pure-JAX fallback (the production CPU/GPU batched
+# route); both are served by kernels/hausdorff/batched.py.
 EXACT_MASKED_BACKENDS = {
     "dense": _masked_exact_dense,
     "tiled": _masked_exact_tiled,
     "fused_mirror": _masked_exact_fused_mirror,
+    "batched_pallas": _masked_exact_batched_pallas,
+    "batched_mirror": _masked_exact_batched_mirror,
 }
+
+# Backends with a NATIVE batched (slab-axis) formulation: one launch per
+# bucket with an in-kernel per-set prune gate, instead of an outer vmap.
+BATCHED_NATIVE_BACKENDS = ("batched_pallas", "batched_mirror")
 
 
 def masked_exact_hd(
@@ -156,6 +195,71 @@ def masked_exact_hd(
     return impl(
         a, b, valid_a, valid_b, directed=directed, block_a=block_a, block_b=block_b
     )
+
+
+def masked_exact_hd_batched(
+    q,
+    slab,
+    *,
+    valid_q=None,
+    valid_slab=None,
+    lb=None,
+    cut=None,
+    directed: bool = False,
+    backend: str = "batched_mirror",
+    block_a: int = 2048,
+    block_b: int = 2048,
+) -> jnp.ndarray:
+    """(S,) EXACT (directed) HD of one query vs a whole padded bucket slab.
+
+    THE bucket-granularity entry: the cascade's stage 2a measures each
+    surviving bucket's frontier through it (stage 1 rides the same
+    ``backend`` name through ``masked_prohd_certified``'s exact subset
+    passes).  ``backend`` names any registered masked exact backend:
+
+    - :data:`BATCHED_NATIVE_BACKENDS` (``batched_pallas`` /
+      ``batched_mirror``) run the slab natively — one fused launch (or one
+      vmapped fused scan) for the whole bucket, honouring the per-set
+      prune gate ``lb``/``cut`` in-kernel (gated-out lanes return the
+      certified +inf sentinel; ``cut=None`` disables the gate);
+    - every other backend (``dense``/``tiled``/``fused_mirror``) is
+      vmapped over the slab axis, with the gate applied as a lane select
+      on the results — same semantics, per-pair op sequence.
+
+    Per-lane values carry the conformance contract of the chosen backend:
+    invariant to batch size/composition, within ``fp_value_margin`` of any
+    raw recomputation.
+    """
+    s_sets, cap = slab.shape[0], slab.shape[1]
+    if backend in BATCHED_NATIVE_BACKENDS:
+        from repro.kernels.hausdorff import batched
+
+        return batched.batched_bucket_hd(
+            q, slab, valid_q=valid_q, valid_slab=valid_slab, lb=lb, cut=cut,
+            directed=directed, block_a=block_a, block_b=block_b,
+            use_pallas=(backend == "batched_pallas"),
+        )
+    vb = valid_slab if valid_slab is not None else jnp.ones((s_sets, cap), jnp.bool_)
+
+    def one(p, v):
+        return masked_exact_hd(
+            q, p, valid_a=valid_q, valid_b=v, directed=directed,
+            backend=backend, block_a=block_a, block_b=block_b,
+        )
+
+    vals = jax.vmap(one)(slab, vb)
+    if cut is not None:
+        lb_ = jnp.zeros((s_sets,), jnp.float32) if lb is None else lb
+        # Same corner precedence as the native kernel: under ``directed`` an
+        # all-invalid query side's 0.0 convention dominates the gated-out
+        # +inf sentinel (undirected keeps +inf — the set→query direction's
+        # empty-target convention wins the max).
+        empty_q = (
+            jnp.logical_not(jnp.any(valid_q)) if valid_q is not None else False
+        )
+        sentinel = jnp.where(jnp.logical_and(directed, empty_q), 0.0, jnp.inf)
+        vals = jnp.where(lb_ > cut, sentinel, vals)
+    return vals
 
 
 def masked_centroid(points: jnp.ndarray, valid_f: jnp.ndarray) -> jnp.ndarray:
@@ -278,6 +382,7 @@ def masked_prohd_certified(
     m: int,
     directed: bool = False,
     block: int = 2048,
+    backend: str = "tiled",
 ) -> MaskedCertificate:
     """Full masked ProHD pass: subset estimate + certified interval.
 
@@ -285,6 +390,13 @@ def masked_prohd_certified(
     ``alpha``/``m`` as in ``ProHDConfig`` (k counts are derived from the
     PADDED sizes — static under jit; a looser α on a sparse buffer only
     selects more rows, never fewer, so the certificate is unaffected).
+    ``backend`` picks the registered masked exact reduction for the subset
+    estimate's directed passes (``EXACT_MASKED_BACKENDS``; the default
+    preserves the historical ``tiled`` bits) — the cascade threads its
+    resolved bucket backend through here so stage 1 rides the same kernel
+    as stage 2a.  Any exact backend keeps ``hd`` a certified lower bound;
+    cross-backend drift is within ``fp_value_margin`` (conformance-pinned)
+    and absorbed by the cascade's certified margins.
     """
     a = a.astype(jnp.float32)
     b = b.astype(jnp.float32)
@@ -307,8 +419,14 @@ def masked_prohd_certified(
     a_sel, va_sel = selection.take_selected(a, mask_a, cap_a)
     va_sel &= jnp.any(mask_a)
 
+    def _directed(qs, vqs, ts, vts):
+        return masked_exact_hd(
+            qs, ts, valid_a=vqs, valid_b=vts, directed=True,
+            backend=backend, block_a=block, block_b=block,
+        )
+
     if directed:
-        hd = exact.directed_hd_tiled(a_sel, b, valid_a=va_sel, valid_b=valid_b, block=block)
+        hd = _directed(a_sel, va_sel, b, valid_b)
     else:
         mask_b = _select_extreme_mask(proj_b, valid_b, m, k_b, k_b_pca)
         cap_b = selection.selection_capacity(n_b, m, alpha)
@@ -317,8 +435,8 @@ def masked_prohd_certified(
         # Full-inner mode (queries-from-subset vs full set): never
         # overestimates, so hd is itself a certified lower bound.
         hd = jnp.maximum(
-            exact.directed_hd_tiled(a_sel, b, valid_a=va_sel, valid_b=valid_b, block=block),
-            exact.directed_hd_tiled(b_sel, a, valid_a=vb_sel, valid_b=valid_a, block=block),
+            _directed(a_sel, va_sel, b, valid_b),
+            _directed(b_sel, vb_sel, a, valid_a),
         )
 
     lower = masked_projected_hd(proj_a, valid_a, proj_b, valid_b, directed=directed)
@@ -329,5 +447,5 @@ def masked_prohd_certified(
 # jit entry point for one-off (non-vmapped) callers; the cascade wraps its
 # own vmapped version per storage bucket.
 masked_prohd_certified_jit = functools.partial(
-    jax.jit, static_argnames=("alpha", "m", "directed", "block")
+    jax.jit, static_argnames=("alpha", "m", "directed", "block", "backend")
 )(masked_prohd_certified)

@@ -29,6 +29,7 @@ __all__ = [
     "default_device_kind",
     "resolve_backend",
     "resolve_block_sizes",
+    "resolve_masked_backend",
 ]
 
 # The fused kernel's native block edge: below this, a whole cloud fits in
@@ -107,3 +108,29 @@ def resolve_block_sizes(
     if d <= LOW_D:
         return 4096, 4096
     return 2048, 2048
+
+
+def resolve_masked_backend(
+    n_q: int,
+    cap: int,
+    d: int,
+    *,
+    device_kind: str = "cpu",
+) -> str:
+    """Pick the ``repro.core.masked.EXACT_MASKED_BACKENDS`` name for
+    bucket-granularity corpus work (the cascade's stages 1/2a).
+
+    Same discipline as :func:`resolve_backend`: the batched bucket kernel
+    where it is native (TPU → ``batched_pallas``), its pure-JAX batched
+    mirror everywhere else — interpret-mode Pallas is never auto-picked;
+    it stays an explicit-backend-only testing path.  Both routes run ONE
+    fused bidirectional pass per bucket (half the GEMM work of the
+    dense per-direction formulation) with the per-set prune gate applied
+    in-kernel, which is why no small-input dense escape hatch exists here:
+    bucket capacities are below ``TILE_THRESHOLD`` by construction, and
+    the batched formulation amortises dispatch across the slab instead.
+    """
+    del n_q, cap, d  # static facts reserved for future per-shape tuning
+    if device_kind == "tpu":
+        return "batched_pallas"
+    return "batched_mirror"

@@ -35,6 +35,7 @@ def search(
     method: str = "cascade",
     backend: str = "auto",
     stage2: str = "batched",
+    masked_backend: str | None = None,
     config: HDConfig | None = None,
     measure: bool = False,
 ):
@@ -45,11 +46,15 @@ def search(
     k others beat outright.  ``stage2`` picks the frontier-refinement
     dispatch (``"batched"`` vmapped per bucket, the default, or the legacy
     ``"sequential"`` per-candidate loop); both return identical bits.
+    ``masked_backend`` pins the bucket-granularity reduction (any
+    ``repro.core.masked.EXACT_MASKED_BACKENDS`` name; None resolves to the
+    batched bucket kernel natively on TPU, its pure-JAX mirror elsewhere)
+    — the top-k is identical under every registered name.
     """
     from repro.index import cascade
 
     return cascade.search(
         query, store, k,
         variant=variant, method=method, backend=backend, stage2=stage2,
-        config=config, measure=measure,
+        masked_backend=masked_backend, config=config, measure=measure,
     )

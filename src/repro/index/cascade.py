@@ -253,14 +253,21 @@ def certified_margins(lb, ub, scale, dim: int):
     return xp.maximum(lb - pad, 0.0), ub + pad
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "m", "directed"))
-def _stage1_batch(q, pts, valid, *, alpha: float, m: int, directed: bool):
-    """Masked ProHD certificates, query vs a (S, C, D) candidate slab."""
+@functools.partial(jax.jit, static_argnames=("alpha", "m", "directed", "backend"))
+def _stage1_batch(
+    q, pts, valid, *, alpha: float, m: int, directed: bool, backend: str = "tiled"
+):
+    """Masked ProHD certificates, query vs a (S, C, D) candidate slab.
+
+    ``backend`` routes the certificates' exact subset passes through the
+    resolved masked reduction (``EXACT_MASKED_BACKENDS``) — stage 1 rides
+    the same kernel family as stage 2a.
+    """
     va = jnp.ones((q.shape[0],), jnp.bool_)
 
     def one(p, v):
         return masked.masked_prohd_certified(
-            q, va, p, v, alpha=alpha, m=m, directed=directed
+            q, va, p, v, alpha=alpha, m=m, directed=directed, backend=backend
         )
 
     return jax.vmap(one)(pts, valid)
@@ -269,7 +276,10 @@ def _stage1_batch(q, pts, valid, *, alpha: float, m: int, directed: bool):
 @functools.partial(
     jax.jit, static_argnames=("directed", "backend", "block_a", "block_b")
 )
-def _stage2_batch(q, pts, valid, *, directed, backend, block_a, block_b):
+def _stage2_batch(
+    q, pts, valid, gate_lb=None, gate_cut=None, *, directed, backend,
+    block_a, block_b,
+):
     """EXACT masked HD, query vs a (B, cap, D) candidate slab — one bucket's
     whole surviving frontier measured in a single jitted call.
 
@@ -280,15 +290,20 @@ def _stage2_batch(q, pts, valid, *, directed, backend, block_a, block_b):
     margin-pinned, NOT bitwise.  Lane results are invariant to batch size
     and composition (also conformance-pinned), so the cascade's bounds
     never depend on which candidates happened to survive together.
+
+    ``backend`` names any registered masked backend; the batched-native
+    ones (``batched_pallas``/``batched_mirror``) run the slab as ONE
+    launch and honour the per-set prune gate ``gate_lb``/``gate_cut`` —
+    gated-out lanes (certified ``lb > cut``, plus the pow2 batch-padding
+    duplicates the cascade feeds in with ``lb = +inf``) return the +inf
+    sentinel.  Only the Pallas kernel skips a gated lane's GEMMs
+    in-kernel (``pl.when``); the pure-JAX routes compute every lane and
+    apply the gate as a lane select (shape-static vmap cannot drop work).
     """
-
-    def one(p, v):
-        return masked.masked_exact_hd(
-            q, p, valid_b=v, directed=directed, backend=backend,
-            block_a=block_a, block_b=block_b,
-        )
-
-    return jax.vmap(one)(pts, valid)
+    return masked.masked_exact_hd_batched(
+        q, pts, valid_slab=valid, lb=gate_lb, cut=gate_cut,
+        directed=directed, backend=backend, block_a=block_a, block_b=block_b,
+    )
 
 
 def _kth_smallest(ub: np.ndarray, k: int) -> float:
@@ -328,6 +343,7 @@ def search(
     method: str = "cascade",
     backend: str = "auto",
     stage2: str = "batched",
+    masked_backend: str | None = None,
     config: HDConfig | None = None,
     measure: bool = False,
 ) -> SearchResult:
@@ -350,6 +366,14 @@ def search(
                frontier).  Both return identical bits; batched keeps the
                stage-2 jit cache at O(distinct bucket shapes) + O(k)
                instead of O(frontier).
+    masked_backend — which ``repro.core.masked.EXACT_MASKED_BACKENDS``
+               reduction serves the bucket-granularity passes (stage-1
+               certificates and the stage-2a batched tightening).  None
+               (default) resolves like ``backend="auto"``: the batched
+               bucket kernel where Pallas is native (TPU), its pure-JAX
+               batched mirror elsewhere — never interpret-mode Pallas.
+               Any registered name is valid; the returned top-k is
+               identical under every one of them (conformance-gated).
     config   — HDConfig; ``alpha`` drives the stage-1 masked ProHD
 
     Returns a :class:`SearchResult`; the top-k ids and values are
@@ -363,6 +387,11 @@ def search(
         raise ValueError(f"unknown stage2 mode {stage2!r}; expected one of {STAGE2_MODES}")
     if k < 0:
         raise ValueError(f"k must be >= 0, got {k}")
+    if masked_backend is not None and masked_backend not in masked.EXACT_MASKED_BACKENDS:
+        raise ValueError(
+            f"unknown masked backend {masked_backend!r}; expected one of "
+            f"{tuple(sorted(masked.EXACT_MASKED_BACKENDS))}"
+        )
     if store.n_sets == 0:
         raise ValueError("cannot search an empty SetStore")
     cfg = config if config is not None else HDConfig()
@@ -394,6 +423,10 @@ def search(
     n = store.n_sets
     k_eff = min(k, n)
     directed = variant == "directed"
+    device_kind = resolver.default_device_kind()
+    mb = masked_backend or resolver.resolve_masked_backend(
+        int(q.shape[0]), 0, store.dim, device_kind=device_kind
+    )
     values = np.full((n,), np.inf, np.float32)
     resolved = np.zeros((n,), bool)
     exact_refines = 0
@@ -436,7 +469,7 @@ def search(
                     q,
                     jnp.take(bucket.points, take, axis=0),
                     jnp.take(bucket.valid, take, axis=0),
-                    alpha=cfg.alpha, m=m, directed=directed,
+                    alpha=cfg.alpha, m=m, directed=directed, backend=mb,
                 )
                 lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
                 sids = bucket.set_ids[rows]
@@ -497,7 +530,6 @@ def search(
             # the output.
             slot = store.slot_index()
             buckets = store.packed_buckets()
-            device_kind = resolver.default_device_kind()
             n_q = int(q.shape[0])
             tau = _kth_smallest(ub, k_eff)
             alive &= lb <= tau
@@ -515,20 +547,39 @@ def search(
                 if not sids:
                     continue
                 stats["stage2_batched_candidates"] += len(sids)
-                fam = "dense" if min(n_q, cap) < resolver.TILE_THRESHOLD else "tiled"
                 bucket = buckets[cap]
                 rows = np.asarray([slot[s][1] for s in sids])
                 take = _pow2_take(rows)
                 batch = int(take.shape[0])
                 block_a, block_b = resolver.resolve_block_sizes(
-                    n_q, cap, store.dim, device_kind=device_kind, backend="tiled"
+                    n_q, cap, store.dim, device_kind=device_kind,
+                    backend="fused_pallas" if mb == "batched_pallas" else "tiled",
+                )
+                # Per-set prune gate: every real lane carries its certified
+                # stage-0/1 lower bound against a cutoff safely ABOVE τ
+                # (1e-6 relative headroom dwarfs the float32 cast error, so
+                # a lane with lb ≤ τ in float64 can never be skipped by the
+                # cast — a skip is always certified lb > τ); the pow2
+                # batch-padding duplicate lanes ride in with lb = +inf and
+                # are gated unconditionally — which saves their GEMMs
+                # in-kernel on the Pallas route (the pure-JAX routes still
+                # compute them and select the sentinel).
+                gate_lb = np.concatenate(
+                    [lb[sids], np.full((batch - rows.size,), np.inf)]
+                ).astype(np.float32)
+                gate_cut = np.full(
+                    (batch,),
+                    tau * (1.0 + 1e-6) if np.isfinite(tau) else np.inf,
+                    np.float32,
                 )
                 vals = np.asarray(
                     _stage2_batch(
                         q,
                         jnp.take(bucket.points, take, axis=0),
                         jnp.take(bucket.valid, take, axis=0),
-                        directed=directed, backend=fam,
+                        jnp.asarray(gate_lb),
+                        jnp.asarray(gate_cut),
+                        directed=directed, backend=mb,
                         block_a=block_a, block_b=block_b,
                     ),
                     np.float64,
@@ -536,7 +587,7 @@ def search(
                 pad = fp_value_margin(store.dim, scale[sids], vals)
                 lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
                 ub[sids] = np.minimum(ub[sids], vals + pad)
-                stage2_shapes.add((cap, batch, fam))
+                stage2_shapes.add((cap, batch, mb))
                 stage2_calls += 1
             # -- 2b: raw exact resolution of whatever still straddles the
             # top-k boundary — after 2a that is ≈ k candidates (+ exact
@@ -547,6 +598,7 @@ def search(
             stage2_mode=stage2,
             stage2_calls=stage2_calls,
             stage2_distinct_shapes=len(stage2_shapes),
+            masked_backend=mb,
         )
 
     top = _rank(values, np.nonzero(resolved)[0], k_eff)

@@ -1,0 +1,168 @@
+"""Conformance: the CROSS-backend differential certification sweep.
+
+PR 4's harness pinned what each backend must satisfy on its own (padded ==
+raw bitwise, layout invariances, margin vs a float64 oracle).  This module
+is the differential half that certifies a NEW backend against every
+backend already registered — the suite the batched bucket kernel
+(``batched_pallas`` / ``batched_mirror``) lands under, and the template
+any future kernel PR inherits by just growing
+``repro.core.masked.EXACT_MASKED_BACKENDS``:
+
+  * **pairwise value agreement** — on hypothesis-generated ragged corpora,
+    every backend PAIR lands within the value-aware certified envelope
+    ``fp_value_margin(D, scale, v̂)`` of each other (each side's envelope
+    covers both the float64 truth and any other fp32 exact computation, so
+    the strictest of the two margins is a sound pin);
+  * **end-to-end top-k identity** — ``repro.hd.search`` returns bit-for-bit
+    the brute-force top-k under EVERY registered ``masked_backend``, for
+    both variants, both stage-2 modes, hypothesis-composed corpora (exact
+    duplicates → forced ties included);
+  * **prune-gate transparency** — the per-set early-out gate
+    (``masked_exact_hd_batched``'s ``lb``/``cut``, in-kernel on the
+    batched-native backends, a lane select elsewhere): a vacuous gate is
+    bitwise invisible, and a live gate fed by the store's REAL
+    projection-interval bounds leaves every un-skipped lane bitwise
+    untouched while every skipped lane is certified (its sound lower
+    bound exceeds the cutoff) and reports the +inf sentinel.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import masked
+from repro.index import SetStore, cascade, fp_value_margin
+
+pytestmark = pytest.mark.conformance
+
+BACKENDS = sorted(masked.EXACT_MASKED_BACKENDS)
+PAIRS = [(a, b) for i, a in enumerate(BACKENDS) for b in BACKENDS[i + 1 :]]
+
+
+def assert_backend_pairs_within_value_margin(q, raws, pts, val, d, context):
+    """Shared assertion body of the pairwise differential pin: on one
+    packed slab, every registered backend pair lands within the strictest
+    of the two value-aware certified envelopes, both variants.  Used by
+    the seeded anchor here and the hypothesis generalisation in
+    ``test_cross_backend_properties`` — one rule, two drivers."""
+    for directed in (False, True):
+        got = {
+            be: np.asarray(
+                masked.masked_exact_hd_batched(
+                    q, pts, valid_slab=val,
+                    directed=directed, backend=be, block_a=64, block_b=64,
+                ),
+                np.float64,
+            )
+            for be in BACKENDS
+        }
+        for i, r in enumerate(raws):
+            s = strategies.pair_scale(q, r)
+            for b1, b2 in PAIRS:
+                v1, v2 = got[b1][i], got[b2][i]
+                margin = min(
+                    float(fp_value_margin(d, s, v1)),
+                    float(fp_value_margin(d, s, v2)),
+                )
+                assert abs(v1 - v2) <= margin, (
+                    b1, b2, directed, i, v1, v2, margin, context
+                )
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+@pytest.mark.parametrize("offset", [0.0, 1e4], ids=["unit", "cancellation"])
+def test_every_backend_pair_within_value_margin_seeded(seed, offset):
+    """Deterministic anchor of the pairwise differential pin (the
+    hypothesis generalisation lives in test_cross_backend_properties):
+    every backend pair lands within the value-aware certified envelope on
+    a ragged packed slab, at unit AND cancellation magnitudes."""
+    d = 5
+    q, raws, pts, val = strategies.bucket_case(
+        seed, batch=7, cap=16, d=d, nq=1 + seed % 23,
+        offset=offset, scales=(0.3, 1.0, 10.0),
+    )
+    assert_backend_pairs_within_value_margin(q, raws, pts, val, d, (seed, offset))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("variant", ["hausdorff", "directed"])
+def test_cascade_topk_identical_seeded(backend, variant):
+    """Deterministic anchor for the hypothesis sweep: the anisotropic
+    cancellation-heavy corpus (the regime that actually moved an ulp in PR
+    4) is searched under every backend and must match brute force."""
+    sets, rng = strategies.anisotropic_corpus(23, n_sets=24, d=16)
+    store = SetStore(dim=16)
+    store.add_many(sets)
+    q = strategies.query_near(rng, sets, 16)
+    ref = cascade.search(q, store, 4, variant=variant, method="exact")
+    res = cascade.search(q, store, 4, variant=variant, masked_backend=backend)
+    np.testing.assert_array_equal(res.ids, ref.ids)
+    np.testing.assert_array_equal(res.values, ref.values)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("directed", [False, True], ids=["H", "h"])
+def test_prune_gate_vacuous_is_bitwise_invisible(backend, directed):
+    """Gate plumbed but never firing (lb = 0 ≤ cut) must be a bitwise
+    no-op next to the gate-free call, on every backend."""
+    q, _, pts, val = strategies.bucket_case(3, batch=7, cap=16, d=5, nq=11)
+    base = np.asarray(
+        masked.masked_exact_hd_batched(
+            q, pts, valid_slab=val, directed=directed, backend=backend,
+            block_a=64, block_b=64,
+        )
+    )
+    gated = np.asarray(
+        masked.masked_exact_hd_batched(
+            q, pts, valid_slab=val,
+            lb=jnp.zeros((7,), jnp.float32),
+            cut=jnp.full((7,), jnp.inf, jnp.float32),
+            directed=directed, backend=backend, block_a=64, block_b=64,
+        )
+    )
+    np.testing.assert_array_equal(gated, base, err_msg=backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_prune_gate_live_skips_are_certified_and_rest_bitwise(backend):
+    """A LIVE gate fed by the store's real projection-interval bounds:
+    un-skipped lanes keep their gate-off bits, skipped lanes are exactly
+    the ``lb > cut`` set, report +inf, and are sound (their true distance
+    provably exceeds the cutoff because ``lb`` is certified)."""
+    sets, rng = strategies.ragged_corpus(11, n_sets=12, d=4, max_n=14)
+    store = SetStore(dim=4, min_bucket=16)
+    store.add_many(sets)
+    q = strategies.query_near(rng, sets, 4)
+    bucket = store.packed_buckets()[16]
+    qsum = store.summarize(jnp.asarray(q))
+    lb_raw, _ = cascade.interval_bounds(qsum, store.summaries())
+    lb = jnp.asarray(np.asarray(lb_raw, np.float32)[bucket.set_ids])
+
+    base = np.asarray(
+        masked.masked_exact_hd_batched(
+            jnp.asarray(q), bucket.points, valid_slab=bucket.valid,
+            backend=backend, block_a=64, block_b=64,
+        )
+    )
+    # A cutoff the interval bounds can actually clear for the far clusters
+    # (lb runs ~0.6–0.8× the exact value here, so the median would never
+    # fire): the 25th percentile splits the bucket into keep/skip.
+    cut_val = float(np.percentile(base, 25))
+    cut = jnp.full(lb.shape, cut_val, jnp.float32)
+    gated = np.asarray(
+        masked.masked_exact_hd_batched(
+            jnp.asarray(q), bucket.points, valid_slab=bucket.valid,
+            lb=lb, cut=cut, backend=backend, block_a=64, block_b=64,
+        )
+    )
+    skipped = np.asarray(lb) > cut_val
+    # the interval bounds must actually bite on a clustered corpus,
+    # otherwise this test is vacuous
+    assert skipped.any(), "projection-interval gate never fired"
+    assert (~skipped).any(), "gate skipped the whole bucket"
+    np.testing.assert_array_equal(gated[~skipped], base[~skipped], err_msg=backend)
+    assert np.isinf(gated[skipped]).all(), backend
+    # soundness: a skipped lane's true value exceeds the cutoff (lb is a
+    # certified lower bound on the exact distance)
+    assert (base[skipped] >= np.asarray(lb)[skipped]).all()
+    assert (base[skipped] > cut_val).all()

@@ -1,0 +1,50 @@
+"""Adversarial cross-backend conformance: hypothesis composes ragged
+corpora, padding layouts and magnitudes hunting for (a) a backend PAIR
+whose values drift past the certified value-aware envelope, or (b) a
+``masked_backend`` under which the cascade's top-k stops being bit-for-bit
+brute force's.
+
+Deterministic anchors of both properties live in ``test_cross_backend``
+(whose shared assertion body this module reuses); this is the generative
+half (same optional-dependency pattern as ``test_conformance_properties``).
+"""
+import numpy as np
+import pytest
+
+import strategies
+from repro.index import SetStore, cascade
+
+from test_cross_backend import BACKENDS, assert_backend_pairs_within_value_margin
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+
+pytestmark = pytest.mark.conformance
+
+
+@given(strategies.cross_backend_cases())
+@settings(max_examples=15, deadline=None)
+def test_property_every_backend_pair_within_value_margin(case):
+    seed, nq, d, batch, cap, offset = case
+    q, raws, pts, val = strategies.bucket_case(
+        seed, batch=batch, cap=cap, d=d, nq=nq,
+        offset=offset, scales=(0.3, 1.0, 10.0),
+    )
+    assert_backend_pairs_within_value_margin(q, raws, pts, val, d, case)
+
+
+@given(strategies.corpus_search_cases())
+@settings(max_examples=8, deadline=None)
+def test_property_cascade_topk_identical_under_every_backend(case):
+    seed, k, dup_every, variant, min_bucket, stage2 = case
+    sets, rng = strategies.ragged_corpus(seed, dup_every=dup_every)
+    store = SetStore(dim=4, min_bucket=min_bucket)
+    store.add_many(sets)
+    q = strategies.query_near(rng, sets, 4)
+    ref = cascade.search(q, store, k, variant=variant, method="exact")
+    for be in BACKENDS:
+        res = cascade.search(
+            q, store, k, variant=variant, stage2=stage2, masked_backend=be
+        )
+        np.testing.assert_array_equal(res.ids, ref.ids, err_msg=f"{be}/{case}")
+        np.testing.assert_array_equal(res.values, ref.values, err_msg=f"{be}/{case}")

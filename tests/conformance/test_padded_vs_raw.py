@@ -26,6 +26,7 @@ points × tied distances.  Assertions are ``==`` on fp32 bits — never a
 tolerance.  Cross-BACKEND equality is deliberately NOT asserted here
 (different GEMM association); that contract lives in ``test_fp_margin.py``.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -151,3 +152,58 @@ def test_all_padded_side_conventions_agree(backend):
         )
     )
     assert got == np.float32(0.0), backend
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_padded_side_conventions_hold_per_vmapped_lane(backend):
+    """The same empty-side conventions INSIDE a batch: an all-invalid lane
+    riding next to ordinary lanes must still finalize to its convention
+    value (empty target → +inf, empty query → 0.0) while every other
+    lane keeps the exact bits of its batch-of-one vmapped call (lane
+    results are batch-size/composition invariant; solo UNvmapped calls
+    run a different GEMM shape and are only margin-pinned) — the batched
+    stage-2a guarantee when a frontier gather includes a degenerate slab
+    row."""
+    d = 3
+    rng = np.random.RandomState(21)
+    q = jnp.asarray(rng.randn(7, d).astype(np.float32))
+    slab = np.stack(
+        [strategies.pad_cloud(rng.randn(5, d).astype(np.float32), 16, fill=1e9)[0]
+         for _ in range(4)]
+    )
+    valid = np.stack([strategies.pad_cloud(np.zeros((5, d)), 16)[1]] * 4)
+    valid[2] = False  # lane 2: all-invalid (empty) side
+
+    # empty TARGET lane: h(q → ∅) = +inf, neighbours bitwise untouched
+    run_t = jax.jit(
+        jax.vmap(
+            lambda p, v: masked.masked_exact_hd(
+                q, p, valid_b=v, directed=True, backend=backend,
+                block_a=64, block_b=64,
+            )
+        )
+    )
+    got = np.asarray(run_t(jnp.asarray(slab), jnp.asarray(valid)))
+    assert np.isinf(got[2]), backend
+    for i in (0, 1, 3):
+        lane = np.asarray(
+            run_t(jnp.asarray(slab[i : i + 1]), jnp.asarray(valid[i : i + 1]))
+        )[0]
+        assert got[i] == lane, (backend, i)
+
+    # empty QUERY lane: h(∅ → q) = 0.0, neighbours bitwise untouched
+    run_q = jax.jit(
+        jax.vmap(
+            lambda p, v: masked.masked_exact_hd(
+                p, q, valid_a=v, directed=True, backend=backend,
+                block_a=64, block_b=64,
+            )
+        )
+    )
+    got_q = np.asarray(run_q(jnp.asarray(slab), jnp.asarray(valid)))
+    assert got_q[2] == np.float32(0.0), backend
+    for i in (0, 1, 3):
+        lane = np.asarray(
+            run_q(jnp.asarray(slab[i : i + 1]), jnp.asarray(valid[i : i + 1]))
+        )[0]
+        assert got_q[i] == lane, (backend, i)

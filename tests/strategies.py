@@ -191,3 +191,61 @@ def padded_reduction_cases():
         st.integers(0, 2),      # extra pow2 doublings past the home bucket
         st.booleans(),          # mask some candidate rows invalid too
     )
+
+
+def cross_backend_cases():
+    """Strategy tuple for the cross-backend differential conformance
+    property: (corpus seed, n_q, d, slab batch, cap, magnitude offset) —
+    ragged sets packed into one padded slab, every registered backend
+    measured against every other."""
+    from hypothesis import strategies as st
+
+    return st.tuples(
+        st.integers(0, 10_000),             # corpus seed
+        st.integers(1, 24),                 # n_q
+        st.sampled_from([2, 5, 16]),        # d
+        st.integers(1, 9),                  # slab batch (set count)
+        st.sampled_from([8, 16, 32]),       # bucket capacity
+        st.sampled_from([0.0, 1e4]),        # coordinate offset (cancellation)
+    )
+
+
+def bucket_case(
+    seed: int,
+    batch: int,
+    cap: int,
+    d: int,
+    nq: int,
+    *,
+    offset: float = 0.0,
+    scales=(0.5, 1, 20),
+):
+    """One deterministic packed-bucket fixture: a query plus ``batch``
+    ragged sets padded into a (batch, cap, d) slab.
+
+    ``offset`` shifts every coordinate (the catastrophic-cancellation
+    regime); ``scales`` is the per-set magnitude draw.  Returns
+    ``(q, raws, pts, valid)`` with jnp slab arrays — the shared
+    vocabulary of the batched-refinement conformance tests.
+    """
+    rng = np.random.RandomState(seed)
+    q = (rng.randn(nq, d) + offset).astype(np.float32)
+    raws = [
+        (rng.randn(rng.randint(1, cap + 1), d) * rng.choice(list(scales)) + offset
+         ).astype(np.float32)
+        for _ in range(batch)
+    ]
+    pts, val = np.zeros((batch, cap, d), np.float32), np.zeros((batch, cap), bool)
+    for i, r in enumerate(raws):
+        pts[i, : r.shape[0]] = r
+        val[i, : r.shape[0]] = True
+    return jnp.asarray(q), raws, jnp.asarray(pts), jnp.asarray(val)
+
+
+def pair_scale(q, raw) -> float:
+    """The float64 magnitude yardstick of a (query, set) pair — the
+    ``scale`` every fp-margin assertion feeds ``fp_value_margin``."""
+    return float(
+        np.linalg.norm(np.asarray(q, np.float64), axis=1).max()
+        + np.linalg.norm(np.asarray(raw, np.float64), axis=1).max()
+    )

@@ -379,6 +379,59 @@ def test_slot_index_tracks_packed_buckets():
     assert cap == 64 and int(store.packed_buckets()[64].set_ids[row]) == sid
 
 
+def test_slot_index_unknown_ids_are_absent():
+    """slot_index() is a plain {known id: slot} dict — ids never stored
+    (including negative and past-the-end ones) are ABSENT, so a stale or
+    corrupted id raises KeyError instead of silently aliasing a slab row."""
+    sets, _ = _corpus(26, n_sets=5)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    slot = store.slot_index()
+    for bogus in (-1, len(sets), len(sets) + 7, 10**6):
+        assert bogus not in slot
+        with pytest.raises(KeyError):
+            slot[bogus]
+    # the index is a snapshot: mutating the returned dict must not corrupt
+    # the store's cached copy
+    slot[-1] = (999, 0)
+    assert -1 not in store.slot_index()
+
+
+def test_search_on_empty_store_raises():
+    store = SetStore(dim=4)
+    q = np.zeros((3, 4), np.float32)
+    with pytest.raises(ValueError, match="empty SetStore"):
+        search(q, store, 1)
+    # k == 0 is the one degenerate request served without a corpus scan —
+    # but an empty store still has nothing to serve it from
+    with pytest.raises(ValueError, match="empty SetStore"):
+        search(q, store, 0)
+
+
+def test_single_all_padded_slab_lane_conventions():
+    """A bucket whose ONE slab lane is entirely padding (no valid row) —
+    the store itself can never produce it (empty sets are rejected), but
+    batched consumers can meet it via degenerate gathers.  Every backend
+    must finalize it by the empty-side conventions, not garbage."""
+    pts = jnp.asarray(np.full((1, 8, 3), 7.7e8, np.float32))  # garbage fill
+    valid = jnp.zeros((1, 8), bool)
+    q = jnp.asarray(np.random.RandomState(0).randn(5, 3).astype(np.float32))
+    for be in sorted(masked.EXACT_MASKED_BACKENDS):
+        vals = np.asarray(
+            masked.masked_exact_hd_batched(
+                q, pts, valid_slab=valid, directed=True, backend=be,
+                block_a=64, block_b=64,
+            )
+        )
+        assert vals.shape == (1,) and np.isinf(vals[0]), be  # empty target
+        undirected = np.asarray(
+            masked.masked_exact_hd_batched(
+                q, pts, valid_slab=valid, backend=be, block_a=64, block_b=64
+            )
+        )
+        assert np.isinf(undirected[0]), be
+
+
 # ---------------------------------------------------------------------------
 # direction banks (satellite: data-driven banks)
 # ---------------------------------------------------------------------------

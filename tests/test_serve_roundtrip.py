@@ -1,0 +1,125 @@
+"""ProHDService corpus round-trips: a SERVED search must be the direct
+``repro.hd.search`` on an equivalent store — same ids, same bits — and a
+malformed submit must bounce at submit time without poisoning the queue.
+
+The service builds its store lazily with the default direction-bank key,
+so an "equivalent store" is simply a fresh ``SetStore`` fed the same sets
+in the same order with the same ``min_bucket`` — summaries, bucketing and
+the cascade are then bit-identical by construction.  The deterministic
+tests pin the seeded corpus; the hypothesis property composes corpora,
+k's, variants and interleavings adversarially (optional-dependency
+guarded, same pattern as the other property suites).
+"""
+import numpy as np
+import pytest
+
+import strategies
+from repro.hd import search as direct_search
+from repro.index import SetStore
+from repro.serve.server import ProHDService, ServeConfig
+
+
+def _service_and_twin(sets, min_bucket=8):
+    svc = ProHDService(ServeConfig(min_store_bucket=min_bucket))
+    twin = SetStore(dim=sets[0].shape[1], min_bucket=min_bucket)
+    for s in sets:
+        sid = svc.add_set(s)
+        assert twin.add(s) == sid  # id streams must stay aligned
+    return svc, twin
+
+
+@pytest.mark.parametrize("variant", ["hausdorff", "directed"])
+@pytest.mark.parametrize("k", [1, 3, 1000])
+def test_served_search_matches_direct_search(variant, k):
+    sets, rng = strategies.ragged_corpus(31, n_sets=20, dup_every=4)
+    svc, twin = _service_and_twin(sets)
+    q = strategies.query_near(rng, sets, 4)
+    rid = svc.submit_search(q, k=k, variant=variant)
+    out = svc.flush()[rid]
+    want = direct_search(q, twin, k, variant=variant)
+    np.testing.assert_array_equal(np.asarray(out["ids"]), want.ids)
+    np.testing.assert_array_equal(
+        np.asarray(out["values"], np.float32), want.values
+    )
+    assert out["stats"]["exact_refines"] == want.stats["exact_refines"]
+
+
+def test_add_set_after_searches_reaches_next_flush():
+    """Interleaved add/search: a set added between flushes is visible to
+    the next search, and ids keep advancing across the service lifetime."""
+    sets, rng = strategies.ragged_corpus(33, n_sets=6)
+    svc, twin = _service_and_twin(sets)
+    q = strategies.query_near(rng, sets, 4)
+    rid = svc.submit_search(q, k=2)
+    first = svc.flush()[rid]
+    new = (np.asarray(q).mean(axis=0) + rng.randn(3, 4) * 0.01).astype(np.float32)
+    assert svc.add_set(new) == twin.add(new) == len(sets)
+    rid = svc.submit_search(q, k=2)
+    second = svc.flush()[rid]
+    want = direct_search(q, twin, 2)
+    np.testing.assert_array_equal(np.asarray(second["ids"]), want.ids)
+    assert len(sets) in second["ids"]  # the hand-planted nearest neighbour
+    assert first["ids"] != second["ids"]
+
+
+def test_submit_time_validation_bounces_without_poisoning_the_queue():
+    sets, rng = strategies.ragged_corpus(35, n_sets=8)
+    svc, twin = _service_and_twin(sets)
+    q = strategies.query_near(rng, sets, 4)
+
+    good = svc.submit_search(q, k=2)
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        svc.submit_search(q, k=0)
+    with pytest.raises(ValueError, match="unknown search variant"):
+        svc.submit_search(q, k=1, variant="chamfer")
+    with pytest.raises(ValueError, match=r"expected \(n_q, 4\)"):
+        svc.submit_search(np.zeros((3, 5), np.float32), k=1)
+    with pytest.raises(ValueError, match=r"expected \(n_q, 4\)"):
+        svc.submit_search(np.zeros((12,), np.float32), k=1)
+
+    # the failed submits must not have consumed ids or dropped the good one
+    out = svc.flush()
+    want = direct_search(q, twin, 2)
+    np.testing.assert_array_equal(np.asarray(out[good]["ids"]), want.ids)
+    assert len(out) == 1
+
+
+def test_search_before_any_corpus_raises_and_add_set_validates():
+    svc = ProHDService()
+    with pytest.raises(ValueError, match="no corpus to search"):
+        svc.submit_search(np.zeros((3, 4), np.float32), k=1)
+    with pytest.raises(ValueError, match=r"expected \(n, D\)"):
+        svc.add_set(np.zeros((5,), np.float32))
+    # the store materialises on the first valid add, pinning its dim
+    svc.add_set(np.zeros((2, 4), np.float32))
+    with pytest.raises(ValueError):
+        svc.add_set(np.zeros((2, 7), np.float32))
+
+
+def test_property_served_search_matches_direct_search():
+    """Hypothesis: for ANY ragged corpus, min_bucket, k, variant and query
+    draw, served top-k == direct top-k, bit for bit."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        st.integers(0, 10_000),
+        st.integers(1, 8),
+        st.sampled_from([2, 8]),
+        st.sampled_from(["hausdorff", "directed"]),
+    )
+    def run(seed, k, min_bucket, variant):
+        sets, rng = strategies.ragged_corpus(seed, n_sets=14)
+        svc, twin = _service_and_twin(sets, min_bucket=min_bucket)
+        q = strategies.query_near(rng, sets, 4)
+        rid = svc.submit_search(q, k=k, variant=variant)
+        out = svc.flush()[rid]
+        want = direct_search(q, twin, k, variant=variant)
+        np.testing.assert_array_equal(np.asarray(out["ids"]), want.ids)
+        np.testing.assert_array_equal(
+            np.asarray(out["values"], np.float32), want.values
+        )
+
+    run()
