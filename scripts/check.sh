@@ -144,3 +144,45 @@ for name, row in sorted(searches.items()):
     assert ds["identical"] == "True", f"{name} top-k differs from brute force"
 PY
 fi
+
+# PR 6 gates.
+# (a) Fault-injection sweep: the reliability invariant (certified interval
+#     containing the truth, or a typed error — never a silently wrong
+#     top-k) at EVERY declared injection point.  The sweep parametrizes
+#     over repro.reliability.injection_points() at collection time, so a
+#     newly declared point cannot dodge it; zero collected tests (pytest
+#     exit 5) fails the gate.
+echo "== fault-injection sweep =="
+python -m pytest -q -m faults tests/test_fault_injection.py
+
+# (b) Reliability benchmark: durable snapshot round-trip on the 5k-set
+#     corpus must reproduce the live store's top-k bit-for-bit, a flipped
+#     snapshot byte must be DETECTED, the degraded deadline-floor answer
+#     must stay sound, and the injected-fault retry path must recover
+#     -> BENCH_PR6.json.
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  echo "== reliability benchmark (JSON -> BENCH_PR6.json) =="
+  python -m benchmarks.run --only reliability --json BENCH_PR6.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR6.json"))["rows"]}
+d = {n: dict(kv.split("=", 1) for kv in r["derived"].split(";"))
+     for n, r in rows.items()}
+restore = d["reliability/restore"]
+detect = d["reliability/corrupt_detect"]
+deg = d["reliability/degraded"]
+rec = d["reliability/recovery"]
+print(f"snapshot: save {rows['reliability/snapshot']['us_per_call']/1e3:.0f}ms, "
+      f"restore {rows['reliability/restore']['us_per_call']/1e3:.0f}ms, "
+      f"identical top-k: {restore['identical']}")
+print(f"corrupt byte detected: {detect['detected']}; "
+      f"degraded floor {deg['vs_full']} vs full cascade (sound: {deg['sound']}); "
+      f"fault recovery {rec['overhead']} of a clean flush "
+      f"(recovered: {rec['recovered']})")
+assert restore["identical"] == "True", "restored snapshot's top-k differs"
+assert detect["detected"] == "True", "corrupted snapshot NOT detected"
+assert deg["sound"] == "True", "degraded result lost its certificate"
+assert rec["recovered"] == "True", "service did not recover from injected fault"
+PY
+fi

@@ -28,6 +28,7 @@ import time
 from typing import Any
 
 import jax
+import numpy as np
 
 from repro.hd import registry, resolver
 from repro.hd.config import HDConfig
@@ -44,6 +45,28 @@ def _unpack_masks(masks):
     return valid_a, valid_b
 
 
+def _reject_nonfinite(name: str, cloud, valid) -> None:
+    """Front-door input validation: NaN/Inf on a VALID row is an error.
+
+    Masked-out rows may legitimately hold garbage (the padding
+    convention), so the check is mask-aware.  No-ops under tracing —
+    tracers carry no values to validate (HDEngine inside jit/vmap rides
+    through untouched).
+    """
+    if isinstance(cloud, jax.core.Tracer) or isinstance(valid, jax.core.Tracer):
+        return
+    finite = np.isfinite(np.asarray(cloud)).all(axis=-1)
+    if valid is not None:
+        finite = finite | ~np.asarray(valid)
+    if not bool(finite.all()):
+        bad = int(np.argmin(finite))
+        raise ValueError(
+            f"cloud {name!r} has non-finite coordinates on valid row {bad} "
+            "(NaN/Inf); certified intervals are undefined over them — "
+            "clean the input, mask the row out, or pass validate=False"
+        )
+
+
 def set_distance(
     a,
     b,
@@ -58,6 +81,7 @@ def set_distance(
     batch_axes: tuple[str, ...] = ("data",),
     prune_projs: tuple[Any, Any] | None = None,
     measure: bool = False,
+    validate: bool = True,
 ) -> HDResult:
     """Compute a set distance between clouds ``a`` (n_a, D) and ``b`` (n_b, D).
 
@@ -78,6 +102,13 @@ def set_distance(
                ``skip_fraction`` stat)
     measure  — block until ready and record wall time in ``meta.elapsed_s``
                (ignored under tracing)
+    validate — reject non-finite coordinates on VALID rows with a
+               ValueError (default True): a NaN/Inf point flows straight
+               into the kernels and silently poisons every "certified"
+               interval — only masked-OUT garbage is handled (the
+               poisoned-norm convention).  Skipped automatically under
+               tracing (tracers carry no values); ``validate=False`` is
+               the escape hatch for pre-validated hot paths.
 
     Returns an :class:`HDResult`; unserved (variant, method, backend) cells
     raise the structured :class:`repro.hd.registry.UnsupportedCombination`.
@@ -85,6 +116,9 @@ def set_distance(
     registry.validate_axes(variant, method, backend)
     cfg = config if config is not None else HDConfig()
     valid_a, valid_b = _unpack_masks(masks)
+    if validate:
+        _reject_nonfinite("a", a, valid_a)
+        _reject_nonfinite("b", b, valid_b)
     n_a, d = a.shape
     n_b = b.shape[0]
 
@@ -158,10 +192,12 @@ class HDEngine:
         batch_axes: tuple[str, ...] = ("data",),
         prune_projs=None,
         measure: bool = False,
+        validate: bool = True,
     ) -> HDResult:
         return set_distance(
             a, b,
             variant=self.variant, method=self.method, backend=self.backend,
             masks=masks, config=self.config, key=key, mesh=mesh,
             batch_axes=batch_axes, prune_projs=prune_projs, measure=measure,
+            validate=validate,
         )

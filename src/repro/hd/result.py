@@ -30,6 +30,15 @@ class HDMeta:
     # Only populated by set_distance(measure=True) outside a trace; None
     # inside jit/vmap where wall time is meaningless.
     elapsed_s: float | None = None
+    # Reliability contract (docs/api.md): ``degraded=True`` marks a result
+    # whose certificate was weakened by a deadline or an absorbed fault —
+    # the interval is still certified to contain the truth, but the value
+    # is no longer the exact brute-force number.  ``stage_reached`` names
+    # the deepest cascade stage that contributed ("stage0"…"stage2b"), or
+    # "complete" for a fully drained query.  Pairwise dispatches never
+    # degrade today, so they carry the defaults.
+    degraded: bool = False
+    stage_reached: str = "complete"
 
 
 @functools.partial(
@@ -62,3 +71,14 @@ class HDResult:
     def certified(self) -> bool:
         """True when the result carries a two-sided certified interval."""
         return self.lower is not None and self.upper is not None
+
+    @property
+    def degraded(self) -> bool:
+        """True when a deadline/fault weakened the certificate (the
+        interval still contains the truth — see the reliability contract)."""
+        return self.meta.degraded
+
+    @property
+    def stage_reached(self) -> str:
+        """Deepest pipeline stage that contributed to this result."""
+        return self.meta.stage_reached

@@ -38,6 +38,9 @@ def search(
     masked_backend: str | None = None,
     config: HDConfig | None = None,
     measure: bool = False,
+    deadline_s: float | None = None,
+    on_fault: str = "degrade",
+    validate: bool = True,
 ):
     """Top-k nearest stored sets to ``query``; see repro.index.cascade.search.
 
@@ -50,6 +53,13 @@ def search(
     ``repro.core.masked.EXACT_MASKED_BACKENDS`` name; None resolves to the
     batched bucket kernel natively on TPU, its pure-JAX mirror elsewhere)
     — the top-k is identical under every registered name.
+
+    Reliability knobs (docs/api.md, "Reliability contract"):
+    ``deadline_s`` budgets the query's wall clock — on expiry the best
+    certified state reached is returned with ``degraded=True`` instead of
+    stalling the caller; ``on_fault="degrade"`` (default) absorbs
+    mid-cascade runtime faults the same way; ``validate`` rejects
+    non-finite query points before they can poison a certificate.
     """
     from repro.index import cascade
 
@@ -57,4 +67,5 @@ def search(
         query, store, k,
         variant=variant, method=method, backend=backend, stage2=stage2,
         masked_backend=masked_backend, config=config, measure=measure,
+        deadline_s=deadline_s, on_fault=on_fault, validate=validate,
     )

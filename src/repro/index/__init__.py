@@ -19,6 +19,7 @@ dispatch from the same place as pairwise ones::
     res = search(query, store, k=10)      # res.ids, res.values, res.stats
 """
 from repro.index.cascade import (
+    ON_FAULT_MODES,
     SEARCH_METHODS,
     SEARCH_VARIANTS,
     STAGE2_MODES,
@@ -36,6 +37,7 @@ from repro.index.store import (
     SetSummary,
     bucket_capacity,
     direction_bank,
+    latest_snapshot,
     summarize_set,
 )
 
@@ -45,12 +47,14 @@ __all__ = [
     "PackedBucket",
     "bucket_capacity",
     "direction_bank",
+    "latest_snapshot",
     "summarize_set",
     "search",
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
     "STAGE2_MODES",
+    "ON_FAULT_MODES",
     "interval_bounds",
     "bound_scale",
     "certified_margins",

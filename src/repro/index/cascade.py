@@ -92,12 +92,15 @@ from repro.hd import resolver
 from repro.hd.config import HDConfig
 from repro.hd.result import HDMeta
 from repro.index.store import SetStore, SetSummary, bucket_capacity
+from repro.reliability import faults as _faults
+from repro.reliability.errors import BackendUnavailable
 
 __all__ = [
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
     "STAGE2_MODES",
+    "ON_FAULT_MODES",
     "interval_bounds",
     "bound_scale",
     "certified_margins",
@@ -109,6 +112,50 @@ __all__ = [
 SEARCH_VARIANTS = ("hausdorff", "directed")
 SEARCH_METHODS = ("cascade", "exact")
 STAGE2_MODES = ("batched", "sequential")
+ON_FAULT_MODES = ("degrade", "raise")
+
+# Injection points swept by tests/test_fault_injection.py: one per cascade
+# stage (raise models a mid-stage failure, slow a straggler) plus the
+# per-call backend gate (backend_down models one masked backend dying —
+# the cascade must fall back to the next registered one).
+_POINT_STAGE0 = _faults.declare_point(
+    "cascade.stage0", "summary-bound stage — failure here precedes ANY "
+    "certified state, so it always surfaces as a typed error")
+_POINT_STAGE1 = _faults.declare_point(
+    "cascade.stage1", "masked-ProHD tightening — failure degrades to the "
+    "stage-0 (or partially tightened) certified intervals")
+_POINT_STAGE2A = _faults.declare_point(
+    "cascade.stage2a", "batched exact tightening — failure degrades to the "
+    "best certified intervals reached")
+_POINT_STAGE2B = _faults.declare_point(
+    "cascade.stage2b", "raw exact refinement — failure degrades; already-"
+    "refined candidates keep their exact values")
+_POINT_BACKEND = _faults.declare_point(
+    "cascade.backend", "masked-backend availability gate before every "
+    "bucket-granularity dispatch (match= the backend name)")
+
+# Exceptions the cascade may degrade on (on_fault="degrade"): the typed
+# reliability family (all RuntimeError subclasses) plus the raw XLA/device
+# failure classes run_with_recovery retries in training.  Programming
+# errors (ValueError/TypeError) always propagate.
+_DEGRADABLE = (RuntimeError, FloatingPointError)
+
+
+class _Budget:
+    """Monotonic wall-clock deadline; None = unbounded."""
+
+    def __init__(self, deadline_s: float | None):
+        self.t0 = time.monotonic()
+        self.deadline = None if deadline_s is None else self.t0 + float(deadline_s)
+
+    def expired(self) -> bool:
+        return self.deadline is not None and time.monotonic() >= self.deadline
+
+
+class _DeadlineHit(Exception):
+    """Internal unwind signal: deadline expired, assemble the degraded
+    result.  Deliberately NOT a RuntimeError so the fault-degrade handler
+    can never confuse it with a real failure."""
 
 # fp safety margins applied to every certified bound (see module docstring).
 _EPS32 = float(np.finfo(np.float32).eps)
@@ -168,19 +215,44 @@ def fp_value_margin(dim: int, scale, value):
 class SearchResult:
     """Top-k result of a corpus search — the corpus analogue of HDResult.
 
-    ids/values are ranked ascending by (value, id); every returned value is
-    EXACT (stage-2 refined), so ``lower == upper == values`` for the
-    cascade.  ``stats`` carries the cascade's work accounting.  ``meta``
-    reuses HDMeta with one documented exception to its pairwise contract:
-    the exact refines re-resolve per candidate set's shape, so there is no
-    single concrete dispatch — ``backend`` is recorded AS REQUESTED
-    (possibly "auto") and the per-refine block sizes as 0.
+    ids/values are ranked ascending by (value, id); in the normal
+    (non-degraded) case every returned value is EXACT (stage-2 refined),
+    so ``lower == upper == values``.  ``stats`` carries the cascade's work
+    accounting.  ``meta`` reuses HDMeta with one documented exception to
+    its pairwise contract: the exact refines re-resolve per candidate
+    set's shape, so there is no single concrete dispatch — ``backend`` is
+    recorded AS REQUESTED (possibly "auto") and the per-refine block sizes
+    as 0.
+
+    **Degraded results** (``degraded=True``; a deadline expired or a
+    mid-cascade fault was absorbed under ``on_fault="degrade"``): the
+    certificate weakens but never lies — every returned candidate carries
+    the certified interval ``[lower_i, upper_i]`` that provably contains
+    its true distance (the same bounds the cascade prunes with), ranked
+    ascending by (upper, id); ``values`` holds the exact distance where
+    stage 2 got that far and the certified upper bound otherwise.  The
+    top-k MEMBERSHIP may differ from brute force's — that is exactly what
+    the flag says — but a degraded result is never presented as an exact
+    one.  ``stage_reached`` names the deepest stage that contributed
+    tightening ("stage0" | "stage1" | "stage2a" | "stage2b"), or
+    "complete" for a fully drained (non-degraded) cascade.
     """
 
     ids: np.ndarray       # (k,) int32 set ids
-    values: np.ndarray    # (k,) fp32 exact distances
+    values: np.ndarray    # (k,) fp32 exact distances (degraded: best known)
     stats: dict[str, Any]
     meta: HDMeta
+    lower: np.ndarray = None    # (k,) fp64 certified lower bounds
+    upper: np.ndarray = None    # (k,) fp64 certified upper bounds
+    degraded: bool = False
+    stage_reached: str = "complete"
+
+    def __post_init__(self):
+        # default the certificate to the exact values (lower == upper)
+        if self.lower is None:
+            object.__setattr__(self, "lower", self.values.astype(np.float64))
+        if self.upper is None:
+            object.__setattr__(self, "upper", self.values.astype(np.float64))
 
 
 def interval_bounds(sa: SetSummary, sb: SetSummary, *, directed: bool = False):
@@ -346,6 +418,9 @@ def search(
     masked_backend: str | None = None,
     config: HDConfig | None = None,
     measure: bool = False,
+    deadline_s: float | None = None,
+    on_fault: str = "degrade",
+    validate: bool = True,
 ) -> SearchResult:
     """Top-k nearest stored sets to ``query`` under a set distance.
 
@@ -375,9 +450,28 @@ def search(
                Any registered name is valid; the returned top-k is
                identical under every one of them (conformance-gated).
     config   — HDConfig; ``alpha`` drives the stage-1 masked ProHD
+    deadline_s — wall-clock budget for THIS search.  None (default) is
+               unbounded.  On expiry the cascade stops escalating and
+               returns the best certified state reached as a DEGRADED
+               result (``degraded=True``; see :class:`SearchResult`) —
+               stage-0 intervals at worst, partially stage-2-refined at
+               best.  Stage 0 always runs (it is the cheapest certified
+               state and the floor of the degradation ladder).
+    on_fault — "degrade" (default): a runtime fault in stages 1+ (typed
+               reliability fault, XLA/device RuntimeError, FP error) is
+               absorbed and the best certified state is returned degraded,
+               with the fault recorded in ``stats['fault']``; "raise"
+               propagates it.  Stage-0 faults always raise — before stage
+               0 there is no certified state to degrade to.  Programming
+               errors (ValueError/TypeError) always propagate.
+    validate — reject non-finite query coordinates (NaN/Inf) with a
+               ValueError; they would silently poison every certified
+               bound.  ``validate=False`` is the pre-validated hot-path
+               escape hatch.
 
-    Returns a :class:`SearchResult`; the top-k ids and values are
-    identical to brute force by construction (see module docstring).
+    Returns a :class:`SearchResult`; unless ``degraded`` is set, the top-k
+    ids and values are identical to brute force by construction (see
+    module docstring).
     """
     if variant not in SEARCH_VARIANTS:
         raise ValueError(f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}")
@@ -385,6 +479,8 @@ def search(
         raise ValueError(f"unknown search method {method!r}; expected one of {SEARCH_METHODS}")
     if stage2 not in STAGE2_MODES:
         raise ValueError(f"unknown stage2 mode {stage2!r}; expected one of {STAGE2_MODES}")
+    if on_fault not in ON_FAULT_MODES:
+        raise ValueError(f"unknown on_fault mode {on_fault!r}; expected one of {ON_FAULT_MODES}")
     if k < 0:
         raise ValueError(f"k must be >= 0, got {k}")
     if masked_backend is not None and masked_backend not in masked.EXACT_MASKED_BACKENDS:
@@ -400,6 +496,12 @@ def search(
         raise ValueError(f"expected (n_q, {store.dim}) query, got shape {q.shape}")
     if q.shape[0] < 1:
         raise ValueError("query must contain at least one point (HD is undefined on empty sets)")
+    if validate and not bool(np.isfinite(np.asarray(q)).all()):
+        raise ValueError(
+            "query contains non-finite coordinates (NaN/Inf); certified "
+            "bounds are undefined over them — clean the query or pass "
+            "validate=False"
+        )
     if k == 0:
         # Well-defined degenerate request: nothing asked for, nothing done.
         meta = HDMeta(
@@ -420,6 +522,7 @@ def search(
         )
 
     t0 = time.perf_counter() if measure else 0.0
+    budget = _Budget(deadline_s)
     n = store.n_sets
     k_eff = min(k, n)
     directed = variant == "directed"
@@ -427,10 +530,47 @@ def search(
     mb = masked_backend or resolver.resolve_masked_backend(
         int(q.shape[0]), 0, store.dim, device_kind=device_kind
     )
+    # Masked-backend fallback ladder: the requested/resolved backend first,
+    # then every other registered one (interpret-only batched_pallas is
+    # excluded off-TPU, matching the resolver).  A BackendUnavailable from
+    # any bucket-granularity dispatch permanently advances the ladder —
+    # every registered backend is conformance-certified, so the top-k is
+    # identical whichever one ends up serving.
+    available = [mb] + [
+        b for b in sorted(masked.EXACT_MASKED_BACKENDS)
+        if b != mb and (b != "batched_pallas" or device_kind == "tpu")
+    ]
+    backend_fallbacks: list[str] = []
+
+    def _with_backend(call):
+        """call(backend) under the fallback ladder; returns its result."""
+        while True:
+            be = available[0]
+            try:
+                _faults.fire(_POINT_BACKEND, backend=be)
+                return call(be)
+            except BackendUnavailable:
+                backend_fallbacks.append(be)
+                available.pop(0)
+                if not available:
+                    raise
+
     values = np.full((n,), np.inf, np.float32)
     resolved = np.zeros((n,), bool)
+    # Certified per-candidate interval state — the degradation ladder's
+    # collateral.  Vacuous-but-sound [0, +inf) until a stage tightens it,
+    # so a degraded return is certified at EVERY point of the cascade.
+    lb = np.zeros((n,), np.float64)
+    ub = np.full((n,), np.inf, np.float64)
     exact_refines = 0
+    degraded = False
+    stage_reached = "stage0"
+    fault: BaseException | None = None
     stats: dict[str, Any] = {"candidates_scanned": n, "k": k_eff}
+
+    def checkpoint() -> None:
+        if budget.expired():
+            raise _DeadlineHit()
 
     def refine(sid: int) -> None:
         nonlocal exact_refines
@@ -439,12 +579,29 @@ def search(
         exact_refines += 1
 
     if method == "exact":
-        for sid in range(n):
-            refine(sid)
-        lb = ub = values.astype(np.float64)
         stats.update(stage0_pruned=0, stage1_pruned=0)
+        try:
+            _faults.fire(_POINT_STAGE2B)
+            for sid in range(n):
+                checkpoint()
+                refine(sid)
+                lb[sid] = ub[sid] = float(values[sid])
+            stage_reached = "stage2b"
+        except _DeadlineHit:
+            degraded = True
+            stage_reached = "stage2b" if exact_refines else "stage0"
+        except _DEGRADABLE as e:
+            if on_fault == "raise":
+                raise
+            degraded = True
+            fault = e
+            stage_reached = "stage2b" if exact_refines else "stage0"
     else:
         # -- stage 0: summary bounds over the whole corpus, one shot ------
+        # Always runs, deadline or not: it is the cheapest certified state
+        # and the floor of the degradation ladder.  A failure HERE has no
+        # certified state to fall back to, so it propagates (typed).
+        _faults.fire(_POINT_STAGE0)
         qsum = store.summarize(q)
         lb_j, ub_j = _interval_bounds_jit(qsum, store.summaries(), directed=directed)
         scale = np.asarray(_bound_scale_jit(qsum, store.summaries()), np.float64)
@@ -455,46 +612,10 @@ def search(
         tau = _kth_smallest(ub, k_eff)
         alive = lb <= tau
         stats["stage0_pruned"] = int(n - alive.sum())
-
-        # -- stage 1: vmapped bucketed masked ProHD on the survivors ------
         stats["stage1_pruned"] = 0
-        if int(alive.sum()) > k_eff:
-            m = projections.default_num_directions(store.dim)
-            for bucket in store.packed_buckets().values():
-                rows = np.nonzero(alive[bucket.set_ids])[0]
-                if rows.size == 0:
-                    continue
-                take = _pow2_take(rows)
-                cert = _stage1_batch(
-                    q,
-                    jnp.take(bucket.points, take, axis=0),
-                    jnp.take(bucket.valid, take, axis=0),
-                    alpha=cfg.alpha, m=m, directed=directed, backend=mb,
-                )
-                lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
-                sids = bucket.set_ids[rows]
-                lb1, ub1 = certified_margins(
-                    lo1.astype(np.float64)[: rows.size],
-                    np.asarray(cert.upper, np.float64)[: rows.size],
-                    scale[sids],
-                    store.dim,
-                )
-                lb[sids] = np.maximum(lb[sids], lb1)
-                ub[sids] = np.minimum(ub[sids], ub1)
-            tau = _kth_smallest(ub, k_eff)
-            still = alive & (lb <= tau)
-            stats["stage1_pruned"] = int(alive.sum() - still.sum())
-            alive = still
 
-        # -- stage 2: exact refinement of the frontier --------------------
-        # Both modes drain the frontier under the same certified prune
-        # rule; they differ only in dispatch granularity.  Work accounting:
-        # ``stage2_calls`` counts jitted refinement dispatches and
-        # ``stage2_shapes`` the distinct jit-cache keys they exercise —
-        # sequential pays one call per frontier candidate and one cache
-        # entry per distinct RAW set shape; batched pays one masked pass
-        # per surviving bucket (cache key: capacity × padded batch ×
-        # family) plus one raw call per boundary candidate (≈ k).
+        # Work accounting (see stage-2 comment below); initialized before
+        # the degradable region so a degraded return still reports it.
         stage2_shapes: set[tuple] = set()
         stage2_calls = 0
         stats["stage2_batched_candidates"] = 0   # frontier measured by 2a
@@ -503,114 +624,210 @@ def search(
             """Raw front-door resolution, ascending lower bound, until the
             frontier is empty — the WHOLE of sequential mode, and stage 2b
             of batched mode (one shared loop so the modes cannot diverge)."""
-            nonlocal alive, stage2_calls
+            nonlocal alive, stage2_calls, stage_reached
+            _faults.fire(_POINT_STAGE2B)
             while True:
                 tau = _kth_smallest(ub, k_eff)
                 alive &= lb <= tau
                 frontier = np.nonzero(alive & ~resolved)[0]
                 if frontier.size == 0:
                     return
+                checkpoint()
                 sid = int(frontier[np.lexsort((frontier, lb[frontier]))[0]])
                 refine(sid)
                 stage2_shapes.add((store.get(sid).shape[0],))
                 stage2_calls += 1
                 lb[sid] = ub[sid] = float(values[sid])
+                stage_reached = "stage2b"
 
-        if stage2 == "sequential":
-            drain_raw()
-        else:
-            # -- 2a: one vmapped masked EXACT pass per surviving bucket.
-            # The padded value is certified to land within fp_margin of the
-            # raw front-door value (both err ≤ sqrt((D+2)·eps)·scale from
-            # the true distance; GEMM bits legitimately differ across
-            # padded shapes — the conformance harness pins the margin), so
-            # every frontier interval collapses to ±fp_margin without a
-            # single per-candidate dispatch.  Final values still come from
-            # stage 2b's raw refines, so batching cannot perturb a bit of
-            # the output.
-            slot = store.slot_index()
-            buckets = store.packed_buckets()
-            n_q = int(q.shape[0])
-            tau = _kth_smallest(ub, k_eff)
-            alive &= lb <= tau
-            frontier = np.nonzero(alive & ~resolved)[0]
-            groups: dict[int, list[int]] = {}
-            for sid in frontier:
-                groups.setdefault(slot[int(sid)][0], []).append(int(sid))
-            # Ascending best-lower-bound bucket order, re-deriving τ between
-            # buckets: one bucket's tight intervals prune the next bucket's
-            # stragglers, preserving the sequential loop's adaptivity at
-            # batch granularity.
-            for cap in sorted(groups, key=lambda c: min(lb[s] for s in groups[c])):
-                tau = _kth_smallest(ub, k_eff)
-                sids = [s for s in groups[cap] if lb[s] <= tau]
-                if not sids:
-                    continue
-                stats["stage2_batched_candidates"] += len(sids)
-                bucket = buckets[cap]
-                rows = np.asarray([slot[s][1] for s in sids])
-                take = _pow2_take(rows)
-                batch = int(take.shape[0])
-                block_a, block_b = resolver.resolve_block_sizes(
-                    n_q, cap, store.dim, device_kind=device_kind,
-                    backend="fused_pallas" if mb == "batched_pallas" else "tiled",
-                )
-                # Per-set prune gate: every real lane carries its certified
-                # stage-0/1 lower bound against a cutoff safely ABOVE τ
-                # (1e-6 relative headroom dwarfs the float32 cast error, so
-                # a lane with lb ≤ τ in float64 can never be skipped by the
-                # cast — a skip is always certified lb > τ); the pow2
-                # batch-padding duplicate lanes ride in with lb = +inf and
-                # are gated unconditionally — which saves their GEMMs
-                # in-kernel on the Pallas route (the pure-JAX routes still
-                # compute them and select the sentinel).
-                gate_lb = np.concatenate(
-                    [lb[sids], np.full((batch - rows.size,), np.inf)]
-                ).astype(np.float32)
-                gate_cut = np.full(
-                    (batch,),
-                    tau * (1.0 + 1e-6) if np.isfinite(tau) else np.inf,
-                    np.float32,
-                )
-                vals = np.asarray(
-                    _stage2_batch(
+        try:
+            # -- stage 1: vmapped bucketed masked ProHD on the survivors --
+            if int(alive.sum()) > k_eff:
+                checkpoint()
+                _faults.fire(_POINT_STAGE1)
+                m = projections.default_num_directions(store.dim)
+                for bucket in store.packed_buckets().values():
+                    rows = np.nonzero(alive[bucket.set_ids])[0]
+                    if rows.size == 0:
+                        continue
+                    checkpoint()
+                    take = _pow2_take(rows)
+                    cert = _with_backend(lambda be: _stage1_batch(
                         q,
                         jnp.take(bucket.points, take, axis=0),
                         jnp.take(bucket.valid, take, axis=0),
-                        jnp.asarray(gate_lb),
-                        jnp.asarray(gate_cut),
-                        directed=directed, backend=mb,
-                        block_a=block_a, block_b=block_b,
-                    ),
-                    np.float64,
-                )[: rows.size]
-                pad = fp_value_margin(store.dim, scale[sids], vals)
-                lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
-                ub[sids] = np.minimum(ub[sids], vals + pad)
-                stage2_shapes.add((cap, batch, mb))
-                stage2_calls += 1
-            # -- 2b: raw exact resolution of whatever still straddles the
-            # top-k boundary — after 2a that is ≈ k candidates (+ exact
-            # ties), each refined on its RAW points so the returned value
-            # is bit-for-bit the brute-force number.
-            drain_raw()
+                        alpha=cfg.alpha, m=m, directed=directed, backend=be,
+                    ))
+                    lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
+                    sids = bucket.set_ids[rows]
+                    lb1, ub1 = certified_margins(
+                        lo1.astype(np.float64)[: rows.size],
+                        np.asarray(cert.upper, np.float64)[: rows.size],
+                        scale[sids],
+                        store.dim,
+                    )
+                    lb[sids] = np.maximum(lb[sids], lb1)
+                    ub[sids] = np.minimum(ub[sids], ub1)
+                    stage_reached = "stage1"
+                tau = _kth_smallest(ub, k_eff)
+                still = alive & (lb <= tau)
+                stats["stage1_pruned"] = int(alive.sum() - still.sum())
+                alive = still
+
+            # -- stage 2: exact refinement of the frontier ----------------
+            # Both modes drain the frontier under the same certified prune
+            # rule; they differ only in dispatch granularity.  Work
+            # accounting: ``stage2_calls`` counts jitted refinement
+            # dispatches and ``stage2_shapes`` the distinct jit-cache keys
+            # they exercise — sequential pays one call per frontier
+            # candidate and one cache entry per distinct RAW set shape;
+            # batched pays one masked pass per surviving bucket (cache
+            # key: capacity × padded batch × family) plus one raw call per
+            # boundary candidate (≈ k).
+            if stage2 == "sequential":
+                drain_raw()
+            else:
+                # -- 2a: one vmapped masked EXACT pass per surviving
+                # bucket.  The padded value is certified to land within
+                # fp_margin of the raw front-door value (both err
+                # ≤ sqrt((D+2)·eps)·scale from the true distance; GEMM
+                # bits legitimately differ across padded shapes — the
+                # conformance harness pins the margin), so every frontier
+                # interval collapses to ±fp_margin without a single
+                # per-candidate dispatch.  Final values still come from
+                # stage 2b's raw refines, so batching cannot perturb a bit
+                # of the output.
+                checkpoint()
+                _faults.fire(_POINT_STAGE2A)
+                slot = store.slot_index()
+                buckets = store.packed_buckets()
+                n_q = int(q.shape[0])
+                tau = _kth_smallest(ub, k_eff)
+                alive &= lb <= tau
+                frontier = np.nonzero(alive & ~resolved)[0]
+                groups: dict[int, list[int]] = {}
+                for sid in frontier:
+                    groups.setdefault(slot[int(sid)][0], []).append(int(sid))
+                # Ascending best-lower-bound bucket order, re-deriving τ
+                # between buckets: one bucket's tight intervals prune the
+                # next bucket's stragglers, preserving the sequential
+                # loop's adaptivity at batch granularity.
+                for cap in sorted(groups, key=lambda c: min(lb[s] for s in groups[c])):
+                    tau = _kth_smallest(ub, k_eff)
+                    sids = [s for s in groups[cap] if lb[s] <= tau]
+                    if not sids:
+                        continue
+                    checkpoint()
+                    stats["stage2_batched_candidates"] += len(sids)
+                    bucket = buckets[cap]
+                    rows = np.asarray([slot[s][1] for s in sids])
+                    take = _pow2_take(rows)
+                    batch = int(take.shape[0])
+                    # Per-set prune gate: every real lane carries its
+                    # certified stage-0/1 lower bound against a cutoff
+                    # safely ABOVE τ (1e-6 relative headroom dwarfs the
+                    # float32 cast error, so a lane with lb ≤ τ in float64
+                    # can never be skipped by the cast — a skip is always
+                    # certified lb > τ); the pow2 batch-padding duplicate
+                    # lanes ride in with lb = +inf and are gated
+                    # unconditionally — which saves their GEMMs in-kernel
+                    # on the Pallas route (the pure-JAX routes still
+                    # compute them and select the sentinel).
+                    gate_lb = np.concatenate(
+                        [lb[sids], np.full((batch - rows.size,), np.inf)]
+                    ).astype(np.float32)
+                    gate_cut = np.full(
+                        (batch,),
+                        tau * (1.0 + 1e-6) if np.isfinite(tau) else np.inf,
+                        np.float32,
+                    )
+
+                    def _call_2a(be):
+                        block_a, block_b = resolver.resolve_block_sizes(
+                            n_q, cap, store.dim, device_kind=device_kind,
+                            backend="fused_pallas" if be == "batched_pallas" else "tiled",
+                        )
+                        return be, block_a, block_b, _stage2_batch(
+                            q,
+                            jnp.take(bucket.points, take, axis=0),
+                            jnp.take(bucket.valid, take, axis=0),
+                            jnp.asarray(gate_lb),
+                            jnp.asarray(gate_cut),
+                            directed=directed, backend=be,
+                            block_a=block_a, block_b=block_b,
+                        )
+
+                    used_be, _, _, raw_vals = _with_backend(_call_2a)
+                    vals = np.asarray(raw_vals, np.float64)[: rows.size]
+                    pad = fp_value_margin(store.dim, scale[sids], vals)
+                    lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
+                    ub[sids] = np.minimum(ub[sids], vals + pad)
+                    stage2_shapes.add((cap, batch, used_be))
+                    stage2_calls += 1
+                    stage_reached = "stage2a"
+                # -- 2b: raw exact resolution of whatever still straddles
+                # the top-k boundary — after 2a that is ≈ k candidates
+                # (+ exact ties), each refined on its RAW points so the
+                # returned value is bit-for-bit the brute-force number.
+                drain_raw()
+        except _DeadlineHit:
+            degraded = True
+        except _DEGRADABLE as e:
+            # an exhausted fallback ladder is not degradable — there is no
+            # backend left to serve ANY request; the typed error propagates
+            if isinstance(e, BackendUnavailable) and not available:
+                raise
+            if on_fault == "raise":
+                raise
+            degraded = True
+            fault = e
         stats.update(
             stage2_mode=stage2,
             stage2_calls=stage2_calls,
             stage2_distinct_shapes=len(stage2_shapes),
-            masked_backend=mb,
+            masked_backend=available[0] if available else None,
         )
 
-    top = _rank(values, np.nonzero(resolved)[0], k_eff)
+    if backend_fallbacks:
+        stats["backend_fallbacks"] = list(backend_fallbacks)
     stats.update(
         exact_refines=exact_refines,
         prune_fraction=1.0 - exact_refines / n,
     )
+
+    if not degraded:
+        top = _rank(values, np.nonzero(resolved)[0], k_eff)
+        out_values = values[top]
+        out_lower = out_upper = out_values.astype(np.float64)
+        stage_final = "complete"
+    else:
+        # Best certified state reached: rank ALL candidates ascending by
+        # certified upper bound (tie: id) — refined candidates carry their
+        # exact value as a zero-width interval, the rest their tightest
+        # stage bounds.  Every returned interval provably contains its true
+        # distance; the conservative ``values`` entry for an unrefined
+        # candidate is its certified upper bound.
+        order = np.lexsort((np.arange(n), ub))
+        top = order[:k_eff]
+        out_values = np.where(
+            resolved[top], values[top], ub[top].astype(np.float32)
+        ).astype(np.float32)
+        out_lower = lb[top].copy()
+        out_upper = ub[top].copy()
+        stage_final = stage_reached
+        stats["n_resolved"] = int(resolved.sum())
+        stats["deadline_s"] = deadline_s
+        if fault is not None:
+            stats["fault"] = f"{type(fault).__name__}: {fault}"
+
     elapsed = time.perf_counter() - t0 if measure else None
     meta = HDMeta(
         variant=variant, method=method, backend=backend,
         block_a=0, block_b=0, elapsed_s=elapsed,
+        degraded=degraded, stage_reached=stage_final,
     )
     return SearchResult(
-        ids=top.astype(np.int32), values=values[top], stats=stats, meta=meta
+        ids=top.astype(np.int32), values=out_values, stats=stats, meta=meta,
+        lower=out_lower, upper=out_upper,
+        degraded=degraded, stage_reached=stage_final,
     )

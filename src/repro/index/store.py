@@ -28,6 +28,11 @@ intervals on anisotropic data).
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
+import re
+from pathlib import Path
 from typing import Iterable, NamedTuple, Sequence
 
 import jax
@@ -35,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import projections
+from repro.reliability import faults as _faults
+from repro.reliability.errors import StoreCorruption
 
 __all__ = [
     "SetSummary",
@@ -44,7 +51,15 @@ __all__ = [
     "summarize_set",
     "bucket_capacity",
     "pack_sets",
+    "latest_snapshot",
 ]
+
+SNAPSHOT_FORMAT = 1
+
+_POINT_RESTORE = _faults.declare_point(
+    "store.restore",
+    "start of SetStore.restore — a raise here models a storage outage",
+)
 
 
 class SetSummary(NamedTuple):
@@ -208,6 +223,8 @@ class SetStore:
         self._bucket_watermark: dict[int, int] = {}
         self._slot_cache: dict[int, tuple[int, int]] = {}
         self._slot_cache_size = 0
+        # populated by SetStore.restore(); None for a live-built store
+        self.restore_report: dict | None = None
 
     # -- introspection ------------------------------------------------------
 
@@ -237,13 +254,21 @@ class SetStore:
 
     # -- ingestion ----------------------------------------------------------
 
-    def add(self, points) -> int:
+    def add(self, points, *, validate: bool = True) -> int:
         """Store one (n, D) set; returns its corpus-wide id."""
-        return self.add_many([points])[0]
+        return self.add_many([points], validate=validate)[0]
 
-    def add_many(self, sets: Iterable) -> list[int]:
+    def add_many(self, sets: Iterable, *, validate: bool = True) -> list[int]:
         """Bulk-load many sets; summaries are computed per capacity group in
-        one vmapped call.  Returns the new ids in input order."""
+        one vmapped call.  Returns the new ids in input order.
+
+        ``validate=True`` (default) rejects non-finite coordinates with a
+        ValueError BEFORE anything is stored: a NaN/Inf point would flow
+        straight into the kernels and silently poison every "certified"
+        interval it touches (only masked-OUT garbage is handled by the
+        poisoned-norm convention).  ``validate=False`` is the escape hatch
+        for bulk loads of pre-validated data.
+        """
         arrs: list[np.ndarray] = []
         for p in sets:
             p = np.asarray(p, np.float32)
@@ -253,6 +278,12 @@ class SetStore:
                 )
             if p.shape[0] < 1:
                 raise ValueError("cannot store an empty set (HD is undefined)")
+            if validate and not np.isfinite(p).all():
+                raise ValueError(
+                    f"set {len(arrs)} of this add contains non-finite "
+                    "coordinates (NaN/Inf); certified intervals are undefined "
+                    "over them — clean the data or pass validate=False"
+                )
             arrs.append(p)
         if not arrs:
             return []
@@ -364,3 +395,229 @@ class SetStore:
         v = jnp.ones((p.shape[0],), bool) if valid is None else jnp.asarray(valid)
         summary, _ = summarize_set(p, v, self._directions)
         return summary
+
+    # -- durability ----------------------------------------------------------
+    #
+    # On-disk snapshot format (see docs/api.md "Reliability contract"):
+    #
+    #     <root>/store_<gen>/              ← atomic tmp+rename (checkpoint.py)
+    #         manifest.json                ← dims, membership, per-file sha256
+    #         directions.npy               ← the (D, m) direction bank
+    #         summaries.npz                ← stacked SetSummary, set-id order
+    #         bucket_<cap>.npz             ← concatenated raw points + sizes
+    #                                        + set ids for one capacity class
+    #     <root>/LATEST                    ← "gen", written last
+    #
+    # Every payload file's sha256 is recorded in the manifest; restore()
+    # verifies before deserializing, so a flipped byte anywhere is a typed
+    # StoreCorruption naming the damaged bucket — never a silently wrong
+    # corpus.  Raw sets round-trip byte-identical (lossless npz of the
+    # float32 arrays) and summaries are restored bit-for-bit, so a restored
+    # store's cascade reproduces the original's top-k exactly (gated).
+
+    def save(self, root: str | os.PathLike) -> Path:
+        """Write a durable snapshot under ``root``; returns its directory.
+
+        Atomic via the shared checkpoint machinery
+        (:func:`repro.train.checkpoint.atomic_snapshot_dir`): a crash
+        mid-save leaves only an ignorable tmp dir; the generation counter
+        (``store_<gen>``) and ``LATEST`` pointer follow the train
+        checkpoints' crash contract exactly.
+        """
+        from repro.train import checkpoint as _ck
+
+        if self.n_sets == 0:
+            raise ValueError("refusing to snapshot an empty store")
+        root = Path(root)
+        latest = latest_snapshot(root)
+        gen = 0 if latest is None else latest + 1
+        files: dict[str, str] = {}
+        buckets: dict[str, dict] = {}
+        with _ck.atomic_snapshot_dir(root, f"store_{gen}") as tmp:
+            np.save(tmp / "directions.npy", np.asarray(self._directions))
+            files["directions.npy"] = _sha256(tmp / "directions.npy")
+            sums = {
+                f: np.stack(self._sums[f]) for f in SetSummary._fields
+            }
+            np.savez(tmp / "summaries.npz", **sums)
+            files["summaries.npz"] = _sha256(tmp / "summaries.npz")
+            for cap in sorted(self._members):
+                sids = self._members[cap]
+                name = f"bucket_{cap}.npz"
+                np.savez(
+                    tmp / name,
+                    points=np.concatenate([self._raw[s] for s in sids], axis=0),
+                    sizes=np.asarray([self._raw[s].shape[0] for s in sids], np.int64),
+                    set_ids=np.asarray(sids, np.int64),
+                )
+                files[name] = _sha256(tmp / name)
+                buckets[str(cap)] = {"file": name, "n_sets": len(sids)}
+            manifest = {
+                "format": SNAPSHOT_FORMAT,
+                "gen": gen,
+                "dim": self.dim,
+                "min_bucket": self.min_bucket,
+                "n_sets": self.n_sets,
+                "num_directions": self.num_directions,
+                "files": files,
+                "buckets": buckets,
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        _ck.write_latest(root, gen)
+        return root / f"store_{gen}"
+
+    @classmethod
+    def restore(
+        cls,
+        root: str | os.PathLike,
+        *,
+        gen: int | None = None,
+        quarantine: bool = False,
+    ) -> "SetStore":
+        """Rebuild a store from its newest (or ``gen``-th) snapshot.
+
+        Every payload is checksum-verified BEFORE use.  A corrupt bucket
+        raises :class:`repro.reliability.StoreCorruption` naming the
+        bucket — unless ``quarantine=True``, which drops the damaged
+        bucket's sets, REINDEXES the survivors compactly (insertion
+        order preserved) and recomputes their summaries from raw points;
+        the drop is recorded in ``store.restore_report``.  Corruption of
+        the direction bank or the manifest always raises: they are
+        store-wide, nothing can be quarantined around them.
+
+        Without quarantine, the restored store reproduces the original's
+        search results bit for bit (raw bytes and summaries both
+        round-trip losslessly; gated in the reliability suite and
+        ``scripts/check.sh``).
+        """
+        _faults.fire(_POINT_RESTORE)
+        root = Path(root)
+        if gen is None:
+            gen = latest_snapshot(root)
+            if gen is None:
+                raise FileNotFoundError(f"no store snapshot under {root}")
+        snap = root / f"store_{gen}"
+        try:
+            manifest = json.loads((snap / "manifest.json").read_text())
+        except (OSError, ValueError) as e:
+            raise StoreCorruption(
+                f"unreadable snapshot manifest {snap / 'manifest.json'}: {e}",
+                path=str(snap / "manifest.json"),
+            ) from e
+        if manifest.get("format") != SNAPSHOT_FORMAT:
+            raise StoreCorruption(
+                f"snapshot format {manifest.get('format')!r} != {SNAPSHOT_FORMAT}",
+                path=str(snap),
+            )
+        files: dict[str, str] = manifest["files"]
+
+        def _verify(name: str, *, bucket: int | None) -> Path:
+            path = snap / name
+            want = files.get(name)
+            got = _sha256(path) if path.exists() else None
+            if want is None or got != want:
+                raise StoreCorruption(
+                    f"snapshot payload {name!r} failed its content checksum "
+                    f"(bucket={bucket}); refusing to serve corrupt data",
+                    bucket=bucket,
+                    path=str(path),
+                )
+            return path
+
+        directions = np.load(_verify("directions.npy", bucket=None))
+        dropped: list[int] = []
+        raw_by_id: dict[int, np.ndarray] = {}
+        for cap_s, entry in sorted(manifest["buckets"].items(), key=lambda kv: int(kv[0])):
+            cap = int(cap_s)
+            try:
+                path = _verify(entry["file"], bucket=cap)
+            except StoreCorruption:
+                if not quarantine:
+                    raise
+                dropped.append(cap)
+                continue
+            blob = np.load(path)
+            sizes = blob["sizes"]
+            offsets = np.concatenate([[0], np.cumsum(sizes)])
+            pts = blob["points"]
+            for row, sid in enumerate(blob["set_ids"]):
+                raw_by_id[int(sid)] = np.asarray(
+                    pts[offsets[row] : offsets[row + 1]], np.float32
+                )
+
+        kept_ids = sorted(raw_by_id)
+        if not dropped and kept_ids != list(range(manifest["n_sets"])):
+            raise StoreCorruption(
+                f"snapshot set ids are not dense 0..{manifest['n_sets'] - 1}",
+                path=str(snap),
+            )
+
+        store = cls(
+            dim=int(manifest["dim"]),
+            directions=jnp.asarray(directions),
+            min_bucket=int(manifest["min_bucket"]),
+        )
+        if dropped:
+            # quarantine path: survivors reindexed compactly, summaries
+            # recomputed from raw points (the stored summary stack indexes
+            # the ORIGINAL ids and can no longer be sliced trustworthily
+            # next to a corrupt sibling payload).
+            store.add_many([raw_by_id[s] for s in kept_ids], validate=False)
+        else:
+            sums = np.load(_verify("summaries.npz", bucket=None))
+            store._raw = [raw_by_id[s] for s in kept_ids]
+            for cap_s, entry in manifest["buckets"].items():
+                blob = np.load(snap / entry["file"])
+                store._members[int(cap_s)] = [int(s) for s in blob["set_ids"]]
+            for f in SetSummary._fields:
+                stack = sums[f]
+                if stack.shape[0] != len(kept_ids):
+                    raise StoreCorruption(
+                        f"summary stack {f!r} covers {stack.shape[0]} sets, "
+                        f"expected {len(kept_ids)}",
+                        path=str(snap / "summaries.npz"),
+                    )
+                store._sums[f] = [stack[i] for i in range(stack.shape[0])]
+        store.restore_report = {
+            "snapshot": str(snap),
+            "gen": gen,
+            "dropped_buckets": dropped,
+            "dropped_sets": int(manifest["n_sets"]) - len(kept_ids),
+            "kept_original_ids": kept_ids if dropped else None,
+        }
+        return store
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def latest_snapshot(root: str | os.PathLike) -> int | None:
+    """Newest complete store snapshot generation under ``root``, or None.
+
+    Same crash contract as ``repro.train.checkpoint.latest_step``: the
+    ``LATEST`` pointer is a hint, verified against the named snapshot's
+    manifest; stale or garbage pointers fall back to scanning for the
+    newest complete ``store_<gen>`` directory (tmp dirs never match).
+    """
+    from repro.train import checkpoint as _ck
+
+    root = Path(root)
+    token = _ck.read_latest(root)
+    if token is not None:
+        try:
+            gen = int(token)
+            if (root / f"store_{gen}" / "manifest.json").exists():
+                return gen
+        except ValueError:
+            pass
+    gens = []
+    for d in root.glob("store_*"):
+        m = re.fullmatch(r"store_(\d+)", d.name)
+        if m and (d / "manifest.json").exists():
+            gens.append(int(m.group(1)))
+    return max(gens) if gens else None

@@ -1,0 +1,53 @@
+"""``repro.reliability`` — typed faults, deterministic injection, and the
+serving stack's degradation contract.
+
+Three exports families:
+
+- **Typed errors** (:mod:`repro.reliability.errors`): the closed vocabulary
+  of failures the stack may surface — ``TransientFault`` (retryable),
+  ``BackendUnavailable`` (masked-backend fallback), ``StoreCorruption``
+  (snapshot checksum), ``Overloaded`` (admission backpressure).
+- **Fault injection** (:mod:`repro.reliability.faults`): seedable,
+  deterministic injection points declared by the instrumented modules and
+  swept by ``tests/test_fault_injection.py`` to prove the core invariant:
+  under every fault the service returns a certified (possibly degraded)
+  interval containing the truth, or a typed error — never a silently wrong
+  top-k.
+- **Snapshot tooling**: :func:`corrupt_snapshot` for crash/corruption
+  drills against ``SetStore.save`` directories.
+
+See docs/api.md, "Reliability contract".
+"""
+from repro.reliability.errors import (
+    BackendUnavailable,
+    InjectedFault,
+    Overloaded,
+    ReliabilityError,
+    StoreCorruption,
+    TransientFault,
+)
+from repro.reliability.faults import (
+    Fault,
+    active_faults,
+    corrupt_snapshot,
+    declare_point,
+    fire,
+    inject,
+    injection_points,
+)
+
+__all__ = [
+    "ReliabilityError",
+    "TransientFault",
+    "InjectedFault",
+    "BackendUnavailable",
+    "StoreCorruption",
+    "Overloaded",
+    "Fault",
+    "declare_point",
+    "injection_points",
+    "inject",
+    "fire",
+    "active_faults",
+    "corrupt_snapshot",
+]

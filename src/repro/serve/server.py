@@ -17,6 +17,7 @@ Two request types:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Sequence
 
@@ -26,8 +27,17 @@ import numpy as np
 
 from repro.core import masked, projections
 from repro.index.store import bucket_capacity, pack_sets
+from repro.reliability import faults as _faults
+from repro.reliability.errors import Overloaded, ReliabilityError, TransientFault
+from repro.train.fault_tolerance import Heartbeat, run_with_recovery
 
 __all__ = ["ServeConfig", "ProHDService"]
+
+_POINT_FLUSH = _faults.declare_point(
+    "serve.flush",
+    "per-search execution inside flush() — a transient raise here is "
+    "retried with backoff (run_with_recovery), then surfaced typed",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +47,22 @@ class ServeConfig:
     max_batch: int = 8
     # store bucketing for corpus-search requests (SetStore min_bucket)
     min_store_bucket: int = 8
+    # -- reliability knobs (docs/api.md "Reliability contract") ------------
+    # bounded admission: submit()/submit_search() raise the typed
+    # Overloaded once this many requests are pending — backpressure, never
+    # a silent drop
+    max_queue: int = 1024
+    # wall-clock budget per search request (None = unbounded); individual
+    # submit_search(deadline_s=...) overrides this default
+    default_deadline_s: float | None = None
+    # transient-fault retry: up to max_retries re-attempts per search with
+    # exponential backoff starting at retry_backoff_s
+    max_retries: int = 2
+    retry_backoff_s: float = 0.02
+    # hard cap on live compiled pairwise shape classes: the LRU-bounded jit
+    # cache makes a crafted tiny-then-huge request sequence cost
+    # recompilation at worst, never unbounded memory
+    max_shape_classes: int = 32
 
 
 def _bucket(n: int, buckets: Sequence[int]) -> int:
@@ -71,16 +97,44 @@ class ProHDService:
         self.cfg = cfg
         self.store = store  # repro.index.SetStore; lazily created by add_set
         self._pending: list[tuple[int, jnp.ndarray, jnp.ndarray]] = []
-        self._pending_searches: list[tuple[int, jnp.ndarray, int, str]] = []
+        self._pending_searches: list[
+            tuple[int, jnp.ndarray, int, str, float | None]
+        ] = []
         self._next_rid = 0
-        self._compiled: dict[tuple[int, int, int, int], any] = {}
+        # LRU over compiled pairwise shape classes (move-to-end on hit,
+        # evict-oldest past cfg.max_shape_classes)
+        self._compiled: collections.OrderedDict[tuple[int, int, int, int], any] = (
+            collections.OrderedDict()
+        )
+        # liveness marker: bumped once per completed request in flush();
+        # an external HeartbeatMonitor can watch it for hangs
+        self.heartbeat = Heartbeat()
+
+    def _admit(self) -> None:
+        """Bounded admission: past max_queue pending requests, refuse with
+        the typed Overloaded — backpressure the submitter sees, never a
+        silent drop."""
+        pending = len(self._pending) + len(self._pending_searches)
+        if pending >= self.cfg.max_queue:
+            raise Overloaded(pending, self.cfg.max_queue)
 
     # -- pairwise requests ---------------------------------------------------
 
-    def submit(self, a, b) -> int:
+    def submit(self, a, b, *, validate: bool = True) -> int:
+        self._admit()
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if validate:
+            for name, cloud in (("a", a), ("b", b)):
+                if not bool(np.isfinite(np.asarray(cloud)).all()):
+                    raise ValueError(
+                        f"cloud {name!r} has non-finite coordinates (NaN/Inf); "
+                        "certified intervals are undefined over them — clean "
+                        "the input or pass validate=False"
+                    )
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append((rid, jnp.asarray(a), jnp.asarray(b)))
+        self._pending.append((rid, a, b))
         return rid
 
     # -- corpus requests -----------------------------------------------------
@@ -98,15 +152,29 @@ class ProHDService:
             )
         return self.store.add(points)
 
-    def submit_search(self, query, k: int = 1, *, variant: str = "hausdorff") -> int:
+    def submit_search(
+        self,
+        query,
+        k: int = 1,
+        *,
+        variant: str = "hausdorff",
+        deadline_s: float | None = None,
+        validate: bool = True,
+    ) -> int:
         """Queue a top-k corpus retrieval against the shared SetStore.
 
         Validates the request HERE, not at flush(): a malformed queued
         search must bounce to its submitter, never abort a flush that is
         carrying everyone else's requests.
+
+        ``deadline_s`` budgets this request's wall clock (overriding
+        ``cfg.default_deadline_s``); on expiry flush() returns the best
+        certified state reached with ``degraded=True`` rather than
+        stalling the batch.
         """
         from repro.index import SEARCH_VARIANTS
 
+        self._admit()
         if self.store is None or self.store.n_sets == 0:
             raise ValueError("no corpus to search; add_set() first")
         if k < 1:
@@ -120,30 +188,50 @@ class ProHDService:
             raise ValueError(
                 f"expected (n_q, {self.store.dim}) query, got shape {query.shape}"
             )
+        if validate and not bool(np.isfinite(np.asarray(query)).all()):
+            raise ValueError(
+                "query has non-finite coordinates (NaN/Inf); certified "
+                "intervals are undefined over them — clean the input or "
+                "pass validate=False"
+            )
+        if deadline_s is None:
+            deadline_s = self.cfg.default_deadline_s
         rid = self._next_rid
         self._next_rid += 1
-        self._pending_searches.append((rid, query, k, variant))
+        self._pending_searches.append((rid, query, k, variant, deadline_s))
         return rid
 
     # -- execution -----------------------------------------------------------
 
     def _fn(self, n_a: int, n_b: int, d: int, batch: int):
         key = (n_a, n_b, d, batch)
-        if key not in self._compiled:
-            m = projections.default_num_directions(d)
-            f = jax.jit(
-                jax.vmap(
-                    lambda a, va, b, vb: _masked_prohd(a, va, b, vb, alpha=self.cfg.alpha, m=m)
-                )
+        if key in self._compiled:
+            self._compiled.move_to_end(key)
+            return self._compiled[key]
+        m = projections.default_num_directions(d)
+        f = jax.jit(
+            jax.vmap(
+                lambda a, va, b, vb: _masked_prohd(a, va, b, vb, alpha=self.cfg.alpha, m=m)
             )
-            self._compiled[key] = f
-        return self._compiled[key]
+        )
+        self._compiled[key] = f
+        while len(self._compiled) > self.cfg.max_shape_classes:
+            self._compiled.popitem(last=False)
+        return f
 
     def flush(self) -> dict[int, dict]:
         """Run all pending requests.
 
         Pairwise results: {rid: {hd, lower, upper}}.
-        Search results:   {rid: {ids, values, stats}} (exact top-k).
+        Search results:   {rid: {ids, values, lower, upper, degraded,
+        stage_reached, stats}} — exact top-k unless the request's deadline
+        expired or a runtime fault was absorbed, in which case
+        ``degraded=True`` and [lower, upper] is the certified interval per
+        returned candidate.  A search that keeps failing with a typed
+        transient fault past ``cfg.max_retries`` retries (exponential
+        backoff from ``cfg.retry_backoff_s``) yields
+        ``{error, message}`` for THAT rid only — one poisoned request
+        never aborts the rest of the flush.
         """
         out: dict[int, dict] = {}
         by_bucket: dict[tuple[int, int, int], list] = {}
@@ -160,9 +248,18 @@ class ProHDService:
             for i in range(0, len(reqs), self.cfg.max_batch):
                 chunk = reqs[i : i + self.cfg.max_batch]
                 batch = len(chunk)
-                pa, va = pack_sets([np.asarray(a) for _, a, _ in chunk], n_a, d)
-                pb, vb = pack_sets([np.asarray(b) for _, _, b in chunk], n_b, d)
-                hd, lo, up = self._fn(n_a, n_b, d, batch)(
+                # pad the batch axis to a power of two by repeating the
+                # first request: with max_batch=M the service compiles at
+                # most log2(M)+1 batch classes per shape bucket instead of
+                # one per distinct chunk length (jit shape-class cap)
+                padded = bucket_capacity(batch, min_bucket=1)
+                clouds_a = [np.asarray(a) for _, a, _ in chunk]
+                clouds_b = [np.asarray(b) for _, _, b in chunk]
+                clouds_a += [clouds_a[0]] * (padded - batch)
+                clouds_b += [clouds_b[0]] * (padded - batch)
+                pa, va = pack_sets(clouds_a, n_a, d)
+                pb, vb = pack_sets(clouds_b, n_b, d)
+                hd, lo, up = self._fn(n_a, n_b, d, padded)(
                     jnp.asarray(pa), jnp.asarray(va), jnp.asarray(pb), jnp.asarray(vb)
                 )
                 for j, (rid, _, _) in enumerate(chunk):
@@ -171,14 +268,39 @@ class ProHDService:
                         "lower": float(lo[j]),
                         "upper": float(up[j]),
                     }
+                    self.heartbeat.beat()
 
-        for rid, query, k, variant in searches:
+        for rid, query, k, variant, deadline_s in searches:
             from repro.hd import search as hd_search
 
-            res = hd_search(query, self.store, k, variant=variant)
+            def attempt(_start, query=query, k=k, variant=variant, deadline_s=deadline_s):
+                _faults.fire(_POINT_FLUSH)
+                return hd_search(
+                    query, self.store, k, variant=variant, deadline_s=deadline_s
+                )
+
+            try:
+                res = run_with_recovery(
+                    attempt,
+                    lambda: 0,
+                    max_failures=self.cfg.max_retries,
+                    retryable=(TransientFault,),
+                    backoff_s=self.cfg.retry_backoff_s,
+                )
+            except ReliabilityError as e:
+                # typed, per-request: the submitter learns exactly what
+                # failed; everyone else's results still land
+                out[rid] = {"error": type(e).__name__, "message": str(e)}
+                self.heartbeat.beat()
+                continue
             out[rid] = {
                 "ids": res.ids.tolist(),
                 "values": res.values.tolist(),
+                "lower": res.lower.tolist(),
+                "upper": res.upper.tolist(),
+                "degraded": res.degraded,
+                "stage_reached": res.stage_reached,
                 "stats": res.stats,
             }
+            self.heartbeat.beat()
         return out

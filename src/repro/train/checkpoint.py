@@ -23,6 +23,7 @@ file I/O on a background thread, overlapping with the next train steps.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import re
@@ -30,12 +31,55 @@ import shutil
 import threading
 import uuid
 from pathlib import Path
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import numpy as np
 
 SEP = "/"
+
+
+@contextlib.contextmanager
+def atomic_snapshot_dir(root: str | os.PathLike, name: str) -> Iterator[Path]:
+    """Write-to-tmp-then-rename directory snapshot — THE atomicity primitive.
+
+    Yields a fresh ``<root>/<name>.tmp.<nonce>/`` to populate; on clean
+    exit the tmp dir is atomically renamed over ``<root>/<name>`` (an
+    existing complete snapshot of the same name is replaced only at that
+    instant).  On ANY exception the tmp dir is deleted and the previous
+    snapshot is untouched — a crash mid-write can never corrupt an
+    existing snapshot.  Both the train checkpoints here and the
+    ``SetStore`` snapshots (``repro.index.store``) ride this.
+    """
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / name
+    tmp = root / f"{name}.tmp.{uuid.uuid4().hex[:8]}"
+    tmp.mkdir(parents=True)
+    try:
+        yield tmp
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def write_latest(root: str | os.PathLike, token: str | int) -> None:
+    """Update the ``LATEST`` pointer (written AFTER the snapshot rename —
+    losing it only loses the pointer, see the fallback scanners)."""
+    (Path(root) / "LATEST").write_text(str(token))
+
+
+def read_latest(root: str | os.PathLike) -> str | None:
+    """The raw ``LATEST`` token, or None when absent.  Callers must treat
+    the token as a HINT: verify the named snapshot is complete and fall
+    back to scanning when it is not (stale pointer after a crash)."""
+    pointer = Path(root) / "LATEST"
+    if not pointer.exists():
+        return None
+    return pointer.read_text().strip()
 
 
 def _flatten_with_paths(tree) -> dict[str, Any]:
@@ -57,11 +101,7 @@ def _path_str(entry) -> str:
 def save(root: str | os.PathLike, step: int, tree: Any, *, extra: dict | None = None) -> Path:
     """Synchronous atomic save.  Returns the final checkpoint path."""
     root = Path(root)
-    root.mkdir(parents=True, exist_ok=True)
-    final = root / f"ckpt_{step}"
-    tmp = root / f"ckpt_{step}.tmp.{uuid.uuid4().hex[:8]}"
-    tmp.mkdir(parents=True)
-    try:
+    with atomic_snapshot_dir(root, f"ckpt_{step}") as tmp:
         flat = _flatten_with_paths(tree)
         arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         np.savez(tmp / "arrays.npz", **arrays)
@@ -73,14 +113,8 @@ def save(root: str | os.PathLike, step: int, tree: Any, *, extra: dict | None = 
             "extra": extra or {},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
-        if final.exists():
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        (root / "LATEST").write_text(str(step))
-        return final
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
+    write_latest(root, step)
+    return root / f"ckpt_{step}"
 
 
 class AsyncCheckpointer:
@@ -117,10 +151,10 @@ class AsyncCheckpointer:
 
 def latest_step(root: str | os.PathLike) -> int | None:
     root = Path(root)
-    pointer = root / "LATEST"
-    if pointer.exists():
+    token = read_latest(root)
+    if token is not None:
         try:
-            step = int(pointer.read_text().strip())
+            step = int(token)
             if (root / f"ckpt_{step}" / "manifest.json").exists():
                 return step
         except ValueError:

@@ -106,28 +106,46 @@ class StepFailure(RuntimeError):
     pass
 
 
+RETRYABLE_DEFAULT: tuple[type[BaseException], ...] = (
+    StepFailure,
+    FloatingPointError,
+    RuntimeError,
+)
+
+
 def run_with_recovery(
     run_fn: Callable[[int], int],
     restore_fn: Callable[[], int],
     *,
     max_failures: int = 3,
     on_failure: Callable[[BaseException, int], None] | None = None,
+    retryable: tuple[type[BaseException], ...] = RETRYABLE_DEFAULT,
+    backoff_s: float = 0.0,
+    sleep: Callable[[float], None] = time.sleep,
 ) -> int:
     """Drive ``run_fn(start_step) -> final_step`` with restore-on-failure.
 
     ``restore_fn() -> step`` reloads the latest checkpoint and returns the
     step to resume from.  Used by repro.train.loop.fit and tested with
-    injected failures in tests/test_train.py.
+    injected failures in tests/test_train.py — and, since the reliability
+    layer, by ``repro.serve.ProHDService`` for per-request retry: pass
+    ``retryable=(TransientFault,)`` to retry ONLY the typed transient
+    faults, and ``backoff_s`` for exponential backoff between attempts
+    (``backoff_s · 2^(failures−1)``; ``sleep`` is injectable so tests
+    never wall-clock wait).  Non-retryable exceptions propagate
+    immediately, untouched.
     """
     failures = 0
     start = restore_fn()
     while True:
         try:
             return run_fn(start)
-        except (StepFailure, FloatingPointError, RuntimeError) as e:
+        except retryable as e:
             failures += 1
             if on_failure is not None:
                 on_failure(e, failures)
             if failures > max_failures:
                 raise
+            if backoff_s > 0.0:
+                sleep(backoff_s * (2.0 ** (failures - 1)))
             start = restore_fn()

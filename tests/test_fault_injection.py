@@ -1,0 +1,168 @@
+"""Fault-injection sweep: the reliability invariant at EVERY declared point.
+
+Parametrized over :func:`repro.reliability.injection_points` — declaring a
+new injection point anywhere in the codebase automatically enrolls it here,
+so a point cannot exist without being swept.  The invariant proved for each
+(point, action) pair:
+
+    under an injected fault the stack returns EITHER a certified (possibly
+    degraded) interval containing the true distance, OR a typed
+    ReliabilityError — never a silently wrong top-k.
+
+Faults are deterministic (hit counters, seeded corruption — no clocks, no
+unseeded randomness), so a failure here replays bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro.index import SetStore, search
+from repro.reliability import (
+    Fault,
+    ReliabilityError,
+    StoreCorruption,
+    corrupt_snapshot,
+    inject,
+    injection_points,
+)
+from repro.serve.server import ProHDService, ServeConfig
+from strategies import query_near as _query
+from strategies import ragged_corpus as _corpus
+
+pytestmark = pytest.mark.faults
+
+POINTS = sorted(injection_points())
+K = 4
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    sets, rng = _corpus(11, n_sets=14)
+    q = _query(rng, sets, 4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    ref = search(q, store, store.n_sets, method="exact")
+    truth = dict(zip(ref.ids.tolist(), ref.values.astype(np.float64).tolist()))
+    exact_top = search(q, store, K, method="exact")
+    return sets, q, truth, exact_top
+
+
+def _assert_sound(result, truth, exact_top):
+    """The core invariant, on one search result dict from flush()."""
+    if "error" in result:
+        # a typed error names a ReliabilityError subclass — the submitter
+        # can classify it; nothing was silently dropped or miscomputed
+        import repro.reliability.errors as errmod
+
+        cls = getattr(errmod, result["error"])
+        assert issubclass(cls, ReliabilityError)
+        return
+    if not result["degraded"]:
+        # non-degraded answers carry the FULL certificate: identical to
+        # brute force, with zero-width intervals
+        assert result["ids"] == exact_top.ids.tolist()
+        assert result["values"] == exact_top.values.tolist()
+        assert result["lower"] == result["upper"]
+    for sid, lo, up in zip(result["ids"], result["lower"], result["upper"]):
+        assert lo <= truth[sid] <= up
+
+
+def _service(sets, **overrides):
+    cfg = ServeConfig(min_store_bucket=8, retry_backoff_s=0.0, **overrides)
+    svc = ProHDService(cfg)
+    for s in sets:
+        svc.add_set(s)
+    return svc
+
+
+@pytest.mark.parametrize("action", ["raise", "slow"])
+@pytest.mark.parametrize("point", POINTS)
+def test_invariant_at_every_point(point, action, corpus, tmp_path):
+    sets, q, truth, exact_top = corpus
+    fault = Fault(point, action=action, delay_s=0.02)
+
+    if point == "store.restore":
+        store = SetStore(dim=4)
+        store.add_many(sets)
+        store.save(tmp_path)
+        try:
+            with inject(fault):
+                restored = SetStore.restore(tmp_path)
+        except ReliabilityError:
+            return  # typed — the caller knows the snapshot did not load
+        # fault didn't kill the restore (slow action): the restored corpus
+        # must still be brute-force exact
+        res = search(q, restored, K)
+        np.testing.assert_array_equal(res.ids, exact_top.ids)
+        np.testing.assert_array_equal(res.values, exact_top.values)
+        return
+
+    # every other point is reachable through the service front door; a
+    # tight deadline makes "slow" observable as degradation instead of a
+    # stalled test
+    svc = _service(sets, max_retries=1)
+    rid = svc.submit_search(
+        q, K, deadline_s=0.01 if action == "slow" else None
+    )
+    try:
+        with inject(fault):
+            out = svc.flush()
+    except ReliabilityError:
+        return  # typed error surfaced before per-request capture — sound
+    _assert_sound(out[rid], truth, exact_top)
+
+
+def test_backend_down_every_rung_still_exact(corpus):
+    # knock out backends one at a time cumulatively: as long as ONE rung of
+    # the ladder stands, the top-k stays bit-for-bit brute force
+    sets, q, truth, exact_top = corpus
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    base = search(q, store, K)
+    ladder = [base.stats["masked_backend"]]
+    while True:
+        faults = [
+            Fault("cascade.backend", action="backend_down", match=be)
+            for be in ladder
+        ]
+        with inject(*faults):
+            try:
+                res = search(q, store, K)
+            except ReliabilityError:
+                break  # whole ladder down — typed, never wrong
+        assert res.stats["backend_fallbacks"] == ladder
+        np.testing.assert_array_equal(res.ids, exact_top.ids)
+        np.testing.assert_array_equal(res.values, exact_top.values)
+        ladder.append(res.stats["masked_backend"])
+
+
+def test_corrupted_snapshot_never_serves_silently(corpus, tmp_path):
+    sets, q, truth, exact_top = corpus
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    snap = store.save(tmp_path)
+    for seed in range(4):  # several distinct corrupted bytes/files
+        corrupt_snapshot(snap, seed=seed)
+        with pytest.raises(StoreCorruption):
+            SetStore.restore(tmp_path)
+        # quarantine path: what survives is still certified-exact
+        restored = SetStore.restore(tmp_path, quarantine=True)
+        if restored.n_sets:
+            res = search(q, restored, min(K, restored.n_sets))
+            ref = search(q, restored, min(K, restored.n_sets), method="exact")
+            np.testing.assert_array_equal(res.ids, ref.ids)
+            np.testing.assert_array_equal(res.values, ref.values)
+
+
+def test_fault_determinism(corpus):
+    # the same armed fault explores the same failure twice — hit counters,
+    # not clocks: both runs degrade at the same stage with the same ids
+    sets, q, truth, exact_top = corpus
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    runs = []
+    for _ in range(2):
+        with inject(Fault("cascade.stage2a", action="raise", after=0)):
+            runs.append(search(q, store, K))
+    assert runs[0].stage_reached == runs[1].stage_reached
+    np.testing.assert_array_equal(runs[0].ids, runs[1].ids)
+    np.testing.assert_array_equal(runs[0].upper, runs[1].upper)

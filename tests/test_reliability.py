@@ -1,0 +1,375 @@
+"""Reliability layer: durable SetStore snapshots, deadline-budgeted degraded
+search, service backpressure/retry, and input validation.
+
+The contract under test (docs/api.md, "Reliability contract"):
+
+* a restored snapshot reproduces the live store's certified top-k
+  BIT-FOR-BIT (clean path restores summaries from disk, no recompute);
+* corruption is DETECTED (sha256 content checksums), surfaced as the typed
+  :class:`StoreCorruption` naming the damaged bucket — or quarantined on
+  request, with the surviving corpus still brute-force-exact;
+* a deadline or an absorbed runtime fault yields ``degraded=True`` with a
+  certified [lower, upper] interval per returned candidate that CONTAINS
+  the true distance — sound at every rung of the degradation ladder;
+* the service backpressures with the typed :class:`Overloaded`, retries
+  transient faults with backoff, and converts a persistent fault into a
+  typed per-request error without aborting the rest of the flush.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.hd import search as hd_search
+from repro.hd import set_distance
+from repro.index import SetStore, latest_snapshot, search
+from repro.reliability import (
+    BackendUnavailable,
+    Fault,
+    InjectedFault,
+    Overloaded,
+    StoreCorruption,
+    corrupt_snapshot,
+    inject,
+)
+from repro.serve.server import ProHDService, ServeConfig
+from strategies import query_near as _query
+from strategies import ragged_corpus as _corpus
+
+
+def _store_and_query(seed=0, n_sets=26, dup_every=3, min_bucket=8):
+    sets, rng = _corpus(seed, n_sets=n_sets, dup_every=dup_every)
+    store = SetStore(dim=4, min_bucket=min_bucket)
+    store.add_many(sets)
+    return store, _query(rng, sets, 4)
+
+
+def _exact_by_id(q, store, variant="hausdorff"):
+    ref = search(q, store, store.n_sets, variant=variant, method="exact")
+    return dict(zip(ref.ids.tolist(), ref.values.astype(np.float64).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# durable snapshots
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshot:
+    def test_restore_reproduces_topk_bit_for_bit(self, tmp_path):
+        store, q = _store_and_query()
+        base = search(q, store, 7)
+        snap = store.save(tmp_path)
+        assert snap.is_dir() and (snap / "manifest.json").exists()
+        restored = SetStore.restore(tmp_path)
+        assert restored.n_sets == store.n_sets
+        res = search(q, restored, 7)
+        np.testing.assert_array_equal(res.ids, base.ids)
+        np.testing.assert_array_equal(res.values, base.values)
+        # clean restore recomputes nothing: summaries come off disk, every
+        # stacked field bit-identical (centroid, radii, projections, count)
+        for fa, fb in zip(store.summaries(), restored.summaries()):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+    def test_generations_and_latest_pointer(self, tmp_path):
+        store, q = _store_and_query()
+        store.save(tmp_path)
+        store.add(np.zeros((5, 4), np.float32) + 100.0)
+        store.save(tmp_path)
+        assert latest_snapshot(tmp_path) == 1
+        assert SetStore.restore(tmp_path).n_sets == store.n_sets
+        assert SetStore.restore(tmp_path, gen=0).n_sets == store.n_sets - 1
+
+    def test_stale_latest_pointer_falls_back_to_scan(self, tmp_path):
+        store, _ = _store_and_query()
+        store.save(tmp_path)
+        # crash-between-rename-and-LATEST: pointer names a gen that never
+        # landed — restore must scan and find the newest COMPLETE snapshot
+        (tmp_path / "LATEST").write_text("99")
+        assert latest_snapshot(tmp_path) == 0
+        assert SetStore.restore(tmp_path).n_sets == store.n_sets
+
+    def test_corruption_detected_and_named(self, tmp_path):
+        store, _ = _store_and_query()
+        snap = store.save(tmp_path)
+        bad = corrupt_snapshot(snap, seed=3)
+        with pytest.raises(StoreCorruption) as ei:
+            SetStore.restore(tmp_path)
+        assert ei.value.bucket is not None
+        assert os.path.basename(bad) == f"bucket_{ei.value.bucket}.npz"
+
+    def test_quarantine_drops_bucket_and_stays_exact(self, tmp_path):
+        store, q = _store_and_query()
+        snap = store.save(tmp_path)
+        corrupt_snapshot(snap, seed=3)
+        restored = SetStore.restore(tmp_path, quarantine=True)
+        rep = restored.restore_report
+        assert rep["dropped_buckets"] and rep["dropped_sets"] > 0
+        assert restored.n_sets == store.n_sets - rep["dropped_sets"]
+        # the survivors form a smaller but still CERTIFIED corpus
+        res = search(q, restored, 5)
+        ref = search(q, restored, 5, method="exact")
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+
+    def test_missing_manifest_is_corruption(self, tmp_path):
+        store, _ = _store_and_query()
+        snap = store.save(tmp_path)
+        (snap / "manifest.json").unlink()
+        with pytest.raises(StoreCorruption):
+            SetStore.restore(tmp_path, gen=0)
+
+    def test_restore_empty_root_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            SetStore.restore(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# deadline-budgeted degraded search
+# ---------------------------------------------------------------------------
+
+
+class TestDegradedSearch:
+    def test_zero_deadline_returns_certified_stage0_intervals(self):
+        store, q = _store_and_query()
+        truth = _exact_by_id(q, store)
+        res = search(q, store, 5, deadline_s=0.0)
+        assert res.degraded and res.stage_reached == "stage0"
+        assert res.meta.degraded and res.meta.stage_reached == "stage0"
+        for sid, lo, up in zip(res.ids.tolist(), res.lower, res.upper):
+            assert lo <= truth[sid] <= up
+        # ranked ascending by certified upper bound, deterministically
+        assert list(res.upper) == sorted(res.upper)
+
+    def test_unbounded_deadline_is_exact_and_complete(self):
+        store, q = _store_and_query()
+        res = search(q, store, 5, deadline_s=3600.0)
+        ref = search(q, store, 5)
+        assert not res.degraded and res.stage_reached == "complete"
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+        np.testing.assert_array_equal(res.lower, res.upper)
+
+    @pytest.mark.parametrize("point,floor", [
+        ("cascade.stage1", "stage0"),
+        ("cascade.stage2a", "stage1"),
+        ("cascade.stage2b", "stage2a"),
+    ])
+    def test_stage_fault_degrades_to_prior_rung(self, point, floor):
+        store, q = _store_and_query()
+        truth = _exact_by_id(q, store)
+        with inject(Fault(point, action="raise")):
+            res = search(q, store, 5)
+        assert res.degraded
+        ladder = ["stage0", "stage1", "stage2a", "stage2b"]
+        assert ladder.index(res.stage_reached) >= ladder.index(floor)
+        for sid, lo, up in zip(res.ids.tolist(), res.lower, res.upper):
+            assert lo <= truth[sid] <= up
+        assert "InjectedFault" in res.stats["fault"]
+
+    def test_on_fault_raise_propagates(self):
+        store, q = _store_and_query()
+        with inject(Fault("cascade.stage1", action="raise")):
+            with pytest.raises(InjectedFault):
+                search(q, store, 5, on_fault="raise")
+
+    def test_stage0_fault_always_propagates(self):
+        # nothing certified exists before stage 0 — no sound degradation
+        store, q = _store_and_query()
+        with inject(Fault("cascade.stage0", action="raise")):
+            with pytest.raises(InjectedFault):
+                search(q, store, 5)
+
+    def test_on_fault_validates_mode(self):
+        store, q = _store_and_query()
+        with pytest.raises(ValueError, match="on_fault"):
+            search(q, store, 3, on_fault="panic")
+
+    def test_backend_down_falls_back_with_identical_topk(self):
+        store, q = _store_and_query()
+        base = search(q, store, 6)
+        primary = base.stats["masked_backend"]
+        with inject(Fault("cascade.backend", action="backend_down", match=primary)):
+            res = search(q, store, 6)
+        assert res.stats["backend_fallbacks"] == [primary]
+        assert res.stats["masked_backend"] != primary
+        assert not res.degraded
+        np.testing.assert_array_equal(res.ids, base.ids)
+        np.testing.assert_array_equal(res.values, base.values)
+
+    def test_all_backends_down_raises_typed(self):
+        store, q = _store_and_query()
+        with inject(Fault("cascade.backend", action="backend_down")):
+            with pytest.raises(BackendUnavailable):
+                search(q, store, 4)
+
+
+# ---------------------------------------------------------------------------
+# service: backpressure, retry, typed per-request errors
+# ---------------------------------------------------------------------------
+
+
+def _service(**overrides):
+    cfg = ServeConfig(
+        bucket_sizes=(128,), min_store_bucket=8, retry_backoff_s=0.0, **overrides
+    )
+    svc = ProHDService(cfg)
+    sets, rng = _corpus(2, n_sets=10)
+    for s in sets:
+        svc.add_set(s)
+    return svc, _query(rng, sets, 4)
+
+
+class TestService:
+    def test_overloaded_backpressure(self):
+        svc, q = _service(max_queue=2)
+        svc.submit_search(q, 1)
+        svc.submit(q, q)
+        with pytest.raises(Overloaded, match="max_queue=2"):
+            svc.submit_search(q, 1)
+        svc.flush()  # drains; admission reopens
+        assert svc.submit_search(q, 1) == 0
+
+    def test_transient_fault_retried_away(self):
+        svc, q = _service()
+        rid = svc.submit_search(q, 3)
+        with inject(Fault("serve.flush", action="raise", once=True)):
+            out = svc.flush()
+        assert out[rid]["degraded"] is False
+        assert out[rid]["stage_reached"] == "complete"
+
+    def test_persistent_fault_is_typed_per_request(self):
+        svc, q = _service(max_retries=1)
+        rid_bad = svc.submit_search(q, 2)
+        rid_ok = svc.submit(q + 1.0, q)
+        with inject(Fault("serve.flush", action="raise")):
+            out = svc.flush()
+        assert out[rid_bad] == {
+            "error": "InjectedFault",
+            "message": "injected fault at 'serve.flush'",
+        }
+        assert out[rid_ok]["lower"] <= out[rid_ok]["hd"] <= out[rid_ok]["upper"]
+
+    def test_retry_backoff_is_exponential(self):
+        from repro.train.fault_tolerance import run_with_recovery
+        from repro.reliability.errors import TransientFault
+
+        waits = []
+        calls = [0]
+
+        def attempt(_):
+            calls[0] += 1
+            if calls[0] <= 3:
+                raise TransientFault("blip")
+            return "ok"
+
+        assert (
+            run_with_recovery(
+                attempt, lambda: 0, max_failures=3,
+                retryable=(TransientFault,), backoff_s=0.01, sleep=waits.append,
+            )
+            == "ok"
+        )
+        assert waits == [0.01, 0.02, 0.04]
+
+    def test_per_request_deadline_degrades(self):
+        svc, q = _service()
+        rid = svc.submit_search(q, 2, deadline_s=0.0)
+        out = svc.flush()
+        assert out[rid]["degraded"] is True
+        assert out[rid]["stage_reached"] == "stage0"
+        assert all(l <= u for l, u in zip(out[rid]["lower"], out[rid]["upper"]))
+
+    def test_heartbeat_bumped_per_request(self):
+        svc, q = _service()
+        svc.submit(q, q + 1.0)
+        svc.submit_search(q, 1)
+        before = svc.heartbeat.count
+        svc.flush()
+        assert svc.heartbeat.count == before + 2
+
+
+# ---------------------------------------------------------------------------
+# jit shape-class cap
+# ---------------------------------------------------------------------------
+
+
+class TestShapeClassCap:
+    def test_batch_axis_padded_to_pow2(self):
+        svc, q = _service(max_batch=8)
+        for _ in range(5):  # 5 identical-shape requests → ONE padded class
+            svc.submit(q, q + 1.0)
+        svc.flush()
+        assert list(svc._compiled) == [(128, 128, 4, 8)]
+
+    def test_compiled_cache_is_lru_bounded(self):
+        svc, q = _service(max_shape_classes=2)
+        rng = np.random.RandomState(7)
+        for n in (4, 200, 600):  # three distinct side buckets (128/256/1024)
+            svc.submit(rng.randn(n, 4).astype(np.float32), q)
+        svc.flush()
+        assert len(svc._compiled) == 2
+
+    def test_bounded_classes_from_config(self):
+        # with max_batch M and B configured buckets, the admissible key
+        # space is (B+1)^2 side classes × (log2(M)+1) batch classes —
+        # finite by construction, and the LRU enforces the hard cap anyway
+        cfg = ServeConfig(bucket_sizes=(128, 1024), max_batch=8)
+        batch_classes = {1, 2, 4, 8}
+        assert all((b & (b - 1)) == 0 for b in batch_classes)
+        assert len(batch_classes) == cfg.max_batch.bit_length()
+
+
+# ---------------------------------------------------------------------------
+# front-door input validation
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def _bad(self, val):
+        a = np.zeros((4, 3), np.float32)
+        a[2, 1] = val
+        return a
+
+    @pytest.mark.parametrize("val", [np.nan, np.inf, -np.inf])
+    def test_set_distance_rejects_nonfinite(self, val):
+        b = np.ones((5, 3), np.float32)
+        with pytest.raises(ValueError, match="non-finite"):
+            set_distance(self._bad(val), b)
+        with pytest.raises(ValueError, match="non-finite"):
+            set_distance(b, self._bad(val))
+
+    def test_set_distance_masked_out_garbage_is_legal(self):
+        a = self._bad(np.nan)
+        b = np.ones((5, 3), np.float32)
+        va = np.array([True, True, False, True])  # the NaN row is masked OUT
+        vb = np.ones(5, bool)
+        res = set_distance(a, b, masks=(va, vb))
+        assert np.isfinite(float(res.value))
+
+    def test_set_distance_validate_false_escape_hatch(self):
+        b = np.ones((5, 3), np.float32)
+        set_distance(self._bad(np.nan), b, validate=False)  # caller's problem
+
+    def test_store_add_rejects_nonfinite(self):
+        store = SetStore(dim=3)
+        with pytest.raises(ValueError, match="non-finite"):
+            store.add(self._bad(np.inf))
+        assert store.n_sets == 0  # nothing was partially stored
+        store.add(self._bad(np.inf), validate=False)
+
+    def test_search_rejects_nonfinite_query(self):
+        store, _ = _store_and_query()
+        bad = np.zeros((3, 4), np.float32)
+        bad[1, 2] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            hd_search(bad, store, 1)
+
+    def test_service_rejects_nonfinite(self):
+        svc, q = _service()
+        with pytest.raises(ValueError, match="non-finite"):
+            svc.submit(self._bad(np.nan)[:, :4].copy(), q)
+        bad = q.copy()
+        bad[0, 0] = np.inf
+        with pytest.raises(ValueError, match="non-finite"):
+            svc.submit_search(bad, 1)
+        assert svc.submit_search(bad, 1, validate=False) == 0

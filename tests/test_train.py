@@ -122,6 +122,51 @@ class TestCheckpoint:
         assert step == 3
         np.testing.assert_array_equal(got["a"], tree["a"])
 
+    def test_stale_latest_pointer_falls_back(self, tmp_path):
+        # crash AFTER a rename of step 3's dir but with LATEST still naming
+        # a step that never completed: the pointer is a hint, not truth
+        tree = {"a": jnp.zeros((2,))}
+        ck.save(tmp_path, 3, tree)
+        (tmp_path / "LATEST").write_text("9")
+        assert ck.latest_step(tmp_path) == 3
+        _, step = ck.restore(tmp_path, tree)
+        assert step == 3
+
+    def test_crash_between_write_and_rename_keeps_previous(self, tmp_path):
+        # an exception inside the atomic window must delete the tmp dir and
+        # leave the previous snapshot byte-for-byte untouched
+        tree = {"a": jnp.arange(4.0)}
+        ck.save(tmp_path, 1, tree)
+
+        class Boom(Exception):
+            pass
+
+        with pytest.raises(Boom):
+            with ck.atomic_snapshot_dir(tmp_path, "ckpt_2") as tmp:
+                (tmp / "manifest.json").write_text("{}")
+                raise Boom()
+        assert not list(tmp_path.glob("*.tmp.*"))   # no half-written debris
+        assert not (tmp_path / "ckpt_2").exists()   # nothing partial renamed
+        got, step = ck.restore(tmp_path, tree)
+        assert step == 1
+        np.testing.assert_array_equal(got["a"], tree["a"])
+
+    def test_async_checkpointer_surfaces_error_on_wait(self, tmp_path, monkeypatch):
+        acp = ck.AsyncCheckpointer(tmp_path)
+
+        def bad_save(*a, **k):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(ck, "save", bad_save)
+        acp.save(1, {"a": jnp.zeros((2,))})
+        with pytest.raises(OSError, match="disk full"):
+            acp.wait()
+        acp.wait()  # the error is surfaced ONCE, then cleared
+        monkeypatch.undo()
+        acp.save(2, {"a": jnp.zeros((2,))})  # checkpointer still usable
+        acp.wait()
+        assert ck.latest_step(tmp_path) == 2
+
 
 class TestRecovery:
     def test_fit_recovers_from_injected_failure(self, tmp_path):
