@@ -30,7 +30,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability",
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery",
     )
     ap.add_argument(
         "--quick", action="store_true", help="fig1 + phases + fused only"
@@ -64,6 +64,7 @@ def main() -> None:
         "index_stage2": tables.bench_index_stage2,
         "bucket_kernel": tables.bench_bucket_kernel,
         "reliability": tables.bench_reliability,
+        "multiquery": tables.bench_multiquery,
     }
     if args.quick:
         selected = ["fig1", "phases", "fused"]

@@ -44,8 +44,10 @@ __all__ = [
     "MaskedCertificate",
     "EXACT_MASKED_BACKENDS",
     "BATCHED_NATIVE_BACKENDS",
+    "MULTIQUERY_NATIVE_BACKENDS",
     "masked_exact_hd",
     "masked_exact_hd_batched",
+    "masked_exact_hd_multiquery",
     "masked_centroid",
     "masked_direction_set",
     "masked_projected_hd",
@@ -144,6 +146,35 @@ _masked_exact_batched_mirror = functools.partial(
 )
 
 
+def _masked_exact_multiquery(
+    a, b, valid_a, valid_b, *, directed, block_a, block_b, use_pallas
+):
+    """Single-pair view of the multi-query bucket kernel: Q=1, S=1.
+
+    Registering the query-axis kernel through the same single-pair adapter
+    shape as ``_masked_exact_batched`` is what lets the ENTIRE conformance
+    sweep (padded-vs-raw bitwise, vmap-lane invariance, cross-backend
+    margins) certify the new lanes without a line of new harness code.
+    Under an outer vmap both unit axes batch like any other operand.
+    """
+    from repro.kernels.hausdorff import batched
+
+    va = None if valid_a is None else valid_a[None]
+    vb = None if valid_b is None else valid_b[None]
+    return batched.multiquery_bucket_hd(
+        a[None], b[None], valid_qs=va, valid_slab=vb, directed=directed,
+        block_a=block_a, block_b=block_b, use_pallas=use_pallas,
+    )[0, 0]
+
+
+_masked_exact_multiquery_pallas = functools.partial(
+    _masked_exact_multiquery, use_pallas=True
+)
+_masked_exact_multiquery_mirror = functools.partial(
+    _masked_exact_multiquery, use_pallas=False
+)
+
+
 # Registry the conformance harness sweeps: name -> masked exact reduction.
 # "dense" and "tiled" mirror the front door's exact/dense and exact/tiled
 # dispatches op-for-op (the batched cascade leans on that); "fused_mirror"
@@ -159,11 +190,21 @@ EXACT_MASKED_BACKENDS = {
     "fused_mirror": _masked_exact_fused_mirror,
     "batched_pallas": _masked_exact_batched_pallas,
     "batched_mirror": _masked_exact_batched_mirror,
+    "multiquery_pallas": _masked_exact_multiquery_pallas,
+    "multiquery_mirror": _masked_exact_multiquery_mirror,
 }
 
 # Backends with a NATIVE batched (slab-axis) formulation: one launch per
 # bucket with an in-kernel per-set prune gate, instead of an outer vmap.
 BATCHED_NATIVE_BACKENDS = ("batched_pallas", "batched_mirror")
+
+# Backends with a NATIVE multi-query (query-axis × slab-axis) formulation:
+# one launch measures a whole query batch against a whole bucket slab with
+# a per-(query, set) prune gate.  "multiquery_pallas" is the query-axis
+# grid kernel (native on TPU, interpret-mode elsewhere — a testing path,
+# never picked by auto off-TPU); "multiquery_mirror" the pure-JAX fallback
+# (the production CPU/GPU multi-query route).
+MULTIQUERY_NATIVE_BACKENDS = ("multiquery_pallas", "multiquery_mirror")
 
 
 def masked_exact_hd(
@@ -239,6 +280,20 @@ def masked_exact_hd_batched(
             directed=directed, block_a=block_a, block_b=block_b,
             use_pallas=(backend == "batched_pallas"),
         )
+    if backend in MULTIQUERY_NATIVE_BACKENDS:
+        # Q=1 view of the query-axis kernel — this is what lets the
+        # multi-query backends serve as rungs of the cascade's fallback
+        # ladder with the exact same gate semantics.
+        vals = masked_exact_hd_multiquery(
+            q[None], slab,
+            valid_qs=None if valid_q is None else valid_q[None],
+            valid_slab=valid_slab,
+            lb=None if lb is None else jnp.asarray(lb)[None],
+            cut=None if cut is None else jnp.asarray(cut)[None],
+            directed=directed, backend=backend,
+            block_a=block_a, block_b=block_b,
+        )
+        return vals[0]
     vb = valid_slab if valid_slab is not None else jnp.ones((s_sets, cap), jnp.bool_)
 
     def one(p, v):
@@ -260,6 +315,72 @@ def masked_exact_hd_batched(
         sentinel = jnp.where(jnp.logical_and(directed, empty_q), 0.0, jnp.inf)
         vals = jnp.where(lb_ > cut, sentinel, vals)
     return vals
+
+
+def masked_exact_hd_multiquery(
+    qs,
+    slab,
+    *,
+    valid_qs=None,
+    valid_slab=None,
+    lb=None,
+    cut=None,
+    directed: bool = False,
+    backend: str = "multiquery_mirror",
+    block_a: int = 2048,
+    block_b: int = 2048,
+) -> jnp.ndarray:
+    """(Q, S) EXACT (directed) HD of a query batch vs a padded bucket slab.
+
+    The multi-query cascade's stage-2a entry (``repro.index.multiquery``):
+    one call measures every (query, candidate) frontier pair of a bucket.
+    ``backend`` names any registered masked exact backend:
+
+    - :data:`MULTIQUERY_NATIVE_BACKENDS` run the whole (Q, S) block
+      natively — the query-axis grid kernel (or its mirror) shares each
+      slab block across the query batch in one launch, honouring the
+      per-(query, set) prune gate ``lb``/``cut`` (Q, S) in-kernel
+      (gated-out lanes return the certified +inf sentinel);
+    - every other backend is vmapped over the query axis of
+      :func:`masked_exact_hd_batched` — same semantics, per-pair op
+      sequence, so any future backend is multi-query-servable for free.
+
+    Per-lane values carry the conformance contract of the chosen backend.
+    """
+    q_batch, n_q = qs.shape[0], qs.shape[1]
+    s_sets = slab.shape[0]
+    if backend in MULTIQUERY_NATIVE_BACKENDS:
+        from repro.kernels.hausdorff import batched
+
+        return batched.multiquery_bucket_hd(
+            qs, slab, valid_qs=valid_qs, valid_slab=valid_slab, lb=lb,
+            cut=cut, directed=directed, block_a=block_a, block_b=block_b,
+            use_pallas=(backend == "multiquery_pallas"),
+        )
+    va = (
+        valid_qs
+        if valid_qs is not None
+        else jnp.ones((q_batch, n_q), jnp.bool_)
+    )
+    lb_ = (
+        jnp.zeros((q_batch, s_sets), jnp.float32)
+        if lb is None
+        else jnp.asarray(lb, jnp.float32)
+    )
+    cut_ = (
+        jnp.full((q_batch, s_sets), jnp.inf, jnp.float32)
+        if cut is None
+        else jnp.asarray(cut, jnp.float32)
+    )
+
+    def one_q(q, v, l, c):
+        return masked_exact_hd_batched(
+            q, slab, valid_q=v, valid_slab=valid_slab, lb=l, cut=c,
+            directed=directed, backend=backend,
+            block_a=block_a, block_b=block_b,
+        )
+
+    return jax.vmap(one_q)(qs, va, lb_, cut_)
 
 
 def masked_centroid(points: jnp.ndarray, valid_f: jnp.ndarray) -> jnp.ndarray:

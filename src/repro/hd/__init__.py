@@ -42,11 +42,12 @@ from repro.hd.resolver import (
     resolve_block_sizes,
 )
 from repro.hd.result import HDMeta, HDResult
-from repro.hd.search import search
+from repro.hd.search import search, search_batch
 
 __all__ = [
     "set_distance",
     "search",
+    "search_batch",
     "HDEngine",
     "HDConfig",
     "BACKEND_FOR_SUBSET",

@@ -30,6 +30,7 @@ __all__ = [
     "resolve_backend",
     "resolve_block_sizes",
     "resolve_masked_backend",
+    "resolve_multiquery_backend",
 ]
 
 # The fused kernel's native block edge: below this, a whole cloud fits in
@@ -134,3 +135,24 @@ def resolve_masked_backend(
     if device_kind == "tpu":
         return "batched_pallas"
     return "batched_mirror"
+
+
+def resolve_multiquery_backend(
+    q_batch: int,
+    cap: int,
+    d: int,
+    *,
+    device_kind: str = "cpu",
+) -> str:
+    """Pick the masked backend for multi-query bucket work
+    (``repro.index.multiquery.search_batch`` stage 2a).
+
+    Sibling of :func:`resolve_masked_backend` one axis up: the query-axis
+    grid kernel where Pallas is native (TPU → ``multiquery_pallas``), its
+    pure-JAX query-vmapped mirror everywhere else.  Interpret-mode Pallas
+    is never auto-picked.
+    """
+    del q_batch, cap, d  # static facts reserved for future per-shape tuning
+    if device_kind == "tpu":
+        return "multiquery_pallas"
+    return "multiquery_mirror"

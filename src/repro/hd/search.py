@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from repro.hd.config import HDConfig
 
-__all__ = ["search"]
+__all__ = ["search", "search_batch"]
 
 
 def search(
@@ -68,4 +68,39 @@ def search(
         variant=variant, method=method, backend=backend, stage2=stage2,
         masked_backend=masked_backend, config=config, measure=measure,
         deadline_s=deadline_s, on_fault=on_fault, validate=validate,
+    )
+
+
+def search_batch(
+    queries,
+    store,
+    k,
+    *,
+    variant: str = "hausdorff",
+    backend: str = "auto",
+    masked_backend: str | None = None,
+    config: HDConfig | None = None,
+    measure: bool = False,
+    deadline_s: float | None = None,
+    on_fault: str = "degrade",
+    validate: bool = True,
+):
+    """Top-k per query for a BATCH of queries against one store; see
+    repro.index.multiquery.search_batch.
+
+    One call shares stage 0 ((Q × corpus) bound pass), stage 2a (the
+    query-axis bucket kernel — slabs shared across the batch in one launch)
+    and deduplicates raw refines across duplicate queries, while each
+    per-query top-k stays bit-for-bit identical to that query's own
+    ``search()`` — and hence to brute force.  ``k`` may be one int or a
+    per-query sequence; ``deadline_s`` budgets the whole call with
+    per-query degraded semantics.
+    """
+    from repro.index import multiquery
+
+    return multiquery.search_batch(
+        queries, store, k,
+        variant=variant, backend=backend, masked_backend=masked_backend,
+        config=config, measure=measure, deadline_s=deadline_s,
+        on_fault=on_fault, validate=validate,
     )

@@ -31,6 +31,7 @@ from repro.index.cascade import (
     interval_bounds,
     search,
 )
+from repro.index.multiquery import search_batch
 from repro.index.store import (
     PackedBucket,
     SetStore,
@@ -50,6 +51,7 @@ __all__ = [
     "latest_snapshot",
     "summarize_set",
     "search",
+    "search_batch",
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",

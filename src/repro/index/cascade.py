@@ -531,16 +531,28 @@ def search(
         int(q.shape[0]), 0, store.dim, device_kind=device_kind
     )
     # Masked-backend fallback ladder: the requested/resolved backend first,
-    # then every other registered one (interpret-only batched_pallas is
+    # then every other registered one (interpret-only *_pallas backends are
     # excluded off-TPU, matching the resolver).  A BackendUnavailable from
     # any bucket-granularity dispatch permanently advances the ladder —
     # every registered backend is conformance-certified, so the top-k is
     # identical whichever one ends up serving.
     available = [mb] + [
         b for b in sorted(masked.EXACT_MASKED_BACKENDS)
-        if b != mb and (b != "batched_pallas" or device_kind == "tpu")
+        if b != mb and (device_kind == "tpu" or not b.endswith("_pallas"))
     ]
     backend_fallbacks: list[str] = []
+    # Stage-2b refines share ONE dispatch decision per search: "auto" used
+    # to re-enter resolver.resolve_backend through the front door once per
+    # candidate inside the drain loop.  Resolve it here against the
+    # corpus's dominant (largest) set shape and thread the concrete name
+    # through every refine; passing a concrete backend to set_distance
+    # skips its own resolution, so the resolver runs exactly once.
+    refine_backend = backend
+    if backend == "auto":
+        refine_backend = resolver.resolve_backend(
+            variant, "exact", int(q.shape[0]), int(store.counts().max()),
+            store.dim, device_kind=device_kind,
+        )
 
     def _with_backend(call):
         """call(backend) under the fallback ladder; returns its result."""
@@ -574,7 +586,7 @@ def search(
 
     def refine(sid: int) -> None:
         nonlocal exact_refines
-        values[sid] = _exact_value(q, store.get(sid), variant, backend, cfg)
+        values[sid] = _exact_value(q, store.get(sid), variant, refine_backend, cfg)
         resolved[sid] = True
         exact_refines += 1
 
@@ -793,6 +805,7 @@ def search(
     stats.update(
         exact_refines=exact_refines,
         prune_fraction=1.0 - exact_refines / n,
+        refine_backend=refine_backend,
     )
 
     if not degraded:

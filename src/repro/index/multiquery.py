@@ -1,0 +1,626 @@
+"""Batched multi-query certified cascade: ``search_batch``.
+
+One call answers a whole BATCH of queries against the same :class:`SetStore`
+with every per-query guarantee of ``repro.index.cascade.search`` intact —
+each query's top-k is provably bit-for-bit identical to its own independent
+brute-force search — while sharing the work the single-query loop repeats
+per query:
+
+  stage 0 — **one (Q × corpus) summary-bound pass.**  The per-query
+      summaries are stacked with a broadcast axis and pushed through the
+      same :func:`interval_bounds` / :func:`bound_scale` math as the
+      single-query cascade, so all Q × N certified intervals come out of
+      ONE jitted call instead of Q.
+  stage 2a — **platform-dispatched batched tightening.**  On TPU (or
+      when a ``masked_backend`` is pinned) the union of every query's
+      frontier in a bucket is gathered ONCE into a padded slab and
+      measured by the query-axis bucket kernel
+      (``kernels/hausdorff/batched.multiquery_bucket_hd`` via
+      ``masked.masked_exact_hd_multiquery``): the slab blocks are shared
+      across the query batch inside one launch, and the per-(query, set)
+      scalar-prefetch gate carries each query's OWN certified lower bound
+      against its OWN cutoff τ_q — a gated lane returns the certified +inf
+      sentinel exactly as in the single-query kernel.  On lane-select
+      platforms (pure-JAX routes, auto) gates cannot drop compute, so the
+      shared launch would pay Q × the frontier UNION; there stage 2a runs
+      one gated slab pass per (unique query, bucket) over that query's OWN
+      frontier — the sequential cascade's own jitted ``_stage2_batch``,
+      still deduplicated across duplicate queries.  Either way values
+      enter the per-query interval state as ``value ± fp_value_margin`` —
+      never as "the" value — for the same GEMM-shape reasons as the
+      single-query stage 2a.
+  stage 2b — **deduplicated raw refinement.**  Exact values come from the
+      raw ``repro.hd`` front door, one drain loop per UNIQUE query:
+      duplicate queries in the batch collapse to one cascade (their refines
+      are performed once and fanned back out), and within a unique query
+      every (query, candidate) pair is refined at most once across the
+      whole call.  Every RETURNED value is therefore bit-for-bit the
+      number brute force computes.
+
+The batch path intentionally skips the single-query cascade's stage 1
+(vmapped masked ProHD certificates): with the multi-query stage 2a able to
+tighten every frontier pair of a bucket in one gated launch, the exact
+pass is the cheaper per-lane tightener, and pruning soundness only ever
+relied on the bounds being certified — never on which stage produced them.
+Per-query stats record ``stage1_pruned = 0`` accordingly.
+
+Reliability follows PR 6's single-query semantics at batch granularity:
+``deadline_s`` budgets the whole call, stage 0 always runs (the certified
+floor), and on expiry or an absorbed fault every NOT-yet-completed query
+returns its best certified state as a DEGRADED result (completed queries
+keep their exact results — per-query state is independent).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masked
+from repro.hd import resolver
+from repro.hd.config import HDConfig
+from repro.hd.result import HDMeta
+from repro.index import cascade as _cascade
+from repro.index.cascade import (
+    ON_FAULT_MODES,
+    SEARCH_VARIANTS,
+    SearchResult,
+    _Budget,
+    _DeadlineHit,
+    _DEGRADABLE,
+    _exact_value,
+    _kth_smallest,
+    _pow2_take,
+    _rank,
+    bound_scale,
+    certified_margins,
+    fp_value_margin,
+    interval_bounds,
+)
+from repro.index.store import SetStore, SetSummary, bucket_capacity
+from repro.reliability import faults as _faults
+from repro.reliability.errors import BackendUnavailable
+
+__all__ = ["search_batch"]
+
+
+@functools.partial(jax.jit, static_argnames=("directed",))
+def _stage0_multiquery(qsums: SetSummary, ssums: SetSummary, *, directed: bool):
+    """(Q, N) raw certified bounds + scales from stacked summaries, one shot.
+
+    ``qsums`` carries a broadcast axis ((Q, 1, ...) per field) against the
+    store's (N, ...) stacked summaries — the exact single-query bound math,
+    vectorized over the query axis by broadcasting alone.
+    """
+    lb, ub = interval_bounds(qsums, ssums, directed=directed)
+    return lb, ub, bound_scale(qsums, ssums)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("directed", "backend", "block_a", "block_b")
+)
+def _stage2a_multiquery(
+    qs, valid_qs, pts, valid, gate_lb, gate_cut, *, directed, backend,
+    block_a, block_b,
+):
+    """(Q, B) EXACT masked HD of the query batch vs one bucket's frontier
+    slab — the multi-query analogue of the cascade's ``_stage2_batch``.
+    Same conformance contract per lane; the per-(query, set) gate returns
+    the certified +inf sentinel for pairs outside a query's frontier."""
+    return masked.masked_exact_hd_multiquery(
+        qs, pts, valid_qs=valid_qs, valid_slab=valid, lb=gate_lb,
+        cut=gate_cut, directed=directed, backend=backend,
+        block_a=block_a, block_b=block_b,
+    )
+
+
+def _stack_query_summaries(summaries: list[SetSummary]) -> SetSummary:
+    """Stack per-query summaries and insert the broadcast axis: each field
+    (shape s...) becomes (Q, 1, *s...), ready to broadcast against the
+    store's (N, ...) stacked summaries inside :func:`_stage0_multiquery`."""
+    return SetSummary(
+        *(
+            jnp.stack([getattr(s, f) for s in summaries])[:, None]
+            for f in SetSummary._fields
+        )
+    )
+
+
+def search_batch(
+    queries: Sequence,
+    store: SetStore,
+    k,
+    *,
+    variant: str = "hausdorff",
+    backend: str = "auto",
+    masked_backend: str | None = None,
+    config: HDConfig | None = None,
+    measure: bool = False,
+    deadline_s: float | None = None,
+    on_fault: str = "degrade",
+    validate: bool = True,
+) -> list[SearchResult]:
+    """Top-k nearest stored sets for EVERY query in a batch.
+
+    queries  — sequence of (n_i, D) point clouds (sizes may differ)
+    store    — the SetStore to search
+    k        — one int for all queries, or a sequence of per-query ints
+               (k_i == 0 yields that query's well-formed empty result)
+    variant / backend / config / validate — as in ``search()``
+    masked_backend — which ``EXACT_MASKED_BACKENDS`` reduction serves the
+               multi-query stage-2a launches.  None resolves to the
+               query-axis kernel natively on TPU (``multiquery_pallas``),
+               its pure-JAX query-vmapped mirror elsewhere.  ANY
+               registered name is valid (non-native ones are vmapped over
+               the query axis) and the per-query top-k is identical under
+               every one of them (conformance-gated).
+    deadline_s — wall-clock budget for the WHOLE call.  On expiry,
+               queries whose cascade already drained return their exact
+               (non-degraded) results; the rest return their best
+               certified state with ``degraded=True`` — same per-query
+               certificate semantics as ``search(deadline_s=...)``.
+    on_fault — "degrade" absorbs mid-cascade runtime faults into degraded
+               results for the incomplete queries; "raise" propagates.
+               Stage-0 faults always raise (no certified state yet).
+
+    Returns one :class:`SearchResult` per query, in input order.  Unless
+    ``degraded`` is set, result ``i``'s ids/values are bit-for-bit
+    identical to ``search(queries[i], store, k_i)`` and hence to query
+    ``i``'s independent brute-force search.  Duplicate queries in the
+    batch collapse to ONE cascade — their refines run once and the result
+    is fanned back out (``stats['dedup_hits']`` counts the collapsed
+    queries; with mixed k the shared ranking is prefix-sliced, which is
+    exact because the (value, id) ascending order is prefix-stable).
+
+    ``measure=True`` stamps every result's ``meta.elapsed_s`` with the
+    TOTAL batch wall time (the per-query cost is the batch amortized —
+    there is no meaningful per-query wall clock inside shared launches).
+    """
+    if variant not in SEARCH_VARIANTS:
+        raise ValueError(
+            f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}"
+        )
+    if on_fault not in ON_FAULT_MODES:
+        raise ValueError(
+            f"unknown on_fault mode {on_fault!r}; expected one of {ON_FAULT_MODES}"
+        )
+    if masked_backend is not None and masked_backend not in masked.EXACT_MASKED_BACKENDS:
+        raise ValueError(
+            f"unknown masked backend {masked_backend!r}; expected one of "
+            f"{tuple(sorted(masked.EXACT_MASKED_BACKENDS))}"
+        )
+    if store.n_sets == 0:
+        raise ValueError("cannot search an empty SetStore")
+    queries = list(queries)
+    n_queries = len(queries)
+    if n_queries == 0:
+        return []
+    if isinstance(k, (int, np.integer)):
+        k_list = [int(k)] * n_queries
+    else:
+        k_list = [int(x) for x in k]
+        if len(k_list) != n_queries:
+            raise ValueError(
+                f"per-query k sequence has length {len(k_list)}, "
+                f"expected {n_queries}"
+            )
+    for ki in k_list:
+        if ki < 0:
+            raise ValueError(f"k must be >= 0, got {ki}")
+
+    cfg = config if config is not None else HDConfig()
+    qs_j: list[jnp.ndarray] = []
+    for qi, query in enumerate(queries):
+        q = jnp.asarray(query, jnp.float32)
+        if q.ndim != 2 or q.shape[1] != store.dim:
+            raise ValueError(
+                f"query {qi}: expected (n_q, {store.dim}) points, got shape {q.shape}"
+            )
+        if q.shape[0] < 1:
+            raise ValueError(
+                f"query {qi} must contain at least one point "
+                "(HD is undefined on empty sets)"
+            )
+        if validate and not bool(np.isfinite(np.asarray(q)).all()):
+            raise ValueError(
+                f"query {qi} contains non-finite coordinates (NaN/Inf); "
+                "certified bounds are undefined over them — clean the "
+                "query or pass validate=False"
+            )
+        qs_j.append(q)
+
+    t0 = time.perf_counter() if measure else 0.0
+    budget = _Budget(deadline_s)
+    n = store.n_sets
+    k_eff = [min(ki, n) for ki in k_list]
+    directed = variant == "directed"
+    device_kind = resolver.default_device_kind()
+
+    # -- dedup: duplicate queries collapse to one cascade -----------------
+    uniq_of: dict[tuple[int, bytes], int] = {}
+    owner: list[int] = []            # original index -> unique index
+    uniq: list[jnp.ndarray] = []
+    for q in qs_j:
+        key = (int(q.shape[0]), np.asarray(q).tobytes())
+        if key not in uniq_of:
+            uniq_of[key] = len(uniq)
+            uniq.append(q)
+        owner.append(uniq_of[key])
+    n_unique = len(uniq)
+    dedup_hits = n_queries - n_unique
+    # Shared ranking depth per unique query: the max any owner asks for;
+    # owners with smaller k prefix-slice it (exact — see docstring).
+    k_u_all = [0] * n_unique
+    for qi, ui in enumerate(owner):
+        k_u_all[ui] = max(k_u_all[ui], k_eff[qi])
+    # Active uniques actually cascade; k == 0 owners get the empty result.
+    act = [ui for ui in range(n_unique) if k_u_all[ui] > 0]
+    a_of: dict[int, int] = {ui: ai for ai, ui in enumerate(act)}
+    n_act = len(act)
+    k_u = [k_u_all[ui] for ui in act]
+
+    # Same hoisted refine-backend discipline as search(): one resolver
+    # decision per call, threaded concretely through every raw refine.
+    refine_backend = backend
+    if backend == "auto" and n_act:
+        refine_backend = resolver.resolve_backend(
+            variant, "exact",
+            max(int(uniq[ui].shape[0]) for ui in act),
+            int(store.counts().max()), store.dim, device_kind=device_kind,
+        )
+
+    # Multi-query masked-backend fallback ladder (same exclusion rule as
+    # the single-query cascade: interpret-only *_pallas never off-TPU).
+    mqb = masked_backend or resolver.resolve_multiquery_backend(
+        n_act, 0, store.dim, device_kind=device_kind
+    )
+    available = [mqb] + [
+        b for b in sorted(masked.EXACT_MASKED_BACKENDS)
+        if b != mqb and (device_kind == "tpu" or not b.endswith("_pallas"))
+    ]
+    backend_fallbacks: list[str] = []
+
+    def _with_backend(call):
+        while True:
+            be = available[0]
+            try:
+                _faults.fire(_cascade._POINT_BACKEND, backend=be)
+                return call(be)
+            except BackendUnavailable:
+                backend_fallbacks.append(be)
+                available.pop(0)
+                if not available:
+                    raise
+
+    def checkpoint() -> None:
+        if budget.expired():
+            raise _DeadlineHit()
+
+    # Per-active-unique certified interval state — (A, N) analogues of the
+    # single-query cascade's arrays.  Vacuous-but-sound until tightened.
+    values = np.full((n_act, n), np.inf, np.float32)
+    resolved = np.zeros((n_act, n), bool)
+    lb = np.zeros((n_act, n), np.float64)
+    ub = np.full((n_act, n), np.inf, np.float64)
+    alive = np.ones((n_act, n), bool)
+    scale = np.ones((n_act, n), np.float64)
+    stage0_pruned = np.zeros((n_act,), np.int64)
+    refines = np.zeros((n_act,), np.int64)
+    s2a_pairs = np.zeros((n_act,), np.int64)
+    completed = np.zeros((n_act,), bool)
+    stage_reached = ["stage0"] * n_act
+    launches = 0
+    s2a_shapes: set[tuple] = set()
+    fault: BaseException | None = None
+
+    if n_act:
+        # -- stage 0: ONE (Q × corpus) summary-bound pass ----------------
+        # Always runs (the certified floor); failure here propagates.
+        _faults.fire(_cascade._POINT_STAGE0)
+        q_pad = bucket_capacity(n_act, 1)           # pow2 query-axis pad
+        pad_idx = act + [act[0]] * (q_pad - n_act)  # jit-cache discipline
+        qsums = _stack_query_summaries([store.summarize(uniq[ui]) for ui in pad_idx])
+        lb_j, ub_j, scale_j = _stage0_multiquery(
+            qsums, store.summaries(), directed=directed
+        )
+        scale = np.asarray(scale_j, np.float64)[:n_act]
+        lb0, ub0 = certified_margins(
+            np.asarray(lb_j, np.float64)[:n_act],
+            np.asarray(ub_j, np.float64)[:n_act],
+            scale, store.dim,
+        )
+        lb, ub = lb0, ub0
+        taus = np.asarray(
+            [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
+        )
+        alive = lb <= taus[:, None]
+        stage0_pruned = (n - alive.sum(axis=1)).astype(np.int64)
+
+        # Shared padded query slab for stage 2a: every active unique query
+        # padded to one pow2 row count with validity masks (padding cannot
+        # move a certified bound — masked lanes are poisoned out — and the
+        # final values come from raw refines on the UNPADDED points).
+        nq_pad = bucket_capacity(max(int(uniq[ui].shape[0]) for ui in act))
+        q_slab = np.zeros((q_pad, nq_pad, store.dim), np.float32)
+        q_valid = np.zeros((q_pad, nq_pad), bool)
+        for row, ui in enumerate(pad_idx):
+            nq_i = int(uniq[ui].shape[0])
+            q_slab[row, :nq_i] = np.asarray(uniq[ui])
+            q_valid[row, :nq_i] = True
+        q_slab_j = jnp.asarray(q_slab)
+        q_valid_j = jnp.asarray(q_valid)
+
+        # Stage-2a dispatch is a PLATFORM decision.  The shared-slab
+        # launch (one (q_pad, batch) grid per bucket, per-(query, set)
+        # gates) only saves work where gates skip compute in-kernel — the
+        # TPU-native query-axis kernel.  On the pure-JAX routes gates are
+        # lane SELECTS: a shared launch would compute every query against
+        # the UNION of all frontiers (Q × union pairs) where a per-query
+        # launch computes only each query's own frontier (≈ sum of
+        # frontiers) — a Q-fold blowup for disjoint frontiers.  So off-TPU
+        # with `masked_backend=None` (auto) stage 2a runs one gated
+        # single-query slab pass per (active query, bucket) — the SAME
+        # jitted `_stage2_batch` the sequential cascade uses, deduplicated
+        # across duplicate queries.  Pinning any multiquery backend forces
+        # the shared-slab launch everywhere (how CPU tests certify it).
+        shared_slab = device_kind == "tpu" or masked_backend is not None
+        try:
+            # -- stage 2a: per surviving bucket, tighten the batch --------
+            _faults.fire(_cascade._POINT_STAGE2A)
+            slot = store.slot_index()
+            buckets = store.packed_buckets()
+            frontier = alive & ~resolved
+            groups: dict[int, list[int]] = {}
+            for sid in np.nonzero(frontier.any(axis=0))[0]:
+                groups.setdefault(slot[int(sid)][0], []).append(int(sid))
+            # Ascending best-lower-bound bucket order (global min over the
+            # batch), re-deriving every τ_q between buckets — one bucket's
+            # tight intervals prune the next bucket's stragglers for every
+            # query at once.
+            for cap in sorted(
+                groups, key=lambda c: min(lb[:, groups[c]].min(axis=0))
+            ):
+                taus = np.asarray(
+                    [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
+                )
+                alive &= lb <= taus[:, None]
+                cols = np.asarray(groups[cap], np.int64)
+                mask = alive[:, cols] & ~resolved[:, cols] & (
+                    lb[:, cols] <= taus[:, None]
+                )
+                keep = mask.any(axis=0)
+                if not keep.any():
+                    continue
+                checkpoint()
+                sids = cols[keep]
+                mask = mask[:, keep]
+                bucket = buckets[cap]
+                rows = np.asarray([slot[int(s)][1] for s in sids])
+
+                if shared_slab:
+                    take = _pow2_take(rows)
+                    batch = int(take.shape[0])
+                    # Per-(query, set) prune gate: each real (q, s)
+                    # frontier pair carries query q's certified lower
+                    # bound against a cutoff safely above ITS τ_q (same
+                    # 1e-6 fp32-cast headroom argument as the single-query
+                    # cascade); pairs outside a query's frontier, pow2
+                    # batch-padding lanes and pow2 query-padding rows ride
+                    # in gated (+inf lb), returning the certified sentinel
+                    # — skipped in-kernel on the Pallas route,
+                    # lane-selected on the pure-JAX routes.
+                    gate_lb = np.full((q_pad, batch), np.inf, np.float32)
+                    gate_lb[:n_act, : sids.size] = np.where(
+                        mask, lb[:, sids], np.inf
+                    ).astype(np.float32)
+                    gate_cut = np.full((q_pad, batch), -np.inf, np.float32)
+                    gate_cut[:n_act] = np.where(
+                        np.isfinite(taus), taus * (1.0 + 1e-6), np.inf
+                    ).astype(np.float32)[:, None]
+
+                    def _call_2a(be):
+                        block_a, block_b = resolver.resolve_block_sizes(
+                            nq_pad, cap, store.dim, device_kind=device_kind,
+                            backend="fused_pallas" if be.endswith("_pallas") else "tiled",
+                        )
+                        return be, _stage2a_multiquery(
+                            q_slab_j, q_valid_j,
+                            jnp.take(bucket.points, take, axis=0),
+                            jnp.take(bucket.valid, take, axis=0),
+                            jnp.asarray(gate_lb), jnp.asarray(gate_cut),
+                            directed=directed, backend=be,
+                            block_a=block_a, block_b=block_b,
+                        )
+
+                    used_be, raw_vals = _with_backend(_call_2a)
+                    vals = np.asarray(raw_vals, np.float64)[:n_act, : sids.size]
+                    pad = fp_value_margin(store.dim, scale[:, sids], vals)
+                    lb[:, sids] = np.where(
+                        mask, np.maximum(lb[:, sids], np.maximum(vals - pad, 0.0)),
+                        lb[:, sids],
+                    )
+                    ub[:, sids] = np.where(
+                        mask, np.minimum(ub[:, sids], vals + pad), ub[:, sids]
+                    )
+                    launches += 1
+                    s2a_shapes.add((cap, batch, used_be))
+                    s2a_pairs += mask.sum(axis=1)
+                    for ai in np.nonzero(mask.any(axis=1))[0]:
+                        stage_reached[ai] = "stage2a"
+                else:
+                    # Per-query gated slab passes over each query's OWN
+                    # frontier columns — compute ∝ Σ_q |frontier_q|, the
+                    # cheapest a lane-select platform can do, and still
+                    # deduplicated (each unique query tightens once).
+                    for ai in np.nonzero(mask.any(axis=1))[0]:
+                        checkpoint()
+                        q_sids = sids[mask[ai]]
+                        q_rows = rows[mask[ai]]
+                        take_q = _pow2_take(q_rows)
+                        batch_q = int(take_q.shape[0])
+                        gate_lb_q = np.concatenate(
+                            [lb[ai, q_sids],
+                             np.full((batch_q - q_rows.size,), np.inf)]
+                        ).astype(np.float32)
+                        gate_cut_q = np.full(
+                            (batch_q,),
+                            taus[ai] * (1.0 + 1e-6)
+                            if np.isfinite(taus[ai]) else np.inf,
+                            np.float32,
+                        )
+                        q_raw = uniq[act[ai]]
+                        n_q_i = int(q_raw.shape[0])
+
+                        def _call_2a_one(be):
+                            block_a, block_b = resolver.resolve_block_sizes(
+                                n_q_i, cap, store.dim, device_kind=device_kind,
+                                backend="fused_pallas" if be.endswith("_pallas") else "tiled",
+                            )
+                            return be, _cascade._stage2_batch(
+                                q_raw,
+                                jnp.take(bucket.points, take_q, axis=0),
+                                jnp.take(bucket.valid, take_q, axis=0),
+                                jnp.asarray(gate_lb_q),
+                                jnp.asarray(gate_cut_q),
+                                directed=directed, backend=be,
+                                block_a=block_a, block_b=block_b,
+                            )
+
+                        used_be, raw_vals = _with_backend(_call_2a_one)
+                        vals = np.asarray(raw_vals, np.float64)[: q_rows.size]
+                        pad = fp_value_margin(store.dim, scale[ai, q_sids], vals)
+                        lb[ai, q_sids] = np.maximum(
+                            lb[ai, q_sids], np.maximum(vals - pad, 0.0)
+                        )
+                        ub[ai, q_sids] = np.minimum(ub[ai, q_sids], vals + pad)
+                        launches += 1
+                        s2a_shapes.add((cap, batch_q, used_be))
+                        s2a_pairs[ai] += q_rows.size
+                        stage_reached[ai] = "stage2a"
+
+            # -- stage 2b: deduplicated raw refinement, per unique query --
+            # One drain loop per unique query (duplicates were collapsed
+            # above — this loop IS the dedup); each (query, candidate)
+            # refines at most once, on RAW points, so returned values are
+            # bit-for-bit brute force's.
+            _faults.fire(_cascade._POINT_STAGE2B)
+            for ai in range(n_act):
+                while True:
+                    tau = _kth_smallest(ub[ai], k_u[ai])
+                    alive[ai] &= lb[ai] <= tau
+                    front = np.nonzero(alive[ai] & ~resolved[ai])[0]
+                    if front.size == 0:
+                        completed[ai] = True
+                        break
+                    checkpoint()
+                    sid = int(front[np.lexsort((front, lb[ai][front]))[0]])
+                    values[ai, sid] = _exact_value(
+                        uniq[act[ai]], store.get(sid), variant,
+                        refine_backend, cfg,
+                    )
+                    resolved[ai, sid] = True
+                    refines[ai] += 1
+                    lb[ai, sid] = ub[ai, sid] = float(values[ai, sid])
+                    stage_reached[ai] = "stage2b"
+        except _DeadlineHit:
+            pass  # per-query ``completed`` flags carry the degraded state
+        except _DEGRADABLE as e:
+            if isinstance(e, BackendUnavailable) and not available:
+                raise
+            if on_fault == "raise":
+                raise
+            fault = e
+
+    # -- assembly: one result per unique, fanned out per original ---------
+    elapsed = time.perf_counter() - t0 if measure else None
+    dedup_hit_rate = dedup_hits / n_queries
+    base_stats: dict[str, Any] = {
+        "candidates_scanned": n,
+        "stage2_mode": "batched",
+        "batch_queries": n_queries,
+        "unique_queries": n_unique,
+        "dedup_hits": dedup_hits,
+        "dedup_hit_rate": dedup_hit_rate,
+        "multiquery_launches": launches,
+        "stage2_distinct_shapes": len(s2a_shapes),
+        "masked_backend": available[0] if available else None,
+        "refine_backend": refine_backend,
+    }
+    if backend_fallbacks:
+        base_stats["backend_fallbacks"] = list(backend_fallbacks)
+
+    def _unique_result(ui: int) -> tuple:
+        """(ids, values, lower, upper, degraded, stage, stats) for unique
+        query ``ui`` at its shared ranking depth k_u."""
+        if ui not in a_of:
+            stats = dict(base_stats)
+            stats.update(
+                k=0, stage0_pruned=0, stage1_pruned=0, stage2_calls=0,
+                stage2_batched_candidates=0, exact_refines=0,
+                prune_fraction=1.0,
+            )
+            empty = np.zeros((0,), np.float32)
+            return (
+                np.zeros((0,), np.int32), empty,
+                empty.astype(np.float64), empty.astype(np.float64),
+                False, "complete", stats,
+            )
+        ai = a_of[ui]
+        stats = dict(base_stats)
+        stats.update(
+            k=k_u[ai],
+            stage0_pruned=int(stage0_pruned[ai]),
+            stage1_pruned=0,
+            stage2_calls=launches + int(refines[ai]),
+            stage2_batched_candidates=int(s2a_pairs[ai]),
+            exact_refines=int(refines[ai]),
+            prune_fraction=1.0 - int(refines[ai]) / n,
+        )
+        if completed[ai]:
+            top = _rank(values[ai], np.nonzero(resolved[ai])[0], k_u[ai])
+            out_values = values[ai][top]
+            out_lower = out_upper = out_values.astype(np.float64)
+            return (
+                top.astype(np.int32), out_values, out_lower, out_upper,
+                False, "complete", stats,
+            )
+        order = np.lexsort((np.arange(n), ub[ai]))
+        top = order[: k_u[ai]]
+        out_values = np.where(
+            resolved[ai][top], values[ai][top], ub[ai][top].astype(np.float32)
+        ).astype(np.float32)
+        stats["n_resolved"] = int(resolved[ai].sum())
+        stats["deadline_s"] = deadline_s
+        if fault is not None:
+            stats["fault"] = f"{type(fault).__name__}: {fault}"
+        return (
+            top.astype(np.int32), out_values,
+            lb[ai][top].copy(), ub[ai][top].copy(),
+            True, stage_reached[ai], stats,
+        )
+
+    per_unique = {ui: _unique_result(ui) for ui in set(owner)}
+    results: list[SearchResult] = []
+    for qi in range(n_queries):
+        ids, vals, low, up, deg, stage, stats = per_unique[owner[qi]]
+        ki = k_eff[qi]
+        stats = dict(stats)
+        stats["k"] = ki
+        meta = HDMeta(
+            variant=variant, method="cascade", backend=backend,
+            block_a=0, block_b=0, elapsed_s=elapsed,
+            degraded=deg, stage_reached=stage,
+        )
+        results.append(
+            SearchResult(
+                ids=ids[:ki].copy(), values=vals[:ki].copy(),
+                stats=stats, meta=meta,
+                lower=low[:ki].copy(), upper=up[:ki].copy(),
+                degraded=deg, stage_reached=stage,
+            )
+        )
+    return results

@@ -62,6 +62,10 @@ __all__ = [
     "batched_min_sqdists_mirror",
     "batched_min_sqdists",
     "batched_bucket_hd",
+    "multiquery_min_sqdists_pallas",
+    "multiquery_min_sqdists_mirror",
+    "multiquery_min_sqdists",
+    "multiquery_bucket_hd",
 ]
 
 _INF = float("inf")  # python float: jnp constants would become kernel consts
@@ -354,4 +358,313 @@ def batched_bucket_hd(
     if directed:
         return h_a
     h_b = jax.vmap(exact.finalize_mins)(minb, vb)
+    return jnp.maximum(h_a, h_b)
+
+
+# ---------------------------------------------------------------------------
+# Multi-query extension: the grid gains a query axis (PR 7).
+#
+# The batched kernel above shares the QUERY operands across set slots; the
+# multi-query kernel additionally shares the SLAB operands across a query
+# batch — its slab index map ignores the query coordinate, so a (S, cap, D)
+# slab is walked by Q queries inside ONE launch instead of Q launches.  The
+# prune gate generalizes to a per-(query, set) scalar-prefetch pair
+# ``lb[qq, s] / cut[qq, s]``: each query keeps its OWN certified bounds and
+# its OWN cutoff τ_q, and a gated (qq, s) lane stays at the certified +inf
+# sentinel exactly as in the single-query kernel.
+# ---------------------------------------------------------------------------
+
+
+def _multiquery_kernel(
+    lb_ref,      # SMEM (Q, S): certified lower bound per (query, set) pair
+    cut_ref,     # SMEM (Q, S): caller cutoff per (query, set) (+inf = no gate)
+    q_ref,       # (1, Ba, D) query block of query qq
+    b_ref,       # (1, Bb, D) slab block of set s — shared across queries
+    q2_ref,      # (1, Ba, 1) hoisted ||q||²; +inf ⇒ row invalid/padded
+    b2_ref,      # (1, Bb) hoisted ||b||²; +inf ⇒ row invalid/padded
+    mina_ref,    # out (1, 1, Ba) block of (qq, s) — revisited across j
+    minb_ref,    # out (1, 1, cap) row of (qq, s) — resident across (i, j)
+    *,
+    block_b: int,
+):
+    """One (qq, s, i, j) grid step: fold query qq's d² tile against set s."""
+    qq = pl.program_id(0)
+    s = pl.program_id(1)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init_rows():
+        mina_ref[...] = jnp.full(mina_ref.shape, _INF, dtype=jnp.float32)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_cols():
+        minb_ref[...] = jnp.full(minb_ref.shape, _INF, dtype=jnp.float32)
+
+    # Per-(query, set) early-out: a gated lane's accumulators stay +inf (a
+    # certified "farther than this query's cut" sentinel), never garbage.
+    @pl.when(lb_ref[qq, s] <= cut_ref[qq, s])
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)      # (Ba, D)
+        b = b_ref[0].astype(jnp.float32)      # (Bb, D)
+        qb = jax.lax.dot_general(
+            q,
+            b,
+            dimension_numbers=(((1,), (1,)), ((), ())),  # q @ b.T
+            preferred_element_type=jnp.float32,
+        )
+        d2 = jnp.maximum(q2_ref[0] - 2.0 * qb + b2_ref[...], 0.0)  # (Ba, Bb)
+
+        tile_row_min = jnp.min(d2, axis=1)[None, None, :]          # (1, 1, Ba)
+        mina_ref[...] = jnp.minimum(mina_ref[...], tile_row_min)
+
+        tile_col_min = jnp.min(d2, axis=0)[None, None, :]          # (1, 1, Bb)
+        sl = (
+            slice(None),
+            slice(None),
+            pl.dslice(pl.multiple_of(j * block_b, block_b), block_b),
+        )
+        pl.store(minb_ref, sl, jnp.minimum(pl.load(minb_ref, sl), tile_col_min))
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def multiquery_min_sqdists_pallas(
+    qs: jnp.ndarray,
+    slab: jnp.ndarray,
+    q2: jnp.ndarray,
+    b2: jnp.ndarray,
+    lb: jnp.ndarray,
+    cut: jnp.ndarray,
+    *,
+    block_a: int,
+    block_b: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-launch multi-query bidirectional min-scan over a bucket slab.
+
+    Preconditions (enforced by :func:`multiquery_min_sqdists`): ``qs`` is
+    (Q, n_q_pad, D) with n_q_pad % block_a == 0 and D % 128 == 0; ``slab``
+    is (S, cap_pad, D) with cap_pad % block_b == 0; ``q2`` (Q, n_q_pad, 1) /
+    ``b2`` (S, cap_pad) are hoisted squared norms with +inf at invalid rows;
+    ``lb``/``cut`` are (Q, S) fp32 per-(query, set) gate operands.
+
+    Returns ``(min_a (Q, S, n_q_pad), min_b (Q, S, cap_pad))`` fp32.  The
+    slab block's index map ignores the query coordinate, so consecutive
+    grid steps that differ only in their inner sweep reuse the fetched slab
+    block — the query batch shares each slab in one launch.
+    """
+    q_batch, n_q, d = qs.shape
+    s_sets, cap = slab.shape[0], slab.shape[1]
+    grid = (q_batch, s_sets, n_q // block_a, cap // block_b)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_a, d), lambda qq, s, i, j, *_: (qq, i, 0)),
+            pl.BlockSpec((1, block_b, d), lambda qq, s, i, j, *_: (s, j, 0)),
+            pl.BlockSpec((1, block_a, 1), lambda qq, s, i, j, *_: (qq, i, 0)),
+            pl.BlockSpec((1, block_b), lambda qq, s, i, j, *_: (s, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_a), lambda qq, s, i, j, *_: (qq, s, i)),
+            pl.BlockSpec((1, 1, cap), lambda qq, s, i, j, *_: (qq, s, 0)),
+        ],
+    )
+    mina, minb = pl.pallas_call(
+        functools.partial(_multiquery_kernel, block_b=block_b),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_batch, s_sets, n_q), jnp.float32),
+            jax.ShapeDtypeStruct((q_batch, s_sets, cap), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 4
+        ),
+        interpret=interpret,
+    )(lb, cut, qs, slab, q2, b2)
+    return mina, minb
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b"))
+def multiquery_min_sqdists_mirror(
+    qs: jnp.ndarray,
+    slab: jnp.ndarray,
+    *,
+    valid_qs: jnp.ndarray | None = None,
+    valid_slab: jnp.ndarray | None = None,
+    lb: jnp.ndarray | None = None,
+    cut: jnp.ndarray | None = None,
+    block_a: int = 4096,
+    block_b: int = 2048,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-JAX mirror of the multi-query kernel (gate semantics incl.).
+
+    One vmap over the query axis of :func:`batched_min_sqdists_mirror`,
+    with the slab operands held constant across the batch — the slab-side
+    preparation (norm hoisting, poisoning) is loop-invariant under the
+    query vmap, so XLA hoists it out and the batch shares it, mirroring
+    the kernel's shared-slab fetch.  Per-lane bits are exactly the
+    ``fused_mirror`` backend's.
+    """
+    q_batch, n_q = qs.shape[0], qs.shape[1]
+    s_sets, cap = slab.shape[0], slab.shape[1]
+    va = (
+        valid_qs
+        if valid_qs is not None
+        else jnp.ones((q_batch, n_q), jnp.bool_)
+    )
+    vb = valid_slab if valid_slab is not None else jnp.ones((s_sets, cap), jnp.bool_)
+    lb = (
+        jnp.zeros((q_batch, s_sets), jnp.float32)
+        if lb is None
+        else lb.astype(jnp.float32)
+    )
+    cut = (
+        jnp.full((q_batch, s_sets), jnp.inf, jnp.float32)
+        if cut is None
+        else cut.astype(jnp.float32)
+    )
+
+    def one_q(q, v, l, c):
+        return batched_min_sqdists_mirror(
+            q, slab, valid_q=v, valid_slab=vb, lb=l, cut=c,
+            block_a=block_a, block_b=block_b,
+        )
+
+    return jax.vmap(one_q)(qs, va, lb, cut)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_a", "block_b", "interpret", "use_pallas")
+)
+def multiquery_min_sqdists(
+    qs: jnp.ndarray,
+    slab: jnp.ndarray,
+    *,
+    valid_qs: jnp.ndarray | None = None,
+    valid_slab: jnp.ndarray | None = None,
+    lb: jnp.ndarray | None = None,
+    cut: jnp.ndarray | None = None,
+    block_a: int = 512,
+    block_b: int = 512,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-query batched bidirectional min scan against a bucket slab.
+
+    qs         — (Q, n_q, D) query batch (one padded row prefix per query)
+    slab       — (S, cap, D) padded bucket slab (one row prefix per set)
+    valid_qs   — (Q, n_q) bool, True = real row (None ⇒ all valid)
+    valid_slab — (S, cap) bool per-set validity (None ⇒ all valid)
+    lb / cut   — (Q, S) per-(query, set) prune-gate operands: pair (qq, s)
+                 is computed iff ``lb[qq, s] <= cut[qq, s]`` and left at
+                 the +inf sentinel otherwise.  Defaults disable the gate.
+    use_pallas — False routes to :func:`multiquery_min_sqdists_mirror`.
+
+    Returns ``(min_a (Q, S, n_q), min_b (Q, S, cap))`` fp32 min squared
+    distances; entries of invalid rows (and every entry of gated-out
+    lanes) are +inf and must be masked before reduction.
+    """
+    q_batch, n_q = qs.shape[0], qs.shape[1]
+    s_sets, cap = slab.shape[0], slab.shape[1]
+    va = (
+        valid_qs
+        if valid_qs is not None
+        else jnp.ones((q_batch, n_q), jnp.bool_)
+    )
+    vb = valid_slab if valid_slab is not None else jnp.ones((s_sets, cap), jnp.bool_)
+    lb = (
+        jnp.zeros((q_batch, s_sets), jnp.float32)
+        if lb is None
+        else lb.astype(jnp.float32)
+    )
+    cut = (
+        jnp.full((q_batch, s_sets), jnp.inf, jnp.float32)
+        if cut is None
+        else cut.astype(jnp.float32)
+    )
+    if not use_pallas:
+        return multiquery_min_sqdists_mirror(
+            qs, slab, valid_qs=va, valid_slab=vb, lb=lb, cut=cut,
+            block_a=block_a, block_b=block_b,
+        )
+
+    if interpret is None:
+        interpret = _default_interpret()
+    block_a = fit_block(block_a, n_q)
+    block_b = fit_block(block_b, cap)
+
+    q_p = _pad_axis(_pad_axis(qs, 128, 2), block_a, 1)
+    s_p = _pad_axis(_pad_axis(slab, 128, 2), block_b, 1)
+    va_p = _pad_axis(va.astype(jnp.float32)[:, :, None], block_a, 1)  # (Q, n_q_pad, 1)
+    vb_p = _pad_axis(vb.astype(jnp.float32), block_b, 1)              # (S, cap_pad)
+
+    # Same prep as the single-query path: zero masked rows' data, poison
+    # their norms so they can win neither min.
+    q_p = jnp.where(va_p > 0.0, q_p, jnp.zeros((), q_p.dtype))
+    s_p = jnp.where(vb_p[:, :, None] > 0.0, s_p, jnp.zeros((), s_p.dtype))
+    q32 = q_p.astype(jnp.float32)
+    s32 = s_p.astype(jnp.float32)
+    q2 = jnp.sum(q32 * q32, axis=2, keepdims=True)                    # (Q, n_q_pad, 1)
+    b2 = jnp.sum(s32 * s32, axis=2)                                   # (S, cap_pad)
+    q2 = jnp.where(va_p > 0.0, q2, jnp.inf)
+    b2 = jnp.where(vb_p > 0.0, b2, jnp.inf)
+
+    mina, minb = multiquery_min_sqdists_pallas(
+        q_p, s_p, q2, b2, lb, cut,
+        block_a=block_a, block_b=block_b, interpret=interpret,
+    )
+    return mina[:, :, :n_q], minb[:, :, :cap]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("directed", "block_a", "block_b", "interpret", "use_pallas"),
+)
+def multiquery_bucket_hd(
+    qs: jnp.ndarray,
+    slab: jnp.ndarray,
+    *,
+    valid_qs: jnp.ndarray | None = None,
+    valid_slab: jnp.ndarray | None = None,
+    lb: jnp.ndarray | None = None,
+    cut: jnp.ndarray | None = None,
+    directed: bool = False,
+    block_a: int = 512,
+    block_b: int = 512,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """(Q, S) exact (directed) Hausdorff distances of a query batch vs a slab.
+
+    The per-pair reduction of :func:`multiquery_min_sqdists`: each (qq, s)
+    lane is finalized exactly like the single-pair paths
+    (``exact.finalize_mins`` — empty query side ⇒ 0.0, empty target side ⇒
+    +inf).  Gated-out lanes come back +inf (certified "farther than this
+    query's cut"), except under an all-invalid query side whose 0.0
+    convention dominates.
+    """
+    mina, minb = multiquery_min_sqdists(
+        qs, slab, valid_qs=valid_qs, valid_slab=valid_slab, lb=lb, cut=cut,
+        block_a=block_a, block_b=block_b, interpret=interpret,
+        use_pallas=use_pallas,
+    )
+    q_batch, n_q = qs.shape[0], qs.shape[1]
+    va = (
+        valid_qs
+        if valid_qs is not None
+        else jnp.ones((q_batch, n_q), jnp.bool_)
+    )
+    vb = (
+        valid_slab
+        if valid_slab is not None
+        else jnp.ones(slab.shape[:2], jnp.bool_)
+    )
+    h_a = jax.vmap(
+        lambda m, v: jax.vmap(lambda row: exact.finalize_mins(row, v))(m)
+    )(mina, va)
+    if directed:
+        return h_a
+    h_b = jax.vmap(lambda m: jax.vmap(exact.finalize_mins)(m, vb))(minb)
     return jnp.maximum(h_a, h_b)

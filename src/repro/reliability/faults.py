@@ -102,6 +102,7 @@ def injection_points() -> dict[str, str]:
     """
     import repro.index.cascade  # noqa: F401
     import repro.index.store  # noqa: F401
+    import repro.serve.engine  # noqa: F401
     import repro.serve.server  # noqa: F401
 
     with _LOCK:

@@ -1,0 +1,331 @@
+"""Async admission-batching query engine — ``repro.serve.engine``.
+
+:class:`ProHDService` is a synchronous collect-then-flush batcher: callers
+queue requests and somebody calls ``flush()``.  :class:`QueryEngine` is the
+serving loop that closes over it for concurrent callers::
+
+    engine = QueryEngine(service)
+    res = await engine.search(query, k=5)     # a SearchResult, same
+                                              # certificate as hd.search()
+
+Admission → batching → execution:
+
+- **Admission** is bounded: past ``cfg.max_queue`` in-flight queries,
+  ``search()`` raises the typed :class:`Overloaded` immediately —
+  backpressure the caller sees, never a silent drop (the same contract as
+  ``ProHDService.submit_search``).
+- **Batching** groups admitted queries by *shape class* — the pair
+  ``(bucket_capacity(n_q), variant)`` — so one class runs as ONE
+  :func:`repro.index.multiquery.search_batch` call: shared stage-0 bound
+  pass, shared query-axis bucket launches, deduplicated refines.  A class
+  flushes as soon as it holds ``cfg.max_batch`` queries, or once its oldest
+  member has waited ``cfg.max_wait_s`` — latency is bounded by the policy,
+  not by traffic.
+- **Execution** runs in a thread-pool executor (the cascade is synchronous
+  NumPy/JAX) under :func:`run_with_recovery`: transient faults retry with
+  exponential backoff, and past the retry budget the typed error is set on
+  every waiter in the batch.  The batch inherits the MINIMUM remaining
+  deadline among its members (stage sharing means one budget governs the
+  launch); a member whose own deadline still has budget after a degraded
+  batch pass gets an individual top-up ``search()`` — so per-query deadline
+  semantics match the single-query path, and a query with no deadline is
+  never degraded by a neighbour's.
+
+Every result is the unmodified per-query :class:`SearchResult` — the
+certificate (bit-for-bit brute-force top-k, or a certified degraded
+interval) is exactly what ``hd.search()`` would have returned.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.reliability import faults as _faults
+from repro.reliability.errors import Overloaded, ReliabilityError, TransientFault
+from repro.train.fault_tolerance import run_with_recovery
+
+__all__ = ["EngineConfig", "QueryEngine"]
+
+_POINT_ENGINE_FLUSH = _faults.declare_point(
+    "engine.flush",
+    "batched search_batch execution inside the engine's flush path — a "
+    "transient raise here is retried with backoff (run_with_recovery); "
+    "past the retry budget the typed error reaches every waiter",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Admission / batching / retry policy for :class:`QueryEngine`."""
+
+    # bounded admission: search() raises Overloaded past this many pending
+    max_queue: int = 256
+    # a shape class flushes at this many queries ...
+    max_batch: int = 16
+    # ... or once its oldest member has waited this long
+    max_wait_s: float = 0.002
+    # default per-query wall-clock budget (None = unbounded); an explicit
+    # search(deadline_s=...) overrides it
+    default_deadline_s: float | None = None
+    # transient-fault retry budget per flush (run_with_recovery)
+    max_retries: int = 2
+    retry_backoff_s: float = 0.02
+    # pin the masked bucket backend for every batch (None = auto-resolve)
+    masked_backend: str | None = None
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: np.ndarray
+    k: int
+    variant: str
+    deadline_abs: float | None  # monotonic-clock expiry, None = unbounded
+    future: asyncio.Future
+    enqueue_t: float
+
+
+class QueryEngine:
+    """Async front end over a :class:`ProHDService`'s corpus.
+
+    One engine serves one event loop at a time; the flusher task and wake
+    event are (re)bound lazily to the running loop, so an engine object
+    survives ``asyncio.run()`` boundaries in tests.
+    """
+
+    def __init__(self, service, cfg: EngineConfig = EngineConfig()):
+        if service.store is None or service.store.n_sets == 0:
+            raise ValueError("service has no corpus; add_set() first")
+        self.service = service
+        self.cfg = cfg
+        # share the service's liveness marker: every delivered result beats
+        # it with the query's admission-to-delivery wall time
+        self.heartbeat = service.heartbeat
+        self._pending: dict[tuple[int, str], list[_Pending]] = {}
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._event: asyncio.Event | None = None
+        self._flusher: asyncio.Task | None = None
+        self._closed = False
+        self.stats = {"flushes": 0, "batched_queries": 0, "topups": 0}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _ensure_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        if self._loop is not loop or self._flusher is None or self._flusher.done():
+            self._loop = loop
+            self._event = asyncio.Event()
+            self._flusher = loop.create_task(self._run_flusher())
+
+    async def close(self) -> None:
+        """Stop the flusher; fail any still-pending queries typed."""
+        self._closed = True
+        if self._flusher is not None:
+            self._flusher.cancel()
+            try:
+                await self._flusher
+            except asyncio.CancelledError:
+                pass
+            self._flusher = None
+        for lst in self._pending.values():
+            for p in lst:
+                if not p.future.done():
+                    p.future.set_exception(RuntimeError("engine closed"))
+        self._pending.clear()
+
+    @property
+    def pending(self) -> int:
+        return sum(len(lst) for lst in self._pending.values())
+
+    # -- admission ---------------------------------------------------------
+
+    async def search(
+        self,
+        query,
+        k: int = 1,
+        *,
+        variant: str = "hausdorff",
+        deadline_s: float | None = None,
+        validate: bool = True,
+    ):
+        """Admit one query; resolves to its :class:`SearchResult`.
+
+        Raises the typed :class:`Overloaded` when ``cfg.max_queue`` queries
+        are already in flight.  Malformed input raises ``ValueError`` here,
+        at admission — a bad query must bounce to its submitter, never
+        poison a batch carrying everyone else's.
+        """
+        from repro.index import SEARCH_VARIANTS
+
+        if self._closed:
+            raise RuntimeError("engine closed")
+        self._ensure_loop()
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if variant not in SEARCH_VARIANTS:
+            raise ValueError(
+                f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}"
+            )
+        q = np.asarray(query, dtype=np.float32)
+        dim = self.service.store.dim
+        if q.ndim != 2 or q.shape[1] != dim:
+            raise ValueError(f"expected (n_q, {dim}) query, got shape {q.shape}")
+        if validate and not bool(np.isfinite(q).all()):
+            raise ValueError(
+                "query has non-finite coordinates (NaN/Inf); certified "
+                "intervals are undefined over them — clean the input or "
+                "pass validate=False"
+            )
+        if self.pending >= self.cfg.max_queue:
+            raise Overloaded(self.pending, self.cfg.max_queue)
+        if deadline_s is None:
+            deadline_s = self.cfg.default_deadline_s
+        now = time.monotonic()
+        from repro.index.store import bucket_capacity
+
+        cls = (bucket_capacity(q.shape[0], min_bucket=1), variant)
+        p = _Pending(
+            query=q,
+            k=int(k),
+            variant=variant,
+            deadline_abs=None if deadline_s is None else now + float(deadline_s),
+            future=self._loop.create_future(),
+            enqueue_t=now,
+        )
+        self._pending.setdefault(cls, []).append(p)
+        self._event.set()
+        return await p.future
+
+    # -- batching ----------------------------------------------------------
+
+    async def _run_flusher(self) -> None:
+        while True:
+            await self._event.wait()
+            self._event.clear()
+            while any(self._pending.values()):
+                now = time.monotonic()
+                full = [
+                    c
+                    for c, lst in self._pending.items()
+                    if len(lst) >= self.cfg.max_batch
+                ]
+                if full:
+                    cls = full[0]
+                else:
+                    # no class is full: flush the class holding the OLDEST
+                    # query once it has aged max_wait_s, else sleep until
+                    # then (woken early if new admissions change the picture)
+                    cls, oldest = min(
+                        ((c, lst[0].enqueue_t) for c, lst in self._pending.items() if lst),
+                        key=lambda t: t[1],
+                    )
+                    wait = oldest + self.cfg.max_wait_s - now
+                    if wait > 0:
+                        try:
+                            await asyncio.wait_for(self._event.wait(), timeout=wait)
+                        except asyncio.TimeoutError:
+                            pass
+                        self._event.clear()
+                        continue
+                lst = self._pending.get(cls, [])
+                batch = lst[: self.cfg.max_batch]
+                del lst[: len(batch)]
+                if not lst:
+                    self._pending.pop(cls, None)
+                batch = [p for p in batch if not p.future.cancelled()]
+                if batch:
+                    await self._flush_batch(cls, batch)
+
+    def _recover(self, attempt):
+        return run_with_recovery(
+            attempt,
+            lambda: 0,
+            max_failures=self.cfg.max_retries,
+            retryable=(TransientFault,),
+            backoff_s=self.cfg.retry_backoff_s,
+        )
+
+    async def _flush_batch(self, cls: tuple[int, str], batch: list[_Pending]) -> None:
+        from repro.index.multiquery import search_batch
+
+        _, variant = cls
+        queries = [p.query for p in batch]
+        ks = [p.k for p in batch]
+        now = time.monotonic()
+        remaining = [
+            max(p.deadline_abs - now, 0.0)
+            for p in batch
+            if p.deadline_abs is not None
+        ]
+        # shared stages mean one budget governs the launch: the batch runs
+        # under the tightest member deadline; members with more budget get
+        # an individual top-up below if this pass degraded them
+        batch_deadline = min(remaining) if remaining else None
+
+        def attempt(_start):
+            _faults.fire(_POINT_ENGINE_FLUSH)
+            return search_batch(
+                queries,
+                self.service.store,
+                ks,
+                variant=variant,
+                masked_backend=self.cfg.masked_backend,
+                deadline_s=batch_deadline,
+                on_fault="degrade",
+                validate=False,  # validated at admission
+            )
+
+        self.stats["flushes"] += 1
+        self.stats["batched_queries"] += len(batch)
+        try:
+            results = await self._loop.run_in_executor(
+                None, lambda: self._recover(attempt)
+            )
+        except ReliabilityError as e:
+            for p in batch:
+                if not p.future.done():
+                    p.future.set_exception(e)
+            return
+
+        for p, res in zip(batch, results):
+            if res.degraded:
+                now2 = time.monotonic()
+                if p.deadline_abs is None or now2 < p.deadline_abs:
+                    res = await self._topup(p, res, now2)
+                    if res is None:  # typed error already set on the future
+                        continue
+            if not p.future.done():
+                p.future.set_result(res)
+                self.heartbeat.beat(wall_s=time.monotonic() - p.enqueue_t)
+
+    async def _topup(self, p: _Pending, degraded_res, now: float):
+        """Individual retry for a member degraded by the batch's shared
+        (minimum) deadline while its OWN budget still has wall clock left."""
+        from repro.hd import search as hd_search
+
+        topup_deadline = None if p.deadline_abs is None else p.deadline_abs - now
+
+        def attempt(_start):
+            _faults.fire(_POINT_ENGINE_FLUSH)
+            return hd_search(
+                p.query,
+                self.service.store,
+                p.k,
+                variant=p.variant,
+                masked_backend=self.cfg.masked_backend,
+                deadline_s=topup_deadline,
+                on_fault="degrade",
+                validate=False,
+            )
+
+        self.stats["topups"] += 1
+        try:
+            return await self._loop.run_in_executor(
+                None, lambda: self._recover(attempt)
+            )
+        except ReliabilityError as e:
+            if not p.future.done():
+                p.future.set_exception(e)
+            return None

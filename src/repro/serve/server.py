@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Sequence
 
 import jax
@@ -257,18 +258,22 @@ class ProHDService:
                 clouds_b = [np.asarray(b) for _, _, b in chunk]
                 clouds_a += [clouds_a[0]] * (padded - batch)
                 clouds_b += [clouds_b[0]] * (padded - batch)
+                t0 = time.perf_counter()
                 pa, va = pack_sets(clouds_a, n_a, d)
                 pb, vb = pack_sets(clouds_b, n_b, d)
                 hd, lo, up = self._fn(n_a, n_b, d, padded)(
                     jnp.asarray(pa), jnp.asarray(va), jnp.asarray(pb), jnp.asarray(vb)
                 )
+                # one launch serves the whole chunk: attribute an equal
+                # share of its wall time to each request's heartbeat
+                wall_each = (time.perf_counter() - t0) / batch
                 for j, (rid, _, _) in enumerate(chunk):
                     out[rid] = {
                         "hd": float(hd[j]),
                         "lower": float(lo[j]),
                         "upper": float(up[j]),
                     }
-                    self.heartbeat.beat()
+                    self.heartbeat.beat(wall_s=wall_each)
 
         for rid, query, k, variant, deadline_s in searches:
             from repro.hd import search as hd_search
@@ -279,6 +284,7 @@ class ProHDService:
                     query, self.store, k, variant=variant, deadline_s=deadline_s
                 )
 
+            t0 = time.perf_counter()
             try:
                 res = run_with_recovery(
                     attempt,
@@ -291,7 +297,7 @@ class ProHDService:
                 # typed, per-request: the submitter learns exactly what
                 # failed; everyone else's results still land
                 out[rid] = {"error": type(e).__name__, "message": str(e)}
-                self.heartbeat.beat()
+                self.heartbeat.beat(wall_s=time.perf_counter() - t0)
                 continue
             out[rid] = {
                 "ids": res.ids.tolist(),
@@ -302,5 +308,5 @@ class ProHDService:
                 "stage_reached": res.stage_reached,
                 "stats": res.stats,
             }
-            self.heartbeat.beat()
+            self.heartbeat.beat(wall_s=time.perf_counter() - t0)
         return out

@@ -24,17 +24,30 @@ from typing import Callable
 
 
 class Heartbeat:
-    """Thread-safe liveness marker, bumped once per step."""
+    """Thread-safe liveness marker, bumped once per step.
+
+    ``beat(wall_s=...)`` additionally records the step's wall time:
+    ``last_wall_s`` is the most recent reported duration and
+    ``total_wall_s`` their monotone running sum — a watchdog reading the
+    payload sees not just *that* the worker is alive but how long its
+    requests are taking (``repro.serve`` beats once per completed request
+    with that request's wall time).
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
         self._last = time.monotonic()
         self._count = 0
+        self._last_wall_s = 0.0
+        self._total_wall_s = 0.0
 
-    def beat(self) -> None:
+    def beat(self, wall_s: float | None = None) -> None:
         with self._lock:
             self._last = time.monotonic()
             self._count += 1
+            if wall_s is not None:
+                self._last_wall_s = float(wall_s)
+                self._total_wall_s += float(wall_s)
 
     @property
     def age(self) -> float:
@@ -45,6 +58,16 @@ class Heartbeat:
     def count(self) -> int:
         with self._lock:
             return self._count
+
+    @property
+    def last_wall_s(self) -> float:
+        with self._lock:
+            return self._last_wall_s
+
+    @property
+    def total_wall_s(self) -> float:
+        with self._lock:
+            return self._total_wall_s
 
 
 class HeartbeatMonitor:

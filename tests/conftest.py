@@ -3,10 +3,41 @@
 Sub-suites (``tests/conformance/``) import the shared generator module as
 ``import strategies``; pytest only auto-inserts a test file's OWN dirname,
 so the tests root is pinned onto sys.path here for every collected file.
+
+Also bounds the process's virtual-memory-area count: every jitted
+executable XLA:CPU compiles holds several mmap regions for the life of the
+jit cache, and a full-suite run accumulates enough distinct shapes to hit
+the kernel's default ``vm.max_map_count`` (65530) — at which point mmap
+fails inside LLVM and the NEXT compile segfaults.  A module-boundary
+fixture watches ``/proc/self/maps`` and drops the jit caches before the
+cliff; shapes recompile on demand, results are unaffected.
 """
 import sys
 from pathlib import Path
 
+import pytest
+
 _TESTS_ROOT = str(Path(__file__).resolve().parent)
 if _TESTS_ROOT not in sys.path:
     sys.path.insert(0, _TESTS_ROOT)
+
+# Comfortably below the 65530 default: the biggest single module grows the
+# map count by ~10k, so clearing at 35k keeps peak usage under ~50k.
+_VMA_CLEAR_THRESHOLD = 35_000
+
+
+def _vma_count() -> int:
+    try:
+        with open("/proc/self/maps") as f:
+            return sum(1 for _ in f)
+    except OSError:  # non-Linux: no /proc — never trigger
+        return 0
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_vma_usage():
+    yield
+    if _vma_count() > _VMA_CLEAR_THRESHOLD:
+        import jax
+
+        jax.clear_caches()

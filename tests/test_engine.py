@@ -1,0 +1,264 @@
+"""QueryEngine tests: admission, batching policy, deadlines, faults.
+
+The contract under test (repro.serve.engine): concurrent ``await
+engine.search(...)`` callers get EXACTLY the ``SearchResult`` their own
+single-query ``hd.search()`` would return — the engine's admission
+batching is a throughput optimization, never a semantics change — and
+every failure mode surfaces as a typed ``ReliabilityError``.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.index import search
+from repro.reliability import Fault, inject
+from repro.reliability.errors import InjectedFault, Overloaded
+from repro.serve.engine import EngineConfig, QueryEngine
+from repro.serve.server import ProHDService, ServeConfig
+from strategies import ragged_corpus
+
+pytestmark = pytest.mark.multiquery
+
+K = 4
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+@pytest.fixture(scope="module")
+def served():
+    sets, rng = ragged_corpus(17, n_sets=20, d=4, max_n=16)
+    svc = ProHDService(ServeConfig(retry_backoff_s=0.0))
+    for s in sets:
+        svc.add_set(s)
+    qs = [
+        (np.asarray(sets[i]).mean(axis=0) + rng.randn(n_q, 4) * 0.5).astype(
+            np.float32
+        )
+        for i, n_q in ((0, 9), (4, 9), (9, 9), (14, 9), (2, 3))
+    ]
+    return svc, qs
+
+
+def test_concurrent_searches_bitwise_and_batched(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.05))
+        try:
+            return eng, await asyncio.gather(*[eng.search(q, K) for q in qs[:4]])
+        finally:
+            await eng.close()
+
+    eng, results = _run(main())
+    for q, r in zip(qs[:4], results):
+        single = search(q, svc.store, K)
+        np.testing.assert_array_equal(r.ids, single.ids)
+        np.testing.assert_array_equal(r.values, single.values)
+        assert not r.degraded
+    # all four share one shape class → ONE search_batch flush
+    assert eng.stats["flushes"] == 1
+    assert eng.stats["batched_queries"] == 4
+
+
+def test_shape_classes_flush_separately(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.05))
+        try:
+            # qs[4] has n_q=3 → a different bucket capacity than the 9-point
+            # queries → its own class, its own flush
+            return eng, await asyncio.gather(
+                eng.search(qs[0], K), eng.search(qs[4], K)
+            )
+        finally:
+            await eng.close()
+
+    eng, (r9, r3) = _run(main())
+    assert eng.stats["flushes"] == 2
+    np.testing.assert_array_equal(r3.ids, search(qs[4], svc.store, K).ids)
+
+
+def test_max_batch_flushes_immediately(served):
+    svc, qs = served
+
+    async def main():
+        # max_wait_s far beyond the test budget: ONLY the max_batch
+        # trigger can flush these — proves the size trigger works
+        eng = QueryEngine(svc, EngineConfig(max_batch=4, max_wait_s=60.0))
+        try:
+            return eng, await asyncio.wait_for(
+                asyncio.gather(*[eng.search(q, K) for q in qs[:4]]), timeout=30
+            )
+        finally:
+            await eng.close()
+
+    eng, results = _run(main())
+    assert eng.stats["flushes"] == 1
+    assert all(not r.degraded for r in results)
+
+
+def test_overloaded_backpressure(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig(max_queue=2, max_wait_s=0.2))
+        try:
+            t1 = asyncio.ensure_future(eng.search(qs[0], K))
+            t2 = asyncio.ensure_future(eng.search(qs[1], K))
+            await asyncio.sleep(0)  # let both enqueue
+            with pytest.raises(Overloaded) as exc:
+                await eng.search(qs[2], K)
+            assert exc.value.pending == 2 and exc.value.limit == 2
+            # the two admitted queries still complete exactly
+            r1, r2 = await asyncio.gather(t1, t2)
+            assert not r1.degraded and not r2.degraded
+        finally:
+            await eng.close()
+
+    _run(main())
+
+
+def test_per_query_deadline_and_topup(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.05))
+        try:
+            # same batch: one member with an already-expired deadline, one
+            # unbounded — the batch runs under the min deadline but the
+            # unbounded member must be topped up to an exact result
+            a = asyncio.ensure_future(eng.search(qs[0], K, deadline_s=0.0))
+            b = asyncio.ensure_future(eng.search(qs[1], K))
+            return eng, await asyncio.gather(a, b)
+        finally:
+            await eng.close()
+
+    eng, (ra, rb) = _run(main())
+    assert ra.degraded
+    assert np.all(ra.lower <= ra.upper) and ra.ids.size == K
+    assert not rb.degraded
+    single = search(qs[1], svc.store, K)
+    np.testing.assert_array_equal(rb.ids, single.ids)
+    np.testing.assert_array_equal(rb.values, single.values)
+    assert eng.stats["topups"] >= 1
+
+
+def test_transient_fault_retried(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.01, retry_backoff_s=0.0))
+        try:
+            with inject(Fault("engine.flush", action="raise", once=True)):
+                return await eng.search(qs[0], K)
+        finally:
+            await eng.close()
+
+    r = _run(main())
+    np.testing.assert_array_equal(r.ids, search(qs[0], svc.store, K).ids)
+    assert not r.degraded
+
+
+def test_persistent_fault_surfaces_typed(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(
+            svc, EngineConfig(max_wait_s=0.01, max_retries=1, retry_backoff_s=0.0)
+        )
+        try:
+            with inject(Fault("engine.flush", action="raise")):
+                with pytest.raises(InjectedFault):
+                    await eng.search(qs[0], K)
+        finally:
+            await eng.close()
+
+    _run(main())
+
+
+def test_admission_validation(served):
+    svc, qs = served
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig())
+        try:
+            with pytest.raises(ValueError, match="k"):
+                await eng.search(qs[0], 0)
+            with pytest.raises(ValueError, match="variant"):
+                await eng.search(qs[0], K, variant="chamfer")
+            with pytest.raises(ValueError, match="query"):
+                await eng.search(np.zeros((3, 9), np.float32), K)
+            bad = qs[0].copy()
+            bad[0, 0] = np.inf
+            with pytest.raises(ValueError, match="non-finite"):
+                await eng.search(bad, K)
+        finally:
+            await eng.close()
+
+    _run(main())
+    with pytest.raises(ValueError, match="corpus"):
+        QueryEngine(ProHDService(), EngineConfig())
+
+
+def test_engine_survives_loop_boundary(served):
+    # one engine object across two asyncio.run() loops: the flusher task
+    # and wake event rebind lazily to the running loop
+    svc, qs = served
+    eng = QueryEngine(svc, EngineConfig(max_wait_s=0.01))
+
+    async def one(q, last=False):
+        # no close() between loops — asyncio.run() tears the first loop's
+        # flusher down; the next search must rebind, not hang
+        try:
+            return await eng.search(q, K)
+        finally:
+            if last:
+                await eng.close()
+
+    r1 = _run(one(qs[0]))
+    r2 = _run(one(qs[1], last=True))
+    np.testing.assert_array_equal(r1.ids, search(qs[0], svc.store, K).ids)
+    np.testing.assert_array_equal(r2.ids, search(qs[1], svc.store, K).ids)
+
+
+# -- satellite: per-request wall time in the heartbeat payload --------------
+
+
+def test_heartbeat_reports_wall_time(served):
+    svc, qs = served
+    svc.heartbeat.beat()  # wall-free beat: payload must not change
+    base_total = svc.heartbeat.total_wall_s
+
+    async def main():
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.01))
+        try:
+            await eng.search(qs[0], K)
+            mid = svc.heartbeat.total_wall_s
+            await eng.search(qs[1], K)
+            return mid
+        finally:
+            await eng.close()
+
+    mid = _run(main())
+    hb = svc.heartbeat
+    # field exists, is per-request, and the running total is monotone
+    assert hb.last_wall_s > 0.0
+    assert base_total <= mid <= hb.total_wall_s
+    assert hb.total_wall_s > base_total
+
+
+def test_service_flush_heartbeat_wall_time(served):
+    svc, qs = served
+    before_count = svc.heartbeat.count
+    before_total = svc.heartbeat.total_wall_s
+    rid_s = svc.submit_search(qs[0], K)
+    rid_p = svc.submit(qs[0], qs[1])
+    out = svc.flush()
+    assert set(out) == {rid_s, rid_p}
+    assert svc.heartbeat.count == before_count + 2
+    assert svc.heartbeat.total_wall_s > before_total
+    assert svc.heartbeat.last_wall_s > 0.0

@@ -96,6 +96,46 @@ def test_invariant_at_every_point(point, action, corpus, tmp_path):
         np.testing.assert_array_equal(res.values, exact_top.values)
         return
 
+    if point.startswith("engine."):
+        # engine points only fire on the QueryEngine's async flush path —
+        # route the query through it (new declare_points in
+        # repro.serve.engine enroll here automatically)
+        import asyncio
+
+        from repro.serve.engine import EngineConfig, QueryEngine
+
+        svc = _service(sets, max_retries=1)
+
+        async def run():
+            eng = QueryEngine(
+                svc,
+                EngineConfig(max_wait_s=0.0, max_retries=1, retry_backoff_s=0.0),
+            )
+            try:
+                return await eng.search(
+                    q, K, deadline_s=0.01 if action == "slow" else None
+                )
+            finally:
+                await eng.close()
+
+        try:
+            with inject(fault):
+                res = asyncio.run(run())
+        except ReliabilityError:
+            return  # typed — the awaiter knows exactly what failed
+        _assert_sound(
+            {
+                "ids": res.ids.tolist(),
+                "values": res.values.tolist(),
+                "lower": res.lower.tolist(),
+                "upper": res.upper.tolist(),
+                "degraded": res.degraded,
+            },
+            truth,
+            exact_top,
+        )
+        return
+
     # every other point is reachable through the service front door; a
     # tight deadline makes "slow" observable as degradation instead of a
     # stalled test
