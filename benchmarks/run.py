@@ -13,11 +13,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
 
 DEFAULT_JSON = "BENCH_PR1.json"
+
+# Version of the --json payload's structure (meta/rows/findings + the
+# host fingerprint).  Bump on any change a cross-PR diff tool would have
+# to branch on.
+BENCH_SCHEMA_VERSION = 2
 
 
 def _parse_row(row: str) -> dict:
@@ -25,12 +31,48 @@ def _parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
+def _host_fingerprint(jax) -> dict:
+    """Where these numbers came from: two runs with different fingerprints
+    are not directly comparable and a diff tool should say so."""
+    dev = jax.devices()[0]
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+    }
+
+
+def _git_rev() -> str:
+    import subprocess
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=repo,
+        )
+        rev = out.stdout.strip()
+        if out.returncode == 0 and rev:
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"],
+                capture_output=True, text=True, timeout=10, cwd=repo,
+            )
+            return rev + ("-dirty" if dirty.stdout.strip() else "")
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery",
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery,obs",
     )
     ap.add_argument(
         "--quick", action="store_true", help="fig1 + phases + fused only"
@@ -65,6 +107,7 @@ def main() -> None:
         "bucket_kernel": tables.bench_bucket_kernel,
         "reliability": tables.bench_reliability,
         "multiquery": tables.bench_multiquery,
+        "obs": tables.bench_obs,
     }
     if args.quick:
         selected = ["fig1", "phases", "fused"]
@@ -96,11 +139,10 @@ def main() -> None:
     if args.json:
         payload = {
             "meta": {
+                "schema": BENCH_SCHEMA_VERSION,
                 "benches": selected,
-                "backend": jax.default_backend(),
-                "jax": jax.__version__,
-                "python": platform.python_version(),
-                "platform": platform.platform(),
+                "host": _host_fingerprint(jax),
+                "git_rev": _git_rev(),
                 "unix_time": int(time.time()),
             },
             "rows": [_parse_row(r) for r in all_rows],

@@ -873,3 +873,133 @@ def bench_multiquery(n_sets: int = 5000, d: int = 16, k: int = 10) -> list[str]:
         f"{stats['dedup_hit_rate']:.2f}, identical top-k: {identical}"
     )
     return rows
+
+
+def bench_obs(n_sets: int = 5000, d: int = 16, k: int = 10) -> list[str]:
+    """PR 8 tentpole: the repro.obs tracing layer's overhead contract.
+
+    The same 5k-set clustered corpus and query as ``bench_index``, timed
+    three ways with interleaved min-reduced timers:
+
+    - ``obs/cascade_disabled`` — ``search()`` with tracing OFF, i.e. the
+      instrumented hot path paying only the no-op fast path (one module
+      flag check + a shared inert span object per site);
+    - ``obs/selfnoise`` — the disabled call timed again as an independent
+      contender; the deviation of the two floors' ratio from 1.0 is the
+      session's timing-noise floor;
+    - ``obs/cascade_enabled`` — the same call with tracing ON (in-memory
+      collector, no JSONL), the full cost of real spans + the metrics
+      fold.  ``scripts/check.sh`` gates enabled overhead < 15% vs
+      disabled, within the self-measured noise.
+
+    ``obs/noop_site`` microbenchmarks one disabled instrumentation site
+    (``with span(name, attr=..)``) directly; its derived field carries the
+    estimated whole-search no-op overhead (sites x ns / search time),
+    which check.sh gates < 5% — the "disabled by default costs nothing"
+    half of the contract.  A schema-validated capture of one enabled
+    search feeds the per-stage latency table appended to the findings.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.data.pointclouds import clustered_sets
+    from repro.hd import search
+    from repro.index import SetStore
+    from repro.obs import export as _export
+    from repro.obs import report as _report
+    from repro.obs import trace as _trace
+
+    key = jax.random.fold_in(KEY, 3141)
+    sets, _labels = clustered_sets(key, n_sets, d, sizes=(64, 128, 256))
+    store = SetStore(dim=d)
+    store.add_many(sets)
+    store.summaries()
+    store.packed_buckets()
+    qrng = np.random.RandomState(7)
+    q = np.asarray(sets[0]).mean(axis=0) + qrng.randn(128, d).astype(np.float32) * 0.5
+
+    def run():
+        return search(q, store, k)
+
+    run()  # compile outside every measured region
+
+    # one enabled, schema-validated capture for the span census + table
+    with _trace.capture() as get_events:
+        run()
+        captured = get_events()
+    try:
+        summary = _export.validate_events(captured)
+        schema_valid = True
+    except _export.SchemaError:
+        summary = {"rids": []}
+        schema_valid = False
+    n_spans = sum(1 for e in captured if e["type"] == "span")
+    n_events = len(captured) - n_spans
+
+    timers = ("disabled", "selfnoise", "enabled")
+    floor = {t: float("inf") for t in timers}
+    for _ in range(5):
+        for tname in timers:
+            if tname == "enabled":
+                _trace.enable()
+            t0 = _time.perf_counter()
+            run()
+            dt = _time.perf_counter() - t0
+            if tname == "enabled":
+                _trace.disable()
+                _trace.drain()
+            floor[tname] = min(floor[tname], dt)
+
+    noise = abs(floor["selfnoise"] / floor["disabled"] - 1.0)
+    enabled_pct = (floor["enabled"] / floor["disabled"] - 1.0) * 100.0
+
+    # no-op site microbench: the per-site cost tracing-off, net of loop
+    # overhead.  SITES is a deliberate overcount of the spans+events one
+    # search() traverses (root + 4 stages + resolution/stats sites).
+    iters = 200_000
+    t0 = _time.perf_counter()
+    for _ in range(iters):
+        pass
+    t_empty = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    for _ in range(iters):
+        with _trace.span("obs.noop_site", n=iters):
+            pass
+    t_site = _time.perf_counter() - t0
+    site_ns = max(t_site - t_empty, 0.0) / iters * 1e9
+    SITES = 16
+    noop_pct = SITES * site_ns * 1e-9 / floor["disabled"] * 100.0
+
+    rows = [
+        csv_row(
+            "obs/cascade_disabled", floor["disabled"] * 1e6,
+            f"n_sets={n_sets};k={k};tracing=off",
+        ),
+        csv_row(
+            "obs/selfnoise", floor["selfnoise"] * 1e6,
+            f"noise_floor={noise:.4f}",
+        ),
+        csv_row(
+            "obs/cascade_enabled", floor["enabled"] * 1e6,
+            f"overhead_vs_disabled_pct={enabled_pct:.2f};spans={n_spans};"
+            f"events={n_events};rids={len(summary['rids'])};"
+            f"schema_valid={schema_valid}",
+        ),
+        csv_row(
+            "obs/noop_site", site_ns / 1e3,
+            f"site_ns={site_ns:.1f};sites_per_search={SITES};"
+            f"est_noop_overhead_pct={noop_pct:.4f}",
+        ),
+    ]
+    REPORT.append(
+        f"obs ({n_sets} sets, k={k}): disabled {floor['disabled']*1e3:.2f}ms, "
+        f"enabled {floor['enabled']*1e3:.2f}ms ({enabled_pct:+.1f}%, gate < 15% "
+        f"within noise {noise:.3f}); no-op site {site_ns:.0f}ns -> estimated "
+        f"disabled overhead {noop_pct:.3f}% (gate < 5%); one search = "
+        f"{n_spans} spans + {n_events} events, single rid: "
+        f"{len(summary['rids']) == 1}, schema valid: {schema_valid}"
+    )
+    for line in _report.stage_table(captured).splitlines():
+        REPORT.append(line)
+    return rows

@@ -237,3 +237,47 @@ assert ratio >= 2.0 * (1.0 - grace), (
     f"(gate >= 2.0x within noise {noise:.3f})")
 PY
 fi
+
+# PR 8 gates.
+# (a) Observability test slice (marker: obs): tracing layer contract,
+#     connected per-request span trees across the engine's async/executor
+#     boundaries, the fault.fired correlation sweep at every injection
+#     point, and zero-emission disabled mode.  Zero collected tests
+#     (pytest exit 5) fails the gate.
+echo "== obs test slice =="
+python -m pytest -q -m obs tests/test_obs.py tests/test_fault_injection.py
+
+# (b) Overhead + schema: tracing DISABLED (the default) must cost < 5%
+#     estimated on the 5k-set cascade bench (no-op site cost x sites per
+#     search); tracing ENABLED < 15% vs disabled, within the run's
+#     self-measured noise floor; and one enabled search's capture must be
+#     schema-valid with a single connected rid -> BENCH_PR8.json.
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  echo "== obs benchmark (JSON -> BENCH_PR8.json) =="
+  python -m benchmarks.run --only obs --json BENCH_PR8.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR8.json"))["rows"]}
+d = {n: dict(kv.split("=", 1) for kv in r["derived"].split(";"))
+     for n, r in rows.items()}
+noise = float(d["obs/selfnoise"]["noise_floor"])
+noop_pct = float(d["obs/noop_site"]["est_noop_overhead_pct"])
+enabled_pct = float(d["obs/cascade_enabled"]["overhead_vs_disabled_pct"])
+grace = max(noise, 0.02) * 100.0
+print(f"obs disabled: estimated no-op overhead {noop_pct:.4f}% "
+      f"(site {d['obs/noop_site']['site_ns']}ns x "
+      f"{d['obs/noop_site']['sites_per_search']} sites; gate < 5%)")
+print(f"obs enabled: {enabled_pct:+.2f}% vs disabled "
+      f"(gate < 15% within noise floor {noise:.3f})")
+assert noop_pct < 5.0, (
+    f"disabled-mode no-op overhead estimate {noop_pct:.3f}% exceeds the 5% budget")
+assert enabled_pct < 15.0 + grace, (
+    f"enabled tracing overhead {enabled_pct:.2f}% exceeds 15% "
+    f"(+{grace:.1f}% noise grace)")
+assert d["obs/cascade_enabled"]["schema_valid"] == "True", (
+    "enabled capture failed JSONL schema validation")
+assert d["obs/cascade_enabled"]["rids"] == "1", (
+    "one search did not yield a single-rid span tree")
+PY
+fi

@@ -92,6 +92,8 @@ from repro.hd import resolver
 from repro.hd.config import HDConfig
 from repro.hd.result import HDMeta
 from repro.index.store import SetStore, SetSummary, bucket_capacity
+from repro.obs import trace as _obs
+from repro.obs.metrics import record_stats as _record_stats
 from repro.reliability import faults as _faults
 from repro.reliability.errors import BackendUnavailable
 
@@ -335,14 +337,15 @@ def _stage1_batch(
     resolved masked reduction (``EXACT_MASKED_BACKENDS``) — stage 1 rides
     the same kernel family as stage 2a.
     """
-    va = jnp.ones((q.shape[0],), jnp.bool_)
+    with jax.named_scope("cascade.stage1_batch"):
+        va = jnp.ones((q.shape[0],), jnp.bool_)
 
-    def one(p, v):
-        return masked.masked_prohd_certified(
-            q, va, p, v, alpha=alpha, m=m, directed=directed, backend=backend
-        )
+        def one(p, v):
+            return masked.masked_prohd_certified(
+                q, va, p, v, alpha=alpha, m=m, directed=directed, backend=backend
+            )
 
-    return jax.vmap(one)(pts, valid)
+        return jax.vmap(one)(pts, valid)
 
 
 @functools.partial(
@@ -372,10 +375,11 @@ def _stage2_batch(
     in-kernel (``pl.when``); the pure-JAX routes compute every lane and
     apply the gate as a lane select (shape-static vmap cannot drop work).
     """
-    return masked.masked_exact_hd_batched(
-        q, pts, valid_slab=valid, lb=gate_lb, cut=gate_cut,
-        directed=directed, backend=backend, block_a=block_a, block_b=block_b,
-    )
+    with jax.named_scope("cascade.stage2_batch"):
+        return masked.masked_exact_hd_batched(
+            q, pts, valid_slab=valid, lb=gate_lb, cut=gate_cut,
+            directed=directed, backend=backend, block_a=block_a, block_b=block_b,
+        )
 
 
 def _kth_smallest(ub: np.ndarray, k: int) -> float:
@@ -407,6 +411,47 @@ def _exact_value(query, pts, variant: str, backend: str, cfg: HDConfig) -> np.fl
 
 
 def search(
+    query,
+    store: SetStore,
+    k: int,
+    *,
+    variant: str = "hausdorff",
+    method: str = "cascade",
+    backend: str = "auto",
+    stage2: str = "batched",
+    masked_backend: str | None = None,
+    config: HDConfig | None = None,
+    measure: bool = False,
+    deadline_s: float | None = None,
+    on_fault: str = "degrade",
+    validate: bool = True,
+) -> SearchResult:
+    # Observability shim: when tracing is off this is ONE flag check on top
+    # of the implementation; when on, the whole request runs under a root
+    # "index.search" span (fresh rid unless an engine/server frame is
+    # ambient) with the cascade stages as children.
+    kwargs = dict(
+        variant=variant, method=method, backend=backend, stage2=stage2,
+        masked_backend=masked_backend, config=config, measure=measure,
+        deadline_s=deadline_s, on_fault=on_fault, validate=validate,
+    )
+    if not _obs.enabled():
+        return _search_impl(query, store, k, **kwargs)
+    with _obs.span(
+        "index.search", k=k, variant=variant, method=method, stage2=stage2
+    ) as sp:
+        res = _search_impl(query, store, k, **kwargs)
+        sp.set(
+            degraded=res.degraded,
+            stage_reached=res.stage_reached,
+            exact_refines=res.stats.get("exact_refines", 0),
+            prune_fraction=res.stats.get("prune_fraction"),
+        )
+        _record_stats("index.search", res.stats)
+        return res
+
+
+def _search_impl(
     query,
     store: SetStore,
     k: int,
@@ -553,6 +598,10 @@ def search(
             variant, "exact", int(q.shape[0]), int(store.counts().max()),
             store.dim, device_kind=device_kind,
         )
+    _obs.event(
+        "cascade.backend_resolved", masked_backend=mb,
+        refine_backend=refine_backend, device_kind=device_kind,
+    )
 
     def _with_backend(call):
         """call(backend) under the fallback ladder; returns its result."""
@@ -564,6 +613,10 @@ def search(
             except BackendUnavailable:
                 backend_fallbacks.append(be)
                 available.pop(0)
+                _obs.event(
+                    "cascade.backend_fallback", failed=be,
+                    next=available[0] if available else None,
+                )
                 if not available:
                     raise
 
@@ -613,18 +666,20 @@ def search(
         # Always runs, deadline or not: it is the cheapest certified state
         # and the floor of the degradation ladder.  A failure HERE has no
         # certified state to fall back to, so it propagates (typed).
-        _faults.fire(_POINT_STAGE0)
-        qsum = store.summarize(q)
-        lb_j, ub_j = _interval_bounds_jit(qsum, store.summaries(), directed=directed)
-        scale = np.asarray(_bound_scale_jit(qsum, store.summaries()), np.float64)
-        lb_j, ub_j = certified_margins(lb_j, ub_j, jnp.asarray(scale), store.dim)
-        lb = np.asarray(lb_j, np.float64)
-        ub = np.asarray(ub_j, np.float64)
+        with _obs.span("cascade.stage0", n=n) as _sp0:
+            _faults.fire(_POINT_STAGE0)
+            qsum = store.summarize(q)
+            lb_j, ub_j = _interval_bounds_jit(qsum, store.summaries(), directed=directed)
+            scale = np.asarray(_bound_scale_jit(qsum, store.summaries()), np.float64)
+            lb_j, ub_j = certified_margins(lb_j, ub_j, jnp.asarray(scale), store.dim)
+            lb = np.asarray(lb_j, np.float64)
+            ub = np.asarray(ub_j, np.float64)
 
-        tau = _kth_smallest(ub, k_eff)
-        alive = lb <= tau
-        stats["stage0_pruned"] = int(n - alive.sum())
-        stats["stage1_pruned"] = 0
+            tau = _kth_smallest(ub, k_eff)
+            alive = lb <= tau
+            stats["stage0_pruned"] = int(n - alive.sum())
+            stats["stage1_pruned"] = 0
+            _sp0.set(pruned=stats["stage0_pruned"])
 
         # Work accounting (see stage-2 comment below); initialized before
         # the degradable region so a degraded return still reports it.
@@ -637,54 +692,60 @@ def search(
             frontier is empty — the WHOLE of sequential mode, and stage 2b
             of batched mode (one shared loop so the modes cannot diverge)."""
             nonlocal alive, stage2_calls, stage_reached
-            _faults.fire(_POINT_STAGE2B)
-            while True:
-                tau = _kth_smallest(ub, k_eff)
-                alive &= lb <= tau
-                frontier = np.nonzero(alive & ~resolved)[0]
-                if frontier.size == 0:
-                    return
-                checkpoint()
-                sid = int(frontier[np.lexsort((frontier, lb[frontier]))[0]])
-                refine(sid)
-                stage2_shapes.add((store.get(sid).shape[0],))
-                stage2_calls += 1
-                lb[sid] = ub[sid] = float(values[sid])
-                stage_reached = "stage2b"
+            with _obs.span("cascade.stage2b") as _sp2b:
+                _faults.fire(_POINT_STAGE2B)
+                refines = 0
+                while True:
+                    tau = _kth_smallest(ub, k_eff)
+                    alive &= lb <= tau
+                    frontier = np.nonzero(alive & ~resolved)[0]
+                    if frontier.size == 0:
+                        _sp2b.set(refines=refines)
+                        return
+                    checkpoint()
+                    sid = int(frontier[np.lexsort((frontier, lb[frontier]))[0]])
+                    refine(sid)
+                    stage2_shapes.add((store.get(sid).shape[0],))
+                    stage2_calls += 1
+                    refines += 1
+                    lb[sid] = ub[sid] = float(values[sid])
+                    stage_reached = "stage2b"
 
         try:
             # -- stage 1: vmapped bucketed masked ProHD on the survivors --
             if int(alive.sum()) > k_eff:
-                checkpoint()
-                _faults.fire(_POINT_STAGE1)
-                m = projections.default_num_directions(store.dim)
-                for bucket in store.packed_buckets().values():
-                    rows = np.nonzero(alive[bucket.set_ids])[0]
-                    if rows.size == 0:
-                        continue
+                with _obs.span("cascade.stage1", frontier=int(alive.sum())) as _sp1:
                     checkpoint()
-                    take = _pow2_take(rows)
-                    cert = _with_backend(lambda be: _stage1_batch(
-                        q,
-                        jnp.take(bucket.points, take, axis=0),
-                        jnp.take(bucket.valid, take, axis=0),
-                        alpha=cfg.alpha, m=m, directed=directed, backend=be,
-                    ))
-                    lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
-                    sids = bucket.set_ids[rows]
-                    lb1, ub1 = certified_margins(
-                        lo1.astype(np.float64)[: rows.size],
-                        np.asarray(cert.upper, np.float64)[: rows.size],
-                        scale[sids],
-                        store.dim,
-                    )
-                    lb[sids] = np.maximum(lb[sids], lb1)
-                    ub[sids] = np.minimum(ub[sids], ub1)
-                    stage_reached = "stage1"
-                tau = _kth_smallest(ub, k_eff)
-                still = alive & (lb <= tau)
-                stats["stage1_pruned"] = int(alive.sum() - still.sum())
-                alive = still
+                    _faults.fire(_POINT_STAGE1)
+                    m = projections.default_num_directions(store.dim)
+                    for bucket in store.packed_buckets().values():
+                        rows = np.nonzero(alive[bucket.set_ids])[0]
+                        if rows.size == 0:
+                            continue
+                        checkpoint()
+                        take = _pow2_take(rows)
+                        cert = _with_backend(lambda be: _stage1_batch(
+                            q,
+                            jnp.take(bucket.points, take, axis=0),
+                            jnp.take(bucket.valid, take, axis=0),
+                            alpha=cfg.alpha, m=m, directed=directed, backend=be,
+                        ))
+                        lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
+                        sids = bucket.set_ids[rows]
+                        lb1, ub1 = certified_margins(
+                            lo1.astype(np.float64)[: rows.size],
+                            np.asarray(cert.upper, np.float64)[: rows.size],
+                            scale[sids],
+                            store.dim,
+                        )
+                        lb[sids] = np.maximum(lb[sids], lb1)
+                        ub[sids] = np.minimum(ub[sids], ub1)
+                        stage_reached = "stage1"
+                    tau = _kth_smallest(ub, k_eff)
+                    still = alive & (lb <= tau)
+                    stats["stage1_pruned"] = int(alive.sum() - still.sum())
+                    alive = still
+                    _sp1.set(pruned=stats["stage1_pruned"])
 
             # -- stage 2: exact refinement of the frontier ----------------
             # Both modes drain the frontier under the same certified prune
@@ -709,74 +770,79 @@ def search(
                 # per-candidate dispatch.  Final values still come from
                 # stage 2b's raw refines, so batching cannot perturb a bit
                 # of the output.
-                checkpoint()
-                _faults.fire(_POINT_STAGE2A)
-                slot = store.slot_index()
-                buckets = store.packed_buckets()
-                n_q = int(q.shape[0])
-                tau = _kth_smallest(ub, k_eff)
-                alive &= lb <= tau
-                frontier = np.nonzero(alive & ~resolved)[0]
-                groups: dict[int, list[int]] = {}
-                for sid in frontier:
-                    groups.setdefault(slot[int(sid)][0], []).append(int(sid))
-                # Ascending best-lower-bound bucket order, re-deriving τ
-                # between buckets: one bucket's tight intervals prune the
-                # next bucket's stragglers, preserving the sequential
-                # loop's adaptivity at batch granularity.
-                for cap in sorted(groups, key=lambda c: min(lb[s] for s in groups[c])):
-                    tau = _kth_smallest(ub, k_eff)
-                    sids = [s for s in groups[cap] if lb[s] <= tau]
-                    if not sids:
-                        continue
+                with _obs.span("cascade.stage2a") as _sp2a:
                     checkpoint()
-                    stats["stage2_batched_candidates"] += len(sids)
-                    bucket = buckets[cap]
-                    rows = np.asarray([slot[s][1] for s in sids])
-                    take = _pow2_take(rows)
-                    batch = int(take.shape[0])
-                    # Per-set prune gate: every real lane carries its
-                    # certified stage-0/1 lower bound against a cutoff
-                    # safely ABOVE τ (1e-6 relative headroom dwarfs the
-                    # float32 cast error, so a lane with lb ≤ τ in float64
-                    # can never be skipped by the cast — a skip is always
-                    # certified lb > τ); the pow2 batch-padding duplicate
-                    # lanes ride in with lb = +inf and are gated
-                    # unconditionally — which saves their GEMMs in-kernel
-                    # on the Pallas route (the pure-JAX routes still
-                    # compute them and select the sentinel).
-                    gate_lb = np.concatenate(
-                        [lb[sids], np.full((batch - rows.size,), np.inf)]
-                    ).astype(np.float32)
-                    gate_cut = np.full(
-                        (batch,),
-                        tau * (1.0 + 1e-6) if np.isfinite(tau) else np.inf,
-                        np.float32,
+                    _faults.fire(_POINT_STAGE2A)
+                    slot = store.slot_index()
+                    buckets = store.packed_buckets()
+                    n_q = int(q.shape[0])
+                    tau = _kth_smallest(ub, k_eff)
+                    alive &= lb <= tau
+                    frontier = np.nonzero(alive & ~resolved)[0]
+                    groups: dict[int, list[int]] = {}
+                    for sid in frontier:
+                        groups.setdefault(slot[int(sid)][0], []).append(int(sid))
+                    # Ascending best-lower-bound bucket order, re-deriving τ
+                    # between buckets: one bucket's tight intervals prune the
+                    # next bucket's stragglers, preserving the sequential
+                    # loop's adaptivity at batch granularity.
+                    for cap in sorted(groups, key=lambda c: min(lb[s] for s in groups[c])):
+                        tau = _kth_smallest(ub, k_eff)
+                        sids = [s for s in groups[cap] if lb[s] <= tau]
+                        if not sids:
+                            continue
+                        checkpoint()
+                        stats["stage2_batched_candidates"] += len(sids)
+                        bucket = buckets[cap]
+                        rows = np.asarray([slot[s][1] for s in sids])
+                        take = _pow2_take(rows)
+                        batch = int(take.shape[0])
+                        # Per-set prune gate: every real lane carries its
+                        # certified stage-0/1 lower bound against a cutoff
+                        # safely ABOVE τ (1e-6 relative headroom dwarfs the
+                        # float32 cast error, so a lane with lb ≤ τ in float64
+                        # can never be skipped by the cast — a skip is always
+                        # certified lb > τ); the pow2 batch-padding duplicate
+                        # lanes ride in with lb = +inf and are gated
+                        # unconditionally — which saves their GEMMs in-kernel
+                        # on the Pallas route (the pure-JAX routes still
+                        # compute them and select the sentinel).
+                        gate_lb = np.concatenate(
+                            [lb[sids], np.full((batch - rows.size,), np.inf)]
+                        ).astype(np.float32)
+                        gate_cut = np.full(
+                            (batch,),
+                            tau * (1.0 + 1e-6) if np.isfinite(tau) else np.inf,
+                            np.float32,
+                        )
+
+                        def _call_2a(be):
+                            block_a, block_b = resolver.resolve_block_sizes(
+                                n_q, cap, store.dim, device_kind=device_kind,
+                                backend="fused_pallas" if be == "batched_pallas" else "tiled",
+                            )
+                            return be, block_a, block_b, _stage2_batch(
+                                q,
+                                jnp.take(bucket.points, take, axis=0),
+                                jnp.take(bucket.valid, take, axis=0),
+                                jnp.asarray(gate_lb),
+                                jnp.asarray(gate_cut),
+                                directed=directed, backend=be,
+                                block_a=block_a, block_b=block_b,
+                            )
+
+                        used_be, _, _, raw_vals = _with_backend(_call_2a)
+                        vals = np.asarray(raw_vals, np.float64)[: rows.size]
+                        pad = fp_value_margin(store.dim, scale[sids], vals)
+                        lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
+                        ub[sids] = np.minimum(ub[sids], vals + pad)
+                        stage2_shapes.add((cap, batch, used_be))
+                        stage2_calls += 1
+                        stage_reached = "stage2a"
+                    _sp2a.set(
+                        batched_candidates=stats["stage2_batched_candidates"],
+                        calls=stage2_calls,
                     )
-
-                    def _call_2a(be):
-                        block_a, block_b = resolver.resolve_block_sizes(
-                            n_q, cap, store.dim, device_kind=device_kind,
-                            backend="fused_pallas" if be == "batched_pallas" else "tiled",
-                        )
-                        return be, block_a, block_b, _stage2_batch(
-                            q,
-                            jnp.take(bucket.points, take, axis=0),
-                            jnp.take(bucket.valid, take, axis=0),
-                            jnp.asarray(gate_lb),
-                            jnp.asarray(gate_cut),
-                            directed=directed, backend=be,
-                            block_a=block_a, block_b=block_b,
-                        )
-
-                    used_be, _, _, raw_vals = _with_backend(_call_2a)
-                    vals = np.asarray(raw_vals, np.float64)[: rows.size]
-                    pad = fp_value_margin(store.dim, scale[sids], vals)
-                    lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
-                    ub[sids] = np.minimum(ub[sids], vals + pad)
-                    stage2_shapes.add((cap, batch, used_be))
-                    stage2_calls += 1
-                    stage_reached = "stage2a"
                 # -- 2b: raw exact resolution of whatever still straddles
                 # the top-k boundary — after 2a that is ≈ k candidates
                 # (+ exact ties), each refined on its RAW points so the
@@ -831,7 +897,14 @@ def search(
         stats["n_resolved"] = int(resolved.sum())
         stats["deadline_s"] = deadline_s
         if fault is not None:
-            stats["fault"] = f"{type(fault).__name__}: {fault}"
+            # Structured: the full __cause__ chain, outermost first — a
+            # wrapped root cause survives into logs and span events (the
+            # historical one-string flattening lost it).
+            stats["fault"] = _obs.exception_chain(fault)
+            _obs.event(
+                "cascade.fault", error=True,
+                stage=stage_reached, chain=stats["fault"],
+            )
 
     elapsed = time.perf_counter() - t0 if measure else None
     meta = HDMeta(
@@ -844,3 +917,6 @@ def search(
         lower=out_lower, upper=out_upper,
         degraded=degraded, stage_reached=stage_final,
     )
+
+
+search.__doc__ = _search_impl.__doc__

@@ -82,6 +82,8 @@ from repro.index.cascade import (
     interval_bounds,
 )
 from repro.index.store import SetStore, SetSummary, bucket_capacity
+from repro.obs import trace as _obs
+from repro.obs.metrics import record_stats as _record_stats
 from repro.reliability import faults as _faults
 from repro.reliability.errors import BackendUnavailable
 
@@ -96,8 +98,9 @@ def _stage0_multiquery(qsums: SetSummary, ssums: SetSummary, *, directed: bool):
     store's (N, ...) stacked summaries — the exact single-query bound math,
     vectorized over the query axis by broadcasting alone.
     """
-    lb, ub = interval_bounds(qsums, ssums, directed=directed)
-    return lb, ub, bound_scale(qsums, ssums)
+    with jax.named_scope("cascade.stage0_multiquery"):
+        lb, ub = interval_bounds(qsums, ssums, directed=directed)
+        return lb, ub, bound_scale(qsums, ssums)
 
 
 @functools.partial(
@@ -111,11 +114,12 @@ def _stage2a_multiquery(
     slab — the multi-query analogue of the cascade's ``_stage2_batch``.
     Same conformance contract per lane; the per-(query, set) gate returns
     the certified +inf sentinel for pairs outside a query's frontier."""
-    return masked.masked_exact_hd_multiquery(
-        qs, pts, valid_qs=valid_qs, valid_slab=valid, lb=gate_lb,
-        cut=gate_cut, directed=directed, backend=backend,
-        block_a=block_a, block_b=block_b,
-    )
+    with jax.named_scope("cascade.stage2a_multiquery"):
+        return masked.masked_exact_hd_multiquery(
+            qs, pts, valid_qs=valid_qs, valid_slab=valid, lb=gate_lb,
+            cut=gate_cut, directed=directed, backend=backend,
+            block_a=block_a, block_b=block_b,
+        )
 
 
 def _stack_query_summaries(summaries: list[SetSummary]) -> SetSummary:
@@ -131,6 +135,47 @@ def _stack_query_summaries(summaries: list[SetSummary]) -> SetSummary:
 
 
 def search_batch(
+    queries: Sequence,
+    store: SetStore,
+    k,
+    *,
+    variant: str = "hausdorff",
+    backend: str = "auto",
+    masked_backend: str | None = None,
+    config: HDConfig | None = None,
+    measure: bool = False,
+    deadline_s: float | None = None,
+    on_fault: str = "degrade",
+    validate: bool = True,
+) -> list[SearchResult]:
+    # Observability shim (see cascade.search): one flag check when tracing
+    # is off; a root "index.search_batch" span with the stage spans as
+    # children when on.
+    kwargs = dict(
+        variant=variant, backend=backend, masked_backend=masked_backend,
+        config=config, measure=measure, deadline_s=deadline_s,
+        on_fault=on_fault, validate=validate,
+    )
+    if not _obs.enabled():
+        return _search_batch_impl(queries, store, k, **kwargs)
+    queries = list(queries)  # materialize once: the span consumes len()
+    with _obs.span(
+        "index.search_batch", batch=len(queries), variant=variant
+    ) as sp:
+        results = _search_batch_impl(queries, store, k, **kwargs)
+        if results:
+            s = results[0].stats
+            sp.set(
+                unique_queries=s.get("unique_queries"),
+                dedup_hits=s.get("dedup_hits"),
+                launches=s.get("multiquery_launches"),
+                degraded=any(r.degraded for r in results),
+            )
+            _record_stats("index.search_batch", s)
+        return results
+
+
+def _search_batch_impl(
     queries: Sequence,
     store: SetStore,
     k,
@@ -283,6 +328,10 @@ def search_batch(
         if b != mqb and (device_kind == "tpu" or not b.endswith("_pallas"))
     ]
     backend_fallbacks: list[str] = []
+    _obs.event(
+        "cascade.backend_resolved", masked_backend=mqb,
+        refine_backend=refine_backend, device_kind=device_kind,
+    )
 
     def _with_backend(call):
         while True:
@@ -293,6 +342,10 @@ def search_batch(
             except BackendUnavailable:
                 backend_fallbacks.append(be)
                 available.pop(0)
+                _obs.event(
+                    "cascade.backend_fallback", failed=be,
+                    next=available[0] if available else None,
+                )
                 if not available:
                     raise
 
@@ -320,25 +373,27 @@ def search_batch(
     if n_act:
         # -- stage 0: ONE (Q × corpus) summary-bound pass ----------------
         # Always runs (the certified floor); failure here propagates.
-        _faults.fire(_cascade._POINT_STAGE0)
-        q_pad = bucket_capacity(n_act, 1)           # pow2 query-axis pad
-        pad_idx = act + [act[0]] * (q_pad - n_act)  # jit-cache discipline
-        qsums = _stack_query_summaries([store.summarize(uniq[ui]) for ui in pad_idx])
-        lb_j, ub_j, scale_j = _stage0_multiquery(
-            qsums, store.summaries(), directed=directed
-        )
-        scale = np.asarray(scale_j, np.float64)[:n_act]
-        lb0, ub0 = certified_margins(
-            np.asarray(lb_j, np.float64)[:n_act],
-            np.asarray(ub_j, np.float64)[:n_act],
-            scale, store.dim,
-        )
-        lb, ub = lb0, ub0
-        taus = np.asarray(
-            [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
-        )
-        alive = lb <= taus[:, None]
-        stage0_pruned = (n - alive.sum(axis=1)).astype(np.int64)
+        with _obs.span("cascade.stage0", n=n, queries=n_act) as _sp0:
+            _faults.fire(_cascade._POINT_STAGE0)
+            q_pad = bucket_capacity(n_act, 1)           # pow2 query-axis pad
+            pad_idx = act + [act[0]] * (q_pad - n_act)  # jit-cache discipline
+            qsums = _stack_query_summaries([store.summarize(uniq[ui]) for ui in pad_idx])
+            lb_j, ub_j, scale_j = _stage0_multiquery(
+                qsums, store.summaries(), directed=directed
+            )
+            scale = np.asarray(scale_j, np.float64)[:n_act]
+            lb0, ub0 = certified_margins(
+                np.asarray(lb_j, np.float64)[:n_act],
+                np.asarray(ub_j, np.float64)[:n_act],
+                scale, store.dim,
+            )
+            lb, ub = lb0, ub0
+            taus = np.asarray(
+                [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
+            )
+            alive = lb <= taus[:, None]
+            stage0_pruned = (n - alive.sum(axis=1)).astype(np.int64)
+            _sp0.set(pruned=int(stage0_pruned.sum()))
 
         # Shared padded query slab for stage 2a: every active unique query
         # padded to one pow2 row count with validity masks (padding cannot
@@ -370,162 +425,166 @@ def search_batch(
         shared_slab = device_kind == "tpu" or masked_backend is not None
         try:
             # -- stage 2a: per surviving bucket, tighten the batch --------
-            _faults.fire(_cascade._POINT_STAGE2A)
-            slot = store.slot_index()
-            buckets = store.packed_buckets()
-            frontier = alive & ~resolved
-            groups: dict[int, list[int]] = {}
-            for sid in np.nonzero(frontier.any(axis=0))[0]:
-                groups.setdefault(slot[int(sid)][0], []).append(int(sid))
-            # Ascending best-lower-bound bucket order (global min over the
-            # batch), re-deriving every τ_q between buckets — one bucket's
-            # tight intervals prune the next bucket's stragglers for every
-            # query at once.
-            for cap in sorted(
-                groups, key=lambda c: min(lb[:, groups[c]].min(axis=0))
-            ):
-                taus = np.asarray(
-                    [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
-                )
-                alive &= lb <= taus[:, None]
-                cols = np.asarray(groups[cap], np.int64)
-                mask = alive[:, cols] & ~resolved[:, cols] & (
-                    lb[:, cols] <= taus[:, None]
-                )
-                keep = mask.any(axis=0)
-                if not keep.any():
-                    continue
-                checkpoint()
-                sids = cols[keep]
-                mask = mask[:, keep]
-                bucket = buckets[cap]
-                rows = np.asarray([slot[int(s)][1] for s in sids])
-
-                if shared_slab:
-                    take = _pow2_take(rows)
-                    batch = int(take.shape[0])
-                    # Per-(query, set) prune gate: each real (q, s)
-                    # frontier pair carries query q's certified lower
-                    # bound against a cutoff safely above ITS τ_q (same
-                    # 1e-6 fp32-cast headroom argument as the single-query
-                    # cascade); pairs outside a query's frontier, pow2
-                    # batch-padding lanes and pow2 query-padding rows ride
-                    # in gated (+inf lb), returning the certified sentinel
-                    # — skipped in-kernel on the Pallas route,
-                    # lane-selected on the pure-JAX routes.
-                    gate_lb = np.full((q_pad, batch), np.inf, np.float32)
-                    gate_lb[:n_act, : sids.size] = np.where(
-                        mask, lb[:, sids], np.inf
-                    ).astype(np.float32)
-                    gate_cut = np.full((q_pad, batch), -np.inf, np.float32)
-                    gate_cut[:n_act] = np.where(
-                        np.isfinite(taus), taus * (1.0 + 1e-6), np.inf
-                    ).astype(np.float32)[:, None]
-
-                    def _call_2a(be):
-                        block_a, block_b = resolver.resolve_block_sizes(
-                            nq_pad, cap, store.dim, device_kind=device_kind,
-                            backend="fused_pallas" if be.endswith("_pallas") else "tiled",
-                        )
-                        return be, _stage2a_multiquery(
-                            q_slab_j, q_valid_j,
-                            jnp.take(bucket.points, take, axis=0),
-                            jnp.take(bucket.valid, take, axis=0),
-                            jnp.asarray(gate_lb), jnp.asarray(gate_cut),
-                            directed=directed, backend=be,
-                            block_a=block_a, block_b=block_b,
-                        )
-
-                    used_be, raw_vals = _with_backend(_call_2a)
-                    vals = np.asarray(raw_vals, np.float64)[:n_act, : sids.size]
-                    pad = fp_value_margin(store.dim, scale[:, sids], vals)
-                    lb[:, sids] = np.where(
-                        mask, np.maximum(lb[:, sids], np.maximum(vals - pad, 0.0)),
-                        lb[:, sids],
+            with _obs.span("cascade.stage2a", shared_slab=shared_slab) as _sp2a:
+                _faults.fire(_cascade._POINT_STAGE2A)
+                slot = store.slot_index()
+                buckets = store.packed_buckets()
+                frontier = alive & ~resolved
+                groups: dict[int, list[int]] = {}
+                for sid in np.nonzero(frontier.any(axis=0))[0]:
+                    groups.setdefault(slot[int(sid)][0], []).append(int(sid))
+                # Ascending best-lower-bound bucket order (global min over the
+                # batch), re-deriving every τ_q between buckets — one bucket's
+                # tight intervals prune the next bucket's stragglers for every
+                # query at once.
+                for cap in sorted(
+                    groups, key=lambda c: min(lb[:, groups[c]].min(axis=0))
+                ):
+                    taus = np.asarray(
+                        [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
                     )
-                    ub[:, sids] = np.where(
-                        mask, np.minimum(ub[:, sids], vals + pad), ub[:, sids]
+                    alive &= lb <= taus[:, None]
+                    cols = np.asarray(groups[cap], np.int64)
+                    mask = alive[:, cols] & ~resolved[:, cols] & (
+                        lb[:, cols] <= taus[:, None]
                     )
-                    launches += 1
-                    s2a_shapes.add((cap, batch, used_be))
-                    s2a_pairs += mask.sum(axis=1)
-                    for ai in np.nonzero(mask.any(axis=1))[0]:
-                        stage_reached[ai] = "stage2a"
-                else:
-                    # Per-query gated slab passes over each query's OWN
-                    # frontier columns — compute ∝ Σ_q |frontier_q|, the
-                    # cheapest a lane-select platform can do, and still
-                    # deduplicated (each unique query tightens once).
-                    for ai in np.nonzero(mask.any(axis=1))[0]:
-                        checkpoint()
-                        q_sids = sids[mask[ai]]
-                        q_rows = rows[mask[ai]]
-                        take_q = _pow2_take(q_rows)
-                        batch_q = int(take_q.shape[0])
-                        gate_lb_q = np.concatenate(
-                            [lb[ai, q_sids],
-                             np.full((batch_q - q_rows.size,), np.inf)]
+                    keep = mask.any(axis=0)
+                    if not keep.any():
+                        continue
+                    checkpoint()
+                    sids = cols[keep]
+                    mask = mask[:, keep]
+                    bucket = buckets[cap]
+                    rows = np.asarray([slot[int(s)][1] for s in sids])
+
+                    if shared_slab:
+                        take = _pow2_take(rows)
+                        batch = int(take.shape[0])
+                        # Per-(query, set) prune gate: each real (q, s)
+                        # frontier pair carries query q's certified lower
+                        # bound against a cutoff safely above ITS τ_q (same
+                        # 1e-6 fp32-cast headroom argument as the single-query
+                        # cascade); pairs outside a query's frontier, pow2
+                        # batch-padding lanes and pow2 query-padding rows ride
+                        # in gated (+inf lb), returning the certified sentinel
+                        # — skipped in-kernel on the Pallas route,
+                        # lane-selected on the pure-JAX routes.
+                        gate_lb = np.full((q_pad, batch), np.inf, np.float32)
+                        gate_lb[:n_act, : sids.size] = np.where(
+                            mask, lb[:, sids], np.inf
                         ).astype(np.float32)
-                        gate_cut_q = np.full(
-                            (batch_q,),
-                            taus[ai] * (1.0 + 1e-6)
-                            if np.isfinite(taus[ai]) else np.inf,
-                            np.float32,
-                        )
-                        q_raw = uniq[act[ai]]
-                        n_q_i = int(q_raw.shape[0])
+                        gate_cut = np.full((q_pad, batch), -np.inf, np.float32)
+                        gate_cut[:n_act] = np.where(
+                            np.isfinite(taus), taus * (1.0 + 1e-6), np.inf
+                        ).astype(np.float32)[:, None]
 
-                        def _call_2a_one(be):
+                        def _call_2a(be):
                             block_a, block_b = resolver.resolve_block_sizes(
-                                n_q_i, cap, store.dim, device_kind=device_kind,
+                                nq_pad, cap, store.dim, device_kind=device_kind,
                                 backend="fused_pallas" if be.endswith("_pallas") else "tiled",
                             )
-                            return be, _cascade._stage2_batch(
-                                q_raw,
-                                jnp.take(bucket.points, take_q, axis=0),
-                                jnp.take(bucket.valid, take_q, axis=0),
-                                jnp.asarray(gate_lb_q),
-                                jnp.asarray(gate_cut_q),
+                            return be, _stage2a_multiquery(
+                                q_slab_j, q_valid_j,
+                                jnp.take(bucket.points, take, axis=0),
+                                jnp.take(bucket.valid, take, axis=0),
+                                jnp.asarray(gate_lb), jnp.asarray(gate_cut),
                                 directed=directed, backend=be,
                                 block_a=block_a, block_b=block_b,
                             )
 
-                        used_be, raw_vals = _with_backend(_call_2a_one)
-                        vals = np.asarray(raw_vals, np.float64)[: q_rows.size]
-                        pad = fp_value_margin(store.dim, scale[ai, q_sids], vals)
-                        lb[ai, q_sids] = np.maximum(
-                            lb[ai, q_sids], np.maximum(vals - pad, 0.0)
+                        used_be, raw_vals = _with_backend(_call_2a)
+                        vals = np.asarray(raw_vals, np.float64)[:n_act, : sids.size]
+                        pad = fp_value_margin(store.dim, scale[:, sids], vals)
+                        lb[:, sids] = np.where(
+                            mask, np.maximum(lb[:, sids], np.maximum(vals - pad, 0.0)),
+                            lb[:, sids],
                         )
-                        ub[ai, q_sids] = np.minimum(ub[ai, q_sids], vals + pad)
+                        ub[:, sids] = np.where(
+                            mask, np.minimum(ub[:, sids], vals + pad), ub[:, sids]
+                        )
                         launches += 1
-                        s2a_shapes.add((cap, batch_q, used_be))
-                        s2a_pairs[ai] += q_rows.size
-                        stage_reached[ai] = "stage2a"
+                        s2a_shapes.add((cap, batch, used_be))
+                        s2a_pairs += mask.sum(axis=1)
+                        for ai in np.nonzero(mask.any(axis=1))[0]:
+                            stage_reached[ai] = "stage2a"
+                    else:
+                        # Per-query gated slab passes over each query's OWN
+                        # frontier columns — compute ∝ Σ_q |frontier_q|, the
+                        # cheapest a lane-select platform can do, and still
+                        # deduplicated (each unique query tightens once).
+                        for ai in np.nonzero(mask.any(axis=1))[0]:
+                            checkpoint()
+                            q_sids = sids[mask[ai]]
+                            q_rows = rows[mask[ai]]
+                            take_q = _pow2_take(q_rows)
+                            batch_q = int(take_q.shape[0])
+                            gate_lb_q = np.concatenate(
+                                [lb[ai, q_sids],
+                                 np.full((batch_q - q_rows.size,), np.inf)]
+                            ).astype(np.float32)
+                            gate_cut_q = np.full(
+                                (batch_q,),
+                                taus[ai] * (1.0 + 1e-6)
+                                if np.isfinite(taus[ai]) else np.inf,
+                                np.float32,
+                            )
+                            q_raw = uniq[act[ai]]
+                            n_q_i = int(q_raw.shape[0])
+
+                            def _call_2a_one(be):
+                                block_a, block_b = resolver.resolve_block_sizes(
+                                    n_q_i, cap, store.dim, device_kind=device_kind,
+                                    backend="fused_pallas" if be.endswith("_pallas") else "tiled",
+                                )
+                                return be, _cascade._stage2_batch(
+                                    q_raw,
+                                    jnp.take(bucket.points, take_q, axis=0),
+                                    jnp.take(bucket.valid, take_q, axis=0),
+                                    jnp.asarray(gate_lb_q),
+                                    jnp.asarray(gate_cut_q),
+                                    directed=directed, backend=be,
+                                    block_a=block_a, block_b=block_b,
+                                )
+
+                            used_be, raw_vals = _with_backend(_call_2a_one)
+                            vals = np.asarray(raw_vals, np.float64)[: q_rows.size]
+                            pad = fp_value_margin(store.dim, scale[ai, q_sids], vals)
+                            lb[ai, q_sids] = np.maximum(
+                                lb[ai, q_sids], np.maximum(vals - pad, 0.0)
+                            )
+                            ub[ai, q_sids] = np.minimum(ub[ai, q_sids], vals + pad)
+                            launches += 1
+                            s2a_shapes.add((cap, batch_q, used_be))
+                            s2a_pairs[ai] += q_rows.size
+                            stage_reached[ai] = "stage2a"
+                _sp2a.set(launches=launches, pairs=int(s2a_pairs.sum()))
 
             # -- stage 2b: deduplicated raw refinement, per unique query --
             # One drain loop per unique query (duplicates were collapsed
             # above — this loop IS the dedup); each (query, candidate)
             # refines at most once, on RAW points, so returned values are
             # bit-for-bit brute force's.
-            _faults.fire(_cascade._POINT_STAGE2B)
-            for ai in range(n_act):
-                while True:
-                    tau = _kth_smallest(ub[ai], k_u[ai])
-                    alive[ai] &= lb[ai] <= tau
-                    front = np.nonzero(alive[ai] & ~resolved[ai])[0]
-                    if front.size == 0:
-                        completed[ai] = True
-                        break
-                    checkpoint()
-                    sid = int(front[np.lexsort((front, lb[ai][front]))[0]])
-                    values[ai, sid] = _exact_value(
-                        uniq[act[ai]], store.get(sid), variant,
-                        refine_backend, cfg,
-                    )
-                    resolved[ai, sid] = True
-                    refines[ai] += 1
-                    lb[ai, sid] = ub[ai, sid] = float(values[ai, sid])
-                    stage_reached[ai] = "stage2b"
+            with _obs.span("cascade.stage2b") as _sp2b:
+                _faults.fire(_cascade._POINT_STAGE2B)
+                for ai in range(n_act):
+                    while True:
+                        tau = _kth_smallest(ub[ai], k_u[ai])
+                        alive[ai] &= lb[ai] <= tau
+                        front = np.nonzero(alive[ai] & ~resolved[ai])[0]
+                        if front.size == 0:
+                            completed[ai] = True
+                            break
+                        checkpoint()
+                        sid = int(front[np.lexsort((front, lb[ai][front]))[0]])
+                        values[ai, sid] = _exact_value(
+                            uniq[act[ai]], store.get(sid), variant,
+                            refine_backend, cfg,
+                        )
+                        resolved[ai, sid] = True
+                        refines[ai] += 1
+                        lb[ai, sid] = ub[ai, sid] = float(values[ai, sid])
+                        stage_reached[ai] = "stage2b"
+                _sp2b.set(refines=int(refines.sum()))
         except _DeadlineHit:
             pass  # per-query ``completed`` flags carry the degraded state
         except _DEGRADABLE as e:
@@ -534,6 +593,9 @@ def search_batch(
             if on_fault == "raise":
                 raise
             fault = e
+            _obs.event(
+                "cascade.fault", error=True, chain=_obs.exception_chain(e),
+            )
 
     # -- assembly: one result per unique, fanned out per original ---------
     elapsed = time.perf_counter() - t0 if measure else None
@@ -596,7 +658,8 @@ def search_batch(
         stats["n_resolved"] = int(resolved[ai].sum())
         stats["deadline_s"] = deadline_s
         if fault is not None:
-            stats["fault"] = f"{type(fault).__name__}: {fault}"
+            # Structured __cause__ chain, outermost first (see cascade).
+            stats["fault"] = _obs.exception_chain(fault)
         return (
             top.astype(np.int32), out_values,
             lb[ai][top].copy(), ub[ai][top].copy(),

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import projections
+from repro.obs import trace as _obs
 from repro.reliability import faults as _faults
 from repro.reliability.errors import StoreCorruption
 
@@ -424,6 +425,17 @@ class SetStore:
         (``store_<gen>``) and ``LATEST`` pointer follow the train
         checkpoints' crash contract exactly.
         """
+        if not _obs.enabled():
+            return self._save_impl(root)
+        with _obs.span("store.save", n_sets=self.n_sets) as sp:
+            snap = self._save_impl(root)
+            sp.set(
+                snapshot=str(snap),
+                bytes=sum(p.stat().st_size for p in snap.iterdir()),
+            )
+            return snap
+
+    def _save_impl(self, root: str | os.PathLike) -> Path:
         from repro.train import checkpoint as _ck
 
         if self.n_sets == 0:
@@ -490,6 +502,33 @@ class SetStore:
         round-trip losslessly; gated in the reliability suite and
         ``scripts/check.sh``).
         """
+        if not _obs.enabled():
+            return cls._restore_impl(root, gen=gen, quarantine=quarantine)
+        # the impl runs inside the span's ambient frame, so the injection
+        # point's "fault.fired" event (and any StoreCorruption) correlates
+        # to this restore's rid
+        with _obs.span("store.restore", quarantine=quarantine) as sp:
+            store = cls._restore_impl(root, gen=gen, quarantine=quarantine)
+            rep = store.restore_report
+            snap = Path(rep["snapshot"])
+            sp.set(
+                gen=rep["gen"],
+                snapshot=rep["snapshot"],
+                n_sets=store.n_sets,
+                dropped_buckets=len(rep["dropped_buckets"]),
+                dropped_sets=rep["dropped_sets"],
+                bytes=sum(p.stat().st_size for p in snap.iterdir()),
+            )
+            return store
+
+    @classmethod
+    def _restore_impl(
+        cls,
+        root: str | os.PathLike,
+        *,
+        gen: int | None = None,
+        quarantine: bool = False,
+    ) -> "SetStore":
         _faults.fire(_POINT_RESTORE)
         root = Path(root)
         if gen is None:

@@ -37,6 +37,7 @@ import dataclasses
 import threading
 import time
 
+from repro.obs import trace as _obs
 from repro.reliability.errors import BackendUnavailable, InjectedFault
 
 __all__ = [
@@ -156,6 +157,14 @@ def fire(point: str, **ctx) -> None:
                     a.spent = True
                 due.append(f)
     for f in due:
+        # One error-tagged event per firing, BEFORE acting, so the event
+        # lands even when the action raises.  Carries the ambient rid —
+        # inside a cascade/engine span the firing correlates to the request
+        # it poisoned (asserted by the obs fault sweep).
+        _obs.event(
+            "fault.fired", error=True, point=point, action=f.action,
+            **({"backend": str(ctx["backend"])} if "backend" in ctx else {}),
+        )
         if f.action == "slow":
             time.sleep(f.delay_s)
         elif f.action == "backend_down":

@@ -43,6 +43,8 @@ import time
 
 import numpy as np
 
+from repro.obs import trace as _obs
+from repro.obs.metrics import registry as _registry
 from repro.reliability import faults as _faults
 from repro.reliability.errors import Overloaded, ReliabilityError, TransientFault
 from repro.train.fault_tolerance import run_with_recovery
@@ -85,6 +87,11 @@ class _Pending:
     deadline_abs: float | None  # monotonic-clock expiry, None = unbounded
     future: asyncio.Future
     enqueue_t: float
+    # observability: the request id + the admission→completion root span
+    # (a shared no-op object when tracing is off).  The span is finished
+    # exactly once, wherever the future is resolved.
+    rid: str | None = None
+    root: object = None
 
 
 class QueryEngine:
@@ -132,7 +139,10 @@ class QueryEngine:
         for lst in self._pending.values():
             for p in lst:
                 if not p.future.done():
-                    p.future.set_exception(RuntimeError("engine closed"))
+                    exc = RuntimeError("engine closed")
+                    p.future.set_exception(exc)
+                    if p.root is not None:
+                        p.root.finish(exc)
         self._pending.clear()
 
     @property
@@ -186,6 +196,18 @@ class QueryEngine:
         from repro.index.store import bucket_capacity
 
         cls = (bucket_capacity(q.shape[0], min_bucket=1), variant)
+        # Root span: admission → completion (finished where the future is
+        # resolved, so its duration IS the request latency the batching
+        # policy bounds).  A fresh rid correlates everything this request
+        # touches, across the flusher task and the executor thread.
+        rid = _obs.new_rid() if _obs.enabled() else None
+        root = _obs.start_span(
+            "engine.search", rid=rid, k=int(k), variant=variant,
+            shape_class=cls[0],
+        )
+        root.event("engine.admit", queue_depth=self.pending)
+        if _obs.enabled():
+            _registry().gauge("engine.queue_depth").set(self.pending + 1)
         p = _Pending(
             query=q,
             k=int(k),
@@ -193,6 +215,8 @@ class QueryEngine:
             deadline_abs=None if deadline_s is None else now + float(deadline_s),
             future=self._loop.create_future(),
             enqueue_t=now,
+            rid=rid,
+            root=root,
         )
         self._pending.setdefault(cls, []).append(p)
         self._event.set()
@@ -234,6 +258,9 @@ class QueryEngine:
                 del lst[: len(batch)]
                 if not lst:
                     self._pending.pop(cls, None)
+                for p in batch:
+                    if p.future.cancelled() and p.root is not None:
+                        p.root.finish()  # abandoned by the caller
                 batch = [p for p in batch if not p.future.cancelled()]
                 if batch:
                     await self._flush_batch(cls, batch)
@@ -279,15 +306,45 @@ class QueryEngine:
 
         self.stats["flushes"] += 1
         self.stats["batched_queries"] += len(batch)
+        # Flush span: adopts the FIRST member's rid (a single-request flush
+        # — the common low-traffic case — therefore yields one connected
+        # single-rid tree: engine.search → engine.flush → index.search_batch
+        # → cascade stages); every member rid is recorded as an attribute.
+        # The executor thread has no ambient context, so the flush frame is
+        # re-established inside it with bind() — run_in_executor does not
+        # propagate contextvars.
+        p0 = batch[0]
+        fspan = _obs.start_span(
+            "engine.flush", rid=p0.rid,
+            parent_id=getattr(p0.root, "span_id", None),
+            shape_class=cls[0], variant=variant, batch=len(batch),
+            member_rids=[p.rid for p in batch],
+            deadline_s=batch_deadline,
+        )
+        if _obs.enabled():
+            reg = _registry()
+            reg.counter("engine.flushes.total").inc()
+            reg.counter("engine.batched_queries.total").inc(len(batch))
+            reg.histogram("engine.flush_batch_size").observe(len(batch))
+            reg.gauge("engine.queue_depth").set(self.pending)
+        frid, fsid = fspan.rid, fspan.span_id
+
+        def _run():
+            if frid is None:
+                return self._recover(attempt)
+            with _obs.bind(frid, fsid):
+                return self._recover(attempt)
+
         try:
-            results = await self._loop.run_in_executor(
-                None, lambda: self._recover(attempt)
-            )
+            results = await self._loop.run_in_executor(None, _run)
         except ReliabilityError as e:
+            fspan.finish(e)
             for p in batch:
                 if not p.future.done():
                     p.future.set_exception(e)
+                p.root.finish(e)
             return
+        fspan.finish()
 
         for p, res in zip(batch, results):
             if res.degraded:
@@ -298,7 +355,26 @@ class QueryEngine:
                         continue
             if not p.future.done():
                 p.future.set_result(res)
-                self.heartbeat.beat(wall_s=time.monotonic() - p.enqueue_t)
+                wall = time.monotonic() - p.enqueue_t
+                self.heartbeat.beat(wall_s=wall)
+                if _obs.enabled():
+                    margin = (
+                        None if p.deadline_abs is None
+                        else p.deadline_abs - time.monotonic()
+                    )
+                    p.root.set(
+                        degraded=res.degraded,
+                        stage_reached=res.stage_reached,
+                        deadline_margin_s=margin,
+                    )
+                    _registry().histogram(
+                        "engine.request_latency_s", unit="s"
+                    ).observe(wall)
+                    if margin is not None:
+                        _registry().histogram(
+                            "engine.deadline_margin_s", unit="s"
+                        ).observe(margin)
+            p.root.finish()
 
     async def _topup(self, p: _Pending, degraded_res, now: float):
         """Individual retry for a member degraded by the batch's shared
@@ -321,11 +397,28 @@ class QueryEngine:
             )
 
         self.stats["topups"] += 1
+        tspan = _obs.start_span(
+            "engine.topup", rid=p.rid,
+            parent_id=getattr(p.root, "span_id", None),
+            deadline_s=topup_deadline,
+        )
+        if _obs.enabled():
+            _registry().counter("engine.topups.total").inc()
+        trid, tsid = tspan.rid, tspan.span_id
+
+        def _run():
+            if trid is None:
+                return self._recover(attempt)
+            with _obs.bind(trid, tsid):
+                return self._recover(attempt)
+
         try:
-            return await self._loop.run_in_executor(
-                None, lambda: self._recover(attempt)
-            )
+            res = await self._loop.run_in_executor(None, _run)
+            tspan.finish()
+            return res
         except ReliabilityError as e:
+            tspan.finish(e)
             if not p.future.done():
                 p.future.set_exception(e)
+            p.root.finish(e)
             return None

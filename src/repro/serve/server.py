@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core import masked, projections
 from repro.index.store import bucket_capacity, pack_sets
+from repro.obs import trace as _obs
+from repro.obs.metrics import registry as _registry
 from repro.reliability import faults as _faults
 from repro.reliability.errors import Overloaded, ReliabilityError, TransientFault
 from repro.train.fault_tolerance import Heartbeat, run_with_recovery
@@ -234,6 +236,13 @@ class ProHDService:
         ``{error, message}`` for THAT rid only — one poisoned request
         never aborts the rest of the flush.
         """
+        with _obs.span(
+            "serve.flush",
+            pairwise=len(self._pending), searches=len(self._pending_searches),
+        ) as _fspan:
+            return self._flush_impl(_fspan)
+
+    def _flush_impl(self, _fspan) -> dict[int, dict]:
         out: dict[int, dict] = {}
         by_bucket: dict[tuple[int, int, int], list] = {}
         for rid, a, b in self._pending:
@@ -244,6 +253,12 @@ class ProHDService:
         searches = list(self._pending_searches)
         self._pending_searches.clear()
         self._next_rid = 0
+        if _obs.enabled():
+            reg = _registry()
+            reg.counter("serve.pairwise_requests.total").inc(
+                sum(len(v) for v in by_bucket.values())
+            )
+            reg.counter("serve.search_requests.total").inc(len(searches))
 
         for (n_a, n_b, d), reqs in by_bucket.items():
             for i in range(0, len(reqs), self.cfg.max_batch):
@@ -285,20 +300,28 @@ class ProHDService:
                 )
 
             t0 = time.perf_counter()
-            try:
-                res = run_with_recovery(
-                    attempt,
-                    lambda: 0,
-                    max_failures=self.cfg.max_retries,
-                    retryable=(TransientFault,),
-                    backoff_s=self.cfg.retry_backoff_s,
+            with _obs.span("serve.search", request=rid, k=k) as _sspan:
+                try:
+                    res = run_with_recovery(
+                        attempt,
+                        lambda: 0,
+                        max_failures=self.cfg.max_retries,
+                        retryable=(TransientFault,),
+                        backoff_s=self.cfg.retry_backoff_s,
+                    )
+                except ReliabilityError as e:
+                    # typed, per-request: the submitter learns exactly what
+                    # failed; everyone else's results still land
+                    out[rid] = {"error": type(e).__name__, "message": str(e)}
+                    self.heartbeat.beat(wall_s=time.perf_counter() - t0)
+                    _sspan.event(
+                        "serve.search_failed", error=True,
+                        error_type=type(e).__name__,
+                    )
+                    continue
+                _sspan.set(
+                    degraded=res.degraded, stage_reached=res.stage_reached
                 )
-            except ReliabilityError as e:
-                # typed, per-request: the submitter learns exactly what
-                # failed; everyone else's results still land
-                out[rid] = {"error": type(e).__name__, "message": str(e)}
-                self.heartbeat.beat(wall_s=time.perf_counter() - t0)
-                continue
             out[rid] = {
                 "ids": res.ids.tolist(),
                 "values": res.values.tolist(),

@@ -48,6 +48,16 @@ class Heartbeat:
             if wall_s is not None:
                 self._last_wall_s = float(wall_s)
                 self._total_wall_s += float(wall_s)
+        # Fold into the obs registry when tracing is on: the liveness
+        # counter and per-beat wall-time distribution become scrapeable
+        # metrics alongside the span-derived ones (one source of truth).
+        from repro.obs import metrics as _metrics, trace as _trace
+
+        if _trace.enabled():
+            reg = _metrics.registry()
+            reg.counter("heartbeat.beats.total").inc()
+            if wall_s is not None:
+                reg.histogram("heartbeat.wall_s", unit="s").observe(float(wall_s))
 
     @property
     def age(self) -> float:

@@ -206,3 +206,104 @@ def test_fault_determinism(corpus):
     assert runs[0].stage_reached == runs[1].stage_reached
     np.testing.assert_array_equal(runs[0].ids, runs[1].ids)
     np.testing.assert_array_equal(runs[0].upper, runs[1].upper)
+
+
+# ---------------------------------------------------------------------------
+# Observability contract at every injection point (PR 8): a fired fault is
+# never invisible.  Each firing emits exactly one error-tagged "fault.fired"
+# event whose ``point`` attr names the injection point and whose rid lands
+# inside the poisoned request's span tree — so an operator reading the JSONL
+# export can attribute every injected (or real, typed) failure to the
+# request it hit.  With tracing off (the default) the same firing emits
+# nothing at all.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def obs_corpus():
+    # larger than the sweep corpus above: 26 sets keeps the stage-0
+    # frontier above k, so EVERY cascade stage (incl. stage1/stage2b,
+    # which a small corpus resolves early and never enters) is hit and
+    # its injected fault genuinely fires
+    sets, rng = _corpus(0, n_sets=26, dup_every=3)
+    return sets, _query(rng, sets, 4)
+
+
+def _drive_through(point, fault, sets, q, tmp_path):
+    """Route one query through whatever stack layer reaches ``point``,
+    swallowing the typed error a raise-action fault legitimately surfaces."""
+    if point == "store.restore":
+        store = SetStore(dim=4)
+        store.add_many(sets)
+        store.save(tmp_path)
+        try:
+            with inject(fault):
+                SetStore.restore(tmp_path)
+        except ReliabilityError:
+            pass
+        return
+    if point.startswith("engine."):
+        import asyncio
+
+        from repro.serve.engine import EngineConfig, QueryEngine
+
+        svc = _service(sets, max_retries=1)
+
+        async def run():
+            eng = QueryEngine(
+                svc, EngineConfig(max_wait_s=0.0, max_retries=1, retry_backoff_s=0.0)
+            )
+            try:
+                return await eng.search(q, K)
+            finally:
+                await eng.close()
+
+        try:
+            with inject(fault):
+                asyncio.run(run())
+        except ReliabilityError:
+            pass
+        return
+    svc = _service(sets, max_retries=1)
+    svc.submit_search(q, K)
+    try:
+        with inject(fault):
+            svc.flush()
+    except ReliabilityError:
+        pass
+
+
+@pytest.mark.obs
+@pytest.mark.parametrize("point", POINTS)
+def test_fired_point_emits_exactly_one_error_event(point, obs_corpus, tmp_path):
+    from repro.obs import trace
+
+    sets, q = obs_corpus
+    with trace.capture() as get_events:
+        _drive_through(point, Fault(point, action="raise", once=True), sets, q, tmp_path)
+        events = get_events()
+    fired = [
+        e for e in events if e["type"] == "event" and e["name"] == "fault.fired"
+    ]
+    assert len(fired) == 1, f"{point}: expected exactly one firing event"
+    ev = fired[0]
+    assert ev["error"] is True
+    assert ev["attrs"]["point"] == point
+    assert ev["attrs"]["action"] == "raise"
+    # correlated: the firing carries the poisoned request's rid
+    span_rids = {e["rid"] for e in events if e["type"] == "span"}
+    assert ev["rid"] is not None and ev["rid"] in span_rids
+
+
+@pytest.mark.obs
+def test_fired_point_disabled_mode_emits_nothing(obs_corpus):
+    from repro.obs import trace
+
+    sets, q = obs_corpus
+    trace.drain()
+    assert not trace.enabled()
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    with inject(Fault("cascade.stage2a", action="raise", once=True)):
+        search(q, store, K)
+    assert trace.events() == []

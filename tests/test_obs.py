@@ -1,0 +1,469 @@
+"""repro.obs — the unified tracing + metrics layer's own contract.
+
+What's proved here (docs/api.md "Observability contract"):
+
+* disabled by default: no events, no registry writes, inert spans;
+* one ``search()`` yields ONE connected span tree under a single rid
+  (index.search → cascade stages), schema-valid;
+* one ``QueryEngine.search()`` yields ONE connected tree under a single
+  rid across the async-batching + thread-pool-executor boundary
+  (engine.search → engine.flush → index.search_batch → stages);
+* metrics: typed get-or-create registry, log-bucket histograms,
+  Prometheus text exposition, span auto-fold;
+* JSONL export round-trips and validates;
+* store snapshots, heartbeats, and fault chains all surface through the
+  same layer.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.index import SetStore, search
+from repro.obs import (
+    OBS_SCHEMA_VERSION,
+    MetricsRegistry,
+    SchemaError,
+    exception_chain,
+    export,
+    metrics,
+    report,
+    trace,
+    validate_events,
+)
+from strategies import query_near as _query
+from strategies import ragged_corpus as _corpus
+
+pytestmark = pytest.mark.obs
+
+K = 4
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    """Every test starts and ends disabled with empty buffers."""
+    trace.disable()
+    trace.drain()
+    yield
+    trace.disable()
+    trace.drain()
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    sets, rng = _corpus(3, n_sets=26, dup_every=3)
+    q = _query(rng, sets, 4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    return store, q, sets
+
+
+# ---------------------------------------------------------------------------
+# disabled-by-default contract
+# ---------------------------------------------------------------------------
+
+
+class TestDisabled:
+    def test_no_events_no_registry_writes(self, corpus):
+        store, q, _ = corpus
+        reg = metrics.registry()
+        before = reg.names()
+        assert not trace.enabled()
+        search(q, store, K)
+        assert trace.events() == []
+        assert reg.names() == before
+
+    def test_span_is_shared_inert_singleton(self):
+        s1 = trace.span("a", k=1)
+        s2 = trace.span("b")
+        assert s1 is s2
+        with s1 as s:
+            s.set(x=1).event("inner", error=True)
+        s1.finish()  # idempotent no-op
+        assert trace.events() == []
+
+    def test_event_and_record_stats_are_noops(self):
+        trace.event("free", error=True, n=3)
+        metrics.record_stats("x", {"a": 1.0})
+        assert trace.events() == []
+        assert "x.a" not in metrics.registry().names()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one search() = one connected single-rid tree
+# ---------------------------------------------------------------------------
+
+
+class TestSearchTree:
+    def test_search_connected_single_rid_tree(self, corpus):
+        store, q, _ = corpus
+        with trace.capture() as get_events:
+            res = search(q, store, K)
+            events = get_events()
+        summary = validate_events(events)
+        assert len(summary["rids"]) == 1
+        spans = {e["name"]: e for e in events if e["type"] == "span"}
+        root = spans["index.search"]
+        assert root["parent_id"] is None
+        for stage in ("cascade.stage0", "cascade.stage2a", "cascade.stage2b"):
+            assert spans[stage]["parent_id"] == root["span_id"]
+            assert spans[stage]["rid"] == root["rid"]
+        # stage spans closed before (and nested inside) the root
+        assert root["dur_s"] >= spans["cascade.stage0"]["dur_s"]
+        assert root["attrs"]["k"] == K
+        assert root["attrs"]["degraded"] == res.degraded
+        # backend resolution is a point event under the root's rid
+        resolved = [e for e in events if e["name"] == "cascade.backend_resolved"]
+        assert resolved and resolved[0]["rid"] == root["rid"]
+
+    def test_search_stats_fold_into_registry(self, corpus):
+        store, q, _ = corpus
+        reg = metrics.registry()
+        reg.reset()
+        with trace.capture():
+            search(q, store, K)
+        names = reg.names()
+        assert "span.index.search.s" in names
+        assert "span.index.search.total" in names
+        assert "index.search.exact_refines" in names
+        assert reg.counter("span.index.search.total").value == 1.0
+
+    def test_fault_surfaces_as_structured_chain_and_event(self, corpus):
+        from repro.reliability import Fault, inject
+
+        store, q, _ = corpus
+        with trace.capture() as get_events:
+            with inject(Fault("cascade.stage2a", action="raise")):
+                res = search(q, store, K)
+            events = get_events()
+        assert res.degraded
+        chain = res.stats["fault"]
+        assert chain[0]["type"] == "InjectedFault"
+        faults = [e for e in events if e["name"] == "cascade.fault"]
+        assert len(faults) == 1 and faults[0]["error"]
+        assert faults[0]["attrs"]["chain"][0]["type"] == "InjectedFault"
+        validate_events(events)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one engine request = one connected single-rid tree across
+# the async admission/flush machinery and the executor hop
+# ---------------------------------------------------------------------------
+
+
+class TestEngineTree:
+    def test_engine_connected_single_rid_tree(self, corpus):
+        import asyncio
+
+        from repro.serve.engine import EngineConfig, QueryEngine
+        from repro.serve.server import ProHDService, ServeConfig
+
+        _store, q, sets = corpus
+        svc = ProHDService(ServeConfig(min_store_bucket=8))
+        for s in sets:
+            svc.add_set(s)
+
+        async def run():
+            eng = QueryEngine(svc, EngineConfig(max_wait_s=0.0))
+            try:
+                return await eng.search(q, K)
+            finally:
+                await eng.close()
+
+        with trace.capture() as get_events:
+            res = asyncio.run(run())
+            events = get_events()
+        assert not res.degraded
+        summary = validate_events(events)
+        assert len(summary["rids"]) == 1
+        spans = {e["name"]: e for e in events if e["type"] == "span"}
+        root = spans["engine.search"]
+        flush = spans["engine.flush"]
+        batch = spans["index.search_batch"]
+        assert root["parent_id"] is None
+        assert flush["parent_id"] == root["span_id"]
+        assert batch["parent_id"] == flush["span_id"]
+        assert spans["cascade.stage0"]["parent_id"] == batch["span_id"]
+        assert {root["rid"]} == {e["rid"] for e in events if e["type"] == "span"}
+        admits = [e for e in events if e["name"] == "engine.admit"]
+        assert admits and admits[0]["span_id"] == root["span_id"]
+        # admission→completion metrics landed
+        reg = metrics.registry()
+        assert reg.histogram("engine.request_latency_s").count >= 1
+        assert reg.counter("engine.flushes.total").value >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_get_or_create_and_type_conflict(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x.total")
+        assert reg.counter("x.total") is c
+        with pytest.raises(TypeError, match="x.total"):
+            reg.gauge("x.total")
+
+    def test_counter_rejects_negative(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.counter("c").inc(-1)
+
+    def test_histogram_buckets_quantile(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", unit="s")
+        for v in (1e-4, 1e-3, 1e-3, 1e-2):
+            h.observe(v)
+        assert h.count == 4
+        assert h.sum == pytest.approx(0.0121)
+        assert h.mean == pytest.approx(0.0121 / 4)
+        assert h.quantile(0.5) <= 1e-3 * 1.01
+        snap = h.snapshot()
+        assert snap["type"] == "histogram"
+        assert sum(snap["buckets"].values()) == 4
+
+    def test_prometheus_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("span.index.search.total").inc(3)
+        reg.gauge("engine.queue_depth").set(2)
+        reg.histogram("span.index.search.s", unit="s").observe(0.5)
+        text = reg.to_prometheus()
+        assert "# TYPE span_index_search_total counter" in text
+        assert "span_index_search_total 3" in text
+        assert "engine_queue_depth 2" in text
+        assert 'span_index_search_s_bucket{le="+Inf"} 1' in text
+        assert "span_index_search_s_count 1" in text
+
+    def test_snapshot_shape(self):
+        reg = MetricsRegistry()
+        reg.counter("a").inc()
+        reg.gauge("b").set(7)
+        snap = reg.snapshot()
+        assert snap["a"] == {"type": "counter", "unit": "", "value": 1.0}
+        assert snap["b"]["value"] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# export: JSONL round-trip + schema validation
+# ---------------------------------------------------------------------------
+
+
+class TestExport:
+    def test_jsonl_roundtrip(self, corpus, tmp_path):
+        store, q, _ = corpus
+        path = tmp_path / "trace.jsonl"
+        with trace.capture(jsonl=path) as get_events:
+            search(q, store, K)
+            in_memory = get_events()
+        on_disk = export.read_jsonl(path)
+        assert on_disk == in_memory
+        assert validate_events(on_disk) == validate_events(in_memory)
+        # every line is independently parseable (stream-appendable export)
+        for line in path.read_text().splitlines():
+            json.loads(line)
+
+    def test_schema_version_exported(self):
+        assert OBS_SCHEMA_VERSION == 1
+
+    def test_validate_rejects_malformed(self):
+        good = {
+            "type": "span", "name": "x", "rid": "r1", "span_id": 1,
+            "parent_id": None, "t_start": 0.0, "dur_s": 0.1,
+            "status": "ok", "attrs": {},
+        }
+        validate_events([good])
+        for corrupting in (
+            lambda r: r.pop("rid"),
+            lambda r: r.update(dur_s=-1.0),
+            lambda r: r.update(status="maybe"),
+            lambda r: r.update(parent_id=99),  # dangling parent
+            lambda r: r.update(type="mystery"),
+        ):
+            bad = dict(good)
+            corrupting(bad)
+            with pytest.raises(SchemaError):
+                validate_events([bad])
+
+    def test_error_span_carries_chain(self):
+        with trace.capture() as get_events:
+            with pytest.raises(ValueError):
+                with trace.span("boom"):
+                    raise ValueError("inner")
+            events = get_events()
+        rec = events[0]
+        assert rec["status"] == "error"
+        assert rec["error"] == [{"type": "ValueError", "message": "inner"}]
+        assert validate_events(events)["errors"] == 1
+
+
+# ---------------------------------------------------------------------------
+# exception chains
+# ---------------------------------------------------------------------------
+
+
+class TestExceptionChain:
+    def test_cause_chain_preserved(self):
+        try:
+            try:
+                raise KeyError("root")
+            except KeyError as inner:
+                raise RuntimeError("wrapper") from inner
+        except RuntimeError as e:
+            chain = exception_chain(e)
+        assert [c["type"] for c in chain] == ["RuntimeError", "KeyError"]
+        assert chain[1]["message"] == "'root'"
+
+    def test_context_fallback_and_suppression(self):
+        try:
+            try:
+                raise KeyError("ctx")
+            except KeyError:
+                raise RuntimeError("implicit")
+        except RuntimeError as e:
+            assert [c["type"] for c in exception_chain(e)] == [
+                "RuntimeError", "KeyError",
+            ]
+        try:
+            try:
+                raise KeyError("hidden")
+            except KeyError:
+                raise RuntimeError("explicit") from None
+        except RuntimeError as e:
+            assert [c["type"] for c in exception_chain(e)] == ["RuntimeError"]
+
+
+# ---------------------------------------------------------------------------
+# store snapshot spans
+# ---------------------------------------------------------------------------
+
+
+class TestStoreSpans:
+    def test_save_restore_spans(self, corpus, tmp_path):
+        store, _q, _ = corpus
+        with trace.capture() as get_events:
+            snap = store.save(tmp_path)
+            SetStore.restore(tmp_path)
+            events = get_events()
+        validate_events(events)
+        spans = {e["name"]: e for e in events if e["type"] == "span"}
+        save, rest = spans["store.save"], spans["store.restore"]
+        total = sum(p.stat().st_size for p in snap.iterdir())
+        assert save["attrs"]["bytes"] == rest["attrs"]["bytes"] == total
+        assert save["attrs"]["n_sets"] == store.n_sets
+        assert rest["attrs"]["dropped_buckets"] == 0
+        assert rest["attrs"]["dropped_sets"] == 0
+
+    def test_quarantine_counts_in_span(self, corpus, tmp_path):
+        from repro.reliability import corrupt_snapshot
+
+        store, _q, _ = corpus
+        snap = store.save(tmp_path)
+        corrupt_snapshot(snap, seed=0)
+        with trace.capture() as get_events:
+            restored = SetStore.restore(tmp_path, quarantine=True)
+            events = get_events()
+        rest = next(e for e in events if e["name"] == "store.restore")
+        assert rest["attrs"]["quarantine"] is True
+        assert rest["attrs"]["dropped_buckets"] == 1
+        assert rest["attrs"]["dropped_sets"] == store.n_sets - restored.n_sets > 0
+
+    def test_corruption_marks_span_error(self, corpus, tmp_path):
+        from repro.reliability import StoreCorruption, corrupt_snapshot
+
+        store, _q, _ = corpus
+        snap = store.save(tmp_path)
+        corrupt_snapshot(snap, seed=1)
+        with trace.capture() as get_events:
+            with pytest.raises(StoreCorruption):
+                SetStore.restore(tmp_path)
+            events = get_events()
+        rest = next(e for e in events if e["name"] == "store.restore")
+        assert rest["status"] == "error"
+        assert rest["error"][0]["type"] == "StoreCorruption"
+
+
+# ---------------------------------------------------------------------------
+# heartbeat fold
+# ---------------------------------------------------------------------------
+
+
+class TestHeartbeat:
+    def test_beats_fold_into_registry_when_enabled(self):
+        from repro.train.fault_tolerance import Heartbeat
+
+        reg = metrics.registry()
+        reg.reset()
+        hb = Heartbeat()
+        hb.beat(wall_s=0.25)  # disabled: nothing lands
+        assert "heartbeat.beats.total" not in reg.names()
+        with trace.capture():
+            hb.beat(wall_s=0.25)
+            hb.beat()
+        assert reg.counter("heartbeat.beats.total").value == 2.0
+        h = reg.histogram("heartbeat.wall_s")
+        assert h.count == 1 and h.sum == pytest.approx(0.25)
+        assert hb.count == 3
+
+
+# ---------------------------------------------------------------------------
+# report rendering
+# ---------------------------------------------------------------------------
+
+
+class TestReport:
+    def _capture(self, corpus):
+        store, q, _ = corpus
+        with trace.capture() as get_events:
+            search(q, store, K)
+            return get_events()
+
+    def test_stage_table(self, corpus):
+        events = self._capture(corpus)
+        table = report.stage_table(events)
+        assert "| index.search |" in table
+        assert "| cascade.stage0 |" in table
+        assert report.stage_table([]) == "(no spans captured)"
+
+    def test_tree_nests_stages_under_root(self, corpus):
+        events = self._capture(corpus)
+        out = report.tree(events)
+        lines = out.splitlines()
+        assert lines[0].startswith("index.search")
+        assert any(ln.startswith("  cascade.stage0") for ln in lines)
+
+    def test_cli_renders_jsonl(self, corpus, tmp_path, capsys):
+        store, q, _ = corpus
+        path = tmp_path / "t.jsonl"
+        with trace.capture(jsonl=path):
+            search(q, store, K)
+        assert report.main([str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "index.search" in out and "1 rids" in out
+
+
+# ---------------------------------------------------------------------------
+# service payloads carry the certificate (PR 8 satellite regression)
+# ---------------------------------------------------------------------------
+
+
+class TestServicePayload:
+    def test_search_payload_carries_certificate_and_degraded(self, corpus):
+        from repro.serve.server import ProHDService, ServeConfig
+
+        store, q, sets = corpus
+        svc = ProHDService(ServeConfig(min_store_bucket=8))
+        for s in sets:
+            svc.add_set(s)
+        rid = svc.submit_search(q, K)
+        out = svc.flush()[rid]
+        for key in ("ids", "values", "lower", "upper", "degraded",
+                    "stage_reached", "stats"):
+            assert key in out, f"payload missing {key!r}"
+        assert out["degraded"] is False
+        # non-degraded: zero-width certified interval equal to the values
+        assert out["lower"] == out["values"] == out["upper"]
+        ref = search(q, store, K, method="exact")
+        assert out["ids"] == ref.ids.tolist()
+        np.testing.assert_allclose(out["values"], ref.values)

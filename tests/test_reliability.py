@@ -164,7 +164,11 @@ class TestDegradedSearch:
         assert ladder.index(res.stage_reached) >= ladder.index(floor)
         for sid, lo, up in zip(res.ids.tolist(), res.lower, res.upper):
             assert lo <= truth[sid] <= up
-        assert "InjectedFault" in res.stats["fault"]
+        # structured exception chain (outermost first), not a flat string:
+        # the injected root cause survives any wrapping
+        chain = res.stats["fault"]
+        assert isinstance(chain, list) and chain
+        assert any(link["type"] == "InjectedFault" for link in chain)
 
     def test_on_fault_raise_propagates(self):
         store, q = _store_and_query()
