@@ -72,7 +72,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery,obs",
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery,obs,anytime",
     )
     ap.add_argument(
         "--quick", action="store_true", help="fig1 + phases + fused only"
@@ -108,6 +108,7 @@ def main() -> None:
         "reliability": tables.bench_reliability,
         "multiquery": tables.bench_multiquery,
         "obs": tables.bench_obs,
+        "anytime": tables.bench_anytime,
     }
     if args.quick:
         selected = ["fig1", "phases", "fused"]

@@ -281,3 +281,56 @@ assert d["obs/cascade_enabled"]["rids"] == "1", (
     "one search did not yield a single-rid span tree")
 PY
 fi
+
+# ---------------------------------------------------------------------------
+# PR 9 gates — anytime certified approximate search (mode="anytime").
+# (a) anytime test slice: ladder convergence properties, edge cases,
+#     validation surface, serve/engine knob plumbing.  The marker is new
+#     in this PR — an empty slice (pytest exit 5) must fail loudly.
+echo "== anytime test slice =="
+python -m pytest -q -m anytime tests/test_anytime_search.py
+
+# (b) anytime conformance slice: the certified-recall harness, per
+#     registered masked backend — interval containment vs a float64
+#     oracle, recall honesty, and the ε = 0 bit-for-bit degeneracy.  A
+#     backend collecting zero anytime conformance cases (pytest exit 5)
+#     fails the gate, so a new kernel cannot dodge the anytime contract.
+echo "== anytime conformance slice (certified-recall harness per backend) =="
+for be in ${MASKED_BACKENDS}; do
+  echo "-- anytime-conformance[${be}] --"
+  python -m pytest -q -m "conformance and anytime" tests/conformance/test_anytime.py -k "${be}"
+done
+
+# (c) Anytime speed/recall gate: at ε = 5% of the corpus distance scale
+#     on the separated-cluster 5k-set bench, anytime must be >= 2.0x the
+#     exact cascade's wall clock (within self-measured noise) AT a
+#     certified recall >= 0.95 — and must actually converge with the
+#     same id set -> BENCH_PR9.json.
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  echo "== anytime benchmark (JSON -> BENCH_PR9.json) =="
+  python -m benchmarks.run --only anytime --json BENCH_PR9.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR9.json"))["rows"]}
+d = {n: dict(kv.split("=", 1) for kv in r["derived"].split(";"))
+     for n, r in rows.items()}
+a = d["anytime/anytime"]
+speedup = float(a["speedup_vs_exact"])
+recall = float(a["certified_recall"])
+noise = float(d["anytime/selfnoise"]["noise_floor"])
+grace = max(noise, 0.05)
+print(f"anytime: {speedup:.2f}x vs exact (gate >= 2.0x within noise "
+      f"{noise:.3f}) at certified recall {recall:.2f} (gate >= 0.95), "
+      f"converged={a['converged']}, stage={a['stage']}")
+assert speedup >= 2.0 * (1.0 - grace), (
+    f"anytime speedup {speedup:.2f}x below the 2.0x gate "
+    f"(noise grace {grace:.2f})")
+assert recall >= 0.95, (
+    f"certified recall {recall:.2f} below the 0.95 gate")
+assert a["converged"] == "True", "anytime did not converge on the bench corpus"
+assert a["same_id_set"] == "True", (
+    "anytime returned a different id set than exact on the "
+    "separated-cluster bench")
+PY
+fi

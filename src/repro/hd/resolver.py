@@ -27,6 +27,7 @@ from repro.hd import registry
 __all__ = [
     "TILE_THRESHOLD",
     "default_device_kind",
+    "resolve_anytime_refine_cap",
     "resolve_backend",
     "resolve_block_sizes",
     "resolve_masked_backend",
@@ -135,6 +136,28 @@ def resolve_masked_backend(
     if device_kind == "tpu":
         return "batched_pallas"
     return "batched_mirror"
+
+
+def resolve_anytime_refine_cap(
+    n_sets: int,
+    k: int,
+    budget: int | None,
+) -> int:
+    """Cap on raw exact refines the anytime drain may spend.
+
+    Pure function of (corpus size, k, user budget): ``None`` means
+    unbounded, which the drain realises as ``n_sets`` — a greedy drain
+    that refines every candidate has by definition resolved the frontier,
+    so ``n_sets`` IS unbounded for a terminating loop (each refine
+    resolves one distinct candidate; resolved candidates never re-enter
+    the frontier).  An explicit budget is clamped into [0, n_sets]: more
+    refines than candidates cannot be spent, and a negative budget is
+    rejected upstream by the cascade's validation.
+    """
+    del k  # reserved: future heuristics may floor the cap at O(k)
+    if budget is None:
+        return int(n_sets)
+    return max(0, min(int(budget), int(n_sets)))
 
 
 def resolve_multiquery_backend(

@@ -39,6 +39,12 @@ class HDMeta:
     # degrade today, so they carry the defaults.
     degraded: bool = False
     stage_reached: str = "complete"
+    # Search mode that produced the result: "exact" (default — bit-for-bit
+    # brute-force top-k, and every pairwise dispatch) or "anytime" (the
+    # corpus cascade's ε/budget recall-latency knob; see docs/api.md,
+    # "Anytime search contract").  Default keeps the dataclass
+    # backward-compatible for every pairwise constructor.
+    mode: str = "exact"
 
 
 @functools.partial(

@@ -41,6 +41,9 @@ def search(
     deadline_s: float | None = None,
     on_fault: str = "degrade",
     validate: bool = True,
+    mode: str = "exact",
+    epsilon: float = 0.0,
+    budget: int | None = None,
 ):
     """Top-k nearest stored sets to ``query``; see repro.index.cascade.search.
 
@@ -60,6 +63,13 @@ def search(
     stalling the caller; ``on_fault="degrade"`` (default) absorbs
     mid-cascade runtime faults the same way; ``validate`` rejects
     non-finite query points before they can poison a certificate.
+
+    Anytime knob (docs/api.md, "Anytime search contract"):
+    ``mode="anytime"`` with ``epsilon`` (absolute distance tolerance)
+    and/or ``budget`` (raw-refine cap) trades recall for latency under
+    certified [lb, ub] intervals — the result reports
+    ``certified_recall_at_k`` and the ladder rung in ``stage_reached``;
+    ε = 0 with no budget degenerates bit-for-bit to the exact cascade.
     """
     from repro.index import cascade
 
@@ -68,6 +78,7 @@ def search(
         variant=variant, method=method, backend=backend, stage2=stage2,
         masked_backend=masked_backend, config=config, measure=measure,
         deadline_s=deadline_s, on_fault=on_fault, validate=validate,
+        mode=mode, epsilon=epsilon, budget=budget,
     )
 
 
@@ -84,6 +95,9 @@ def search_batch(
     deadline_s: float | None = None,
     on_fault: str = "degrade",
     validate: bool = True,
+    mode: str = "exact",
+    epsilon: float = 0.0,
+    budget: int | None = None,
 ):
     """Top-k per query for a BATCH of queries against one store; see
     repro.index.multiquery.search_batch.
@@ -94,7 +108,8 @@ def search_batch(
     per-query top-k stays bit-for-bit identical to that query's own
     ``search()`` — and hence to brute force.  ``k`` may be one int or a
     per-query sequence; ``deadline_s`` budgets the whole call with
-    per-query degraded semantics.
+    per-query degraded semantics.  ``mode`` / ``epsilon`` / ``budget``
+    are the anytime knob, shared by the whole batch (see ``search``).
     """
     from repro.index import multiquery
 
@@ -103,4 +118,5 @@ def search_batch(
         variant=variant, backend=backend, masked_backend=masked_backend,
         config=config, measure=measure, deadline_s=deadline_s,
         on_fault=on_fault, validate=validate,
+        mode=mode, epsilon=epsilon, budget=budget,
     )

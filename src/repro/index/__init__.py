@@ -21,11 +21,14 @@ dispatch from the same place as pairwise ones::
 from repro.index.cascade import (
     ON_FAULT_MODES,
     SEARCH_METHODS,
+    SEARCH_MODES,
     SEARCH_VARIANTS,
     STAGE2_MODES,
     SearchResult,
+    anytime_frontier,
     bound_scale,
     certified_margins,
+    certified_recall,
     fp_margin,
     fp_value_margin,
     interval_bounds,
@@ -55,8 +58,11 @@ __all__ = [
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
+    "SEARCH_MODES",
     "STAGE2_MODES",
     "ON_FAULT_MODES",
+    "anytime_frontier",
+    "certified_recall",
     "interval_bounds",
     "bound_scale",
     "certified_margins",

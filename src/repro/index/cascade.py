@@ -101,8 +101,11 @@ __all__ = [
     "SearchResult",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
+    "SEARCH_MODES",
     "STAGE2_MODES",
     "ON_FAULT_MODES",
+    "anytime_frontier",
+    "certified_recall",
     "interval_bounds",
     "bound_scale",
     "certified_margins",
@@ -113,6 +116,7 @@ __all__ = [
 
 SEARCH_VARIANTS = ("hausdorff", "directed")
 SEARCH_METHODS = ("cascade", "exact")
+SEARCH_MODES = ("exact", "anytime")
 STAGE2_MODES = ("batched", "sequential")
 ON_FAULT_MODES = ("degrade", "raise")
 
@@ -135,6 +139,10 @@ _POINT_STAGE2B = _faults.declare_point(
 _POINT_BACKEND = _faults.declare_point(
     "cascade.backend", "masked-backend availability gate before every "
     "bucket-granularity dispatch (match= the backend name)")
+_POINT_ANYTIME = _faults.declare_point(
+    "cascade.anytime", "anytime (ε/budget) escalation ladder — failure "
+    "degrades to the best certified intervals reached, exactly like the "
+    "exact cascade's mid-stage faults")
 
 # Exceptions the cascade may degrade on (on_fault="degrade"): the typed
 # reliability family (all RuntimeError subclasses) plus the raw XLA/device
@@ -238,6 +246,18 @@ class SearchResult:
     one.  ``stage_reached`` names the deepest stage that contributed
     tightening ("stage0" | "stage1" | "stage2a" | "stage2b"), or
     "complete" for a fully drained (non-degraded) cascade.
+
+    **Anytime results** (``meta.mode == "anytime"`` with ε > 0 or a
+    budget): membership is the current top-k by certified upper bound,
+    ``values`` holds the exact distance where the ladder resolved a hit
+    and the certified point estimate (clipped into ``[lower, upper]``)
+    otherwise, and every per-hit interval still provably contains the true
+    distance.  ``certified_recall_at_k`` is the fraction of returned hits
+    PROVABLY in the exact brute-force top-k from the intervals alone (hit
+    ``i`` is certified iff at most k−1 other candidates have
+    ``lb_j ≤ ub_i`` — sound under the (value, id) tie-break; see
+    :func:`certified_recall`): 1.0 for complete exact results by
+    construction, never an overestimate of the true recall anywhere else.
     """
 
     ids: np.ndarray       # (k,) int32 set ids
@@ -248,6 +268,7 @@ class SearchResult:
     upper: np.ndarray = None    # (k,) fp64 certified upper bounds
     degraded: bool = False
     stage_reached: str = "complete"
+    certified_recall_at_k: float = 1.0
 
     def __post_init__(self):
         # default the certificate to the exact values (lower == upper)
@@ -401,6 +422,72 @@ def _rank(values: np.ndarray, candidates: np.ndarray, k: int) -> np.ndarray:
     return candidates[order[:k]]
 
 
+def anytime_frontier(lb, ub, resolved, k: int, epsilon: float):
+    """The ε-convergence rule of ``mode="anytime"`` — pure numpy, shared by
+    the single-query cascade and the multi-query batch path so the two can
+    never diverge on what "converged" means.
+
+    Returns ``(frontier_mask, top, tau)``:
+
+    top      — the current top-k candidate ids, ascending by (certified
+               upper bound, id); the membership an anytime return reports.
+    tau      — the k-th smallest certified upper bound (``ub[top[-1]]``).
+    frontier — boolean (n,) mask of the candidates whose refinement the
+               ε-stability of that top-k still requires, the union of two
+               blocker classes:
+
+               * value-precision blockers — unresolved members whose
+                 interval is wider than ε (so every RETURNED interval ends
+                 up ≤ ε wide, or exact);
+               * membership blockers — unresolved non-members with
+                 ``lb ≤ τ − ε``, i.e. candidates that could still beat the
+                 reported top-k by MORE than ε.
+
+    An empty frontier certifies the ε-approximate top-k guarantee: every
+    excluded candidate's true distance exceeds ``τ − ε``, and every
+    included one's is at most ``τ`` — no excluded candidate beats an
+    included one by more than ε.  At ε = 0 the rule degenerates to the
+    exact cascade's drain frontier (members must resolve exactly, and
+    every candidate with ``lb ≤ τ`` blocks), which is why a fully drained
+    ε = 0 anytime search returns brute force's bits.
+    """
+    n = int(lb.shape[0])
+    order = np.lexsort((np.arange(n), ub))
+    top = order[:k]
+    tau = float(ub[top[-1]])
+    in_top = np.zeros((n,), bool)
+    in_top[top] = True
+    unresolved = ~np.asarray(resolved, bool)
+    width_blockers = in_top & unresolved & ((ub - lb) > epsilon)
+    member_blockers = ~in_top & unresolved & (lb <= tau - epsilon)
+    return width_blockers | member_blockers, top, tau
+
+
+def certified_recall(lb, ub, top, k: int) -> float:
+    """Fraction of ``top`` PROVABLY in the exact top-k, from intervals alone.
+
+    Hit ``i`` is certified in SOME valid top-k iff at most k−1 other
+    candidates can STRICTLY beat it.  ``j`` can strictly beat ``i`` only
+    if ``lb_j < ub_i`` (otherwise ``value_j ≥ lb_j ≥ ub_i ≥ value_i``), so
+    counting ``lb_j < ub_i`` upper-bounds the strict beaters — the strict
+    inequality is what keeps exactly-tied candidates (duplicate sets:
+    ``lb_j = ub_i`` once resolved) from pessimising the certificate, since
+    a tie is resolvable in ``i``'s favour under a (value, id) tie-break.
+    The rule is monotone — tightening any interval can only certify more
+    hits — which is what makes the reported recall sound to act on: it
+    never overestimates the true recall (conformance-gated).
+    """
+    if k <= 0:
+        return 1.0
+    top = np.asarray(top)
+    ub_top = np.asarray(ub)[top]
+    counts = (np.asarray(lb)[None, :] < ub_top[:, None]).sum(axis=1)
+    # an unresolved candidate counts itself (lb_i < ub_i): never a strict
+    # beater of itself, so subtract it back out
+    counts -= (np.asarray(lb)[top] < ub_top).astype(counts.dtype)
+    return float(int((counts <= k - 1).sum()) / k)
+
+
 def _exact_value(query, pts, variant: str, backend: str, cfg: HDConfig) -> np.float32:
     from repro import hd as _hd
 
@@ -425,6 +512,9 @@ def search(
     deadline_s: float | None = None,
     on_fault: str = "degrade",
     validate: bool = True,
+    mode: str = "exact",
+    epsilon: float = 0.0,
+    budget: int | None = None,
 ) -> SearchResult:
     # Observability shim: when tracing is off this is ONE flag check on top
     # of the implementation; when on, the whole request runs under a root
@@ -434,11 +524,13 @@ def search(
         variant=variant, method=method, backend=backend, stage2=stage2,
         masked_backend=masked_backend, config=config, measure=measure,
         deadline_s=deadline_s, on_fault=on_fault, validate=validate,
+        mode=mode, epsilon=epsilon, budget=budget,
     )
     if not _obs.enabled():
         return _search_impl(query, store, k, **kwargs)
     with _obs.span(
-        "index.search", k=k, variant=variant, method=method, stage2=stage2
+        "index.search", k=k, variant=variant, method=method, stage2=stage2,
+        mode=mode,
     ) as sp:
         res = _search_impl(query, store, k, **kwargs)
         sp.set(
@@ -446,6 +538,7 @@ def search(
             stage_reached=res.stage_reached,
             exact_refines=res.stats.get("exact_refines", 0),
             prune_fraction=res.stats.get("prune_fraction"),
+            certified_recall=res.certified_recall_at_k,
         )
         _record_stats("index.search", res.stats)
         return res
@@ -466,6 +559,9 @@ def _search_impl(
     deadline_s: float | None = None,
     on_fault: str = "degrade",
     validate: bool = True,
+    mode: str = "exact",
+    epsilon: float = 0.0,
+    budget: int | None = None,
 ) -> SearchResult:
     """Top-k nearest stored sets to ``query`` under a set distance.
 
@@ -513,10 +609,39 @@ def _search_impl(
                ValueError; they would silently poison every certified
                bound.  ``validate=False`` is the pre-validated hot-path
                escape hatch.
+    mode     — "exact" (default): the cascade drains to the provably
+               brute-force-identical top-k.  "anytime": the recall/latency
+               knob (docs/api.md, "Anytime search contract") — the cascade
+               keeps per-candidate ProHD point estimates with certified
+               [lb, ub] intervals, escalates stages only for the
+               candidates the ε-stability of the top-k still requires
+               (:func:`anytime_frontier`), refines greedily
+               tightest-first (ascending certified lower bound), and
+               stops as soon as no excluded candidate can beat an
+               included one by more than ``epsilon`` AND every returned
+               interval is ≤ ε wide (or exact).  The result reports
+               ``certified_recall_at_k`` and the ladder rung reached in
+               ``stage_reached``.  With ε = 0 and no budget, anytime
+               degenerates BIT-FOR-BIT to the exact cascade
+               (conformance-gated under every masked backend).
+    epsilon  — anytime only: the absolute distance tolerance (same units
+               as the returned values).  ε ≥ 0; larger ε terminates
+               earlier (ε above the corpus diameter returns the certified
+               stage-0 state untouched).
+    budget   — anytime only: cap on raw exact refines the anytime drain
+               may spend (None = unbounded).  Exhausting it stops the
+               ladder with ``stats['converged'] = False`` — a budget stop
+               is an honest partial answer, NOT a degraded one (degraded
+               stays reserved for deadlines and absorbed faults).
+               Refinement order is deterministic, so a larger budget's
+               refine sequence extends a smaller one's: intervals only
+               tighten and certified recall never decreases as the budget
+               grows (property-gated).
 
     Returns a :class:`SearchResult`; unless ``degraded`` is set, the top-k
     ids and values are identical to brute force by construction (see
-    module docstring).
+    module docstring) for ``mode="exact"``, and carry the ε certificate
+    above for ``mode="anytime"``.
     """
     if variant not in SEARCH_VARIANTS:
         raise ValueError(f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}")
@@ -526,6 +651,26 @@ def _search_impl(
         raise ValueError(f"unknown stage2 mode {stage2!r}; expected one of {STAGE2_MODES}")
     if on_fault not in ON_FAULT_MODES:
         raise ValueError(f"unknown on_fault mode {on_fault!r}; expected one of {ON_FAULT_MODES}")
+    if mode not in SEARCH_MODES:
+        raise ValueError(f"unknown search mode {mode!r}; expected one of {SEARCH_MODES}")
+    epsilon = float(epsilon)
+    if not np.isfinite(epsilon) or epsilon < 0.0:
+        raise ValueError(f"epsilon must be a finite float >= 0, got {epsilon}")
+    if budget is not None and int(budget) < 0:
+        raise ValueError(f"budget must be None or an int >= 0, got {budget}")
+    if mode == "exact" and (epsilon != 0.0 or budget is not None):
+        raise ValueError(
+            "epsilon/budget are anytime knobs; pass mode='anytime' to use them"
+        )
+    if mode == "anytime" and method == "exact":
+        raise ValueError(
+            "mode='anytime' rides the certified cascade; method='exact' "
+            "(brute force) has no bounds to refine — drop one of the two"
+        )
+    # ε = 0 with no budget is DEFINED as the exact cascade (the knob's
+    # degenerate endpoint): run the exact code path, so bit-for-bit
+    # identity is structural, not an equivalence to maintain.
+    anytime = mode == "anytime" and (epsilon > 0.0 or budget is not None)
     if k < 0:
         raise ValueError(f"k must be >= 0, got {k}")
     if masked_backend is not None and masked_backend not in masked.EXACT_MASKED_BACKENDS:
@@ -552,22 +697,28 @@ def _search_impl(
         meta = HDMeta(
             variant=variant, method=method, backend=backend,
             block_a=0, block_b=0, elapsed_s=0.0 if measure else None,
+            mode=mode,
         )
+        stats0: dict[str, Any] = {
+            "candidates_scanned": store.n_sets, "k": 0,
+            "stage0_pruned": 0, "stage1_pruned": 0,
+            "stage2_mode": stage2, "stage2_calls": 0,
+            "stage2_distinct_shapes": 0, "stage2_batched_candidates": 0,
+            "exact_refines": 0, "prune_fraction": 1.0, "mode": mode,
+        }
+        if mode == "anytime":
+            stats0.update(epsilon=epsilon, budget=budget,
+                          anytime_refines=0, converged=True)
         return SearchResult(
             ids=np.zeros((0,), np.int32),
             values=np.zeros((0,), np.float32),
-            stats={
-                "candidates_scanned": store.n_sets, "k": 0,
-                "stage0_pruned": 0, "stage1_pruned": 0,
-                "stage2_mode": stage2, "stage2_calls": 0,
-                "stage2_distinct_shapes": 0, "stage2_batched_candidates": 0,
-                "exact_refines": 0, "prune_fraction": 1.0,
-            },
+            stats=stats0,
             meta=meta,
         )
 
     t0 = time.perf_counter() if measure else 0.0
-    budget = _Budget(deadline_s)
+    budget = None if budget is None else int(budget)
+    deadline = _Budget(deadline_s)
     n = store.n_sets
     k_eff = min(k, n)
     directed = variant == "directed"
@@ -627,6 +778,13 @@ def _search_impl(
     # so a degraded return is certified at EVERY point of the cascade.
     lb = np.zeros((n,), np.float64)
     ub = np.full((n,), np.inf, np.float64)
+    # Anytime point estimates (float64, NaN until a stage produces one):
+    # stage 1 contributes the masked ProHD value, stage 2a the batched
+    # exact value, stage 2b the raw exact value.  Consulted only by the
+    # anytime assembly, and always clipped into the certified interval.
+    est = np.full((n,), np.nan, np.float64)
+    anytime_refines = 0
+    anytime_converged = False
     exact_refines = 0
     degraded = False
     stage_reached = "stage0"
@@ -634,7 +792,7 @@ def _search_impl(
     stats: dict[str, Any] = {"candidates_scanned": n, "k": k_eff}
 
     def checkpoint() -> None:
-        if budget.expired():
+        if deadline.expired():
             raise _DeadlineHit()
 
     def refine(sid: int) -> None:
@@ -711,9 +869,157 @@ def _search_impl(
                     lb[sid] = ub[sid] = float(values[sid])
                     stage_reached = "stage2b"
 
+        def run_anytime() -> None:
+            """The anytime escalation ladder (``mode="anytime"`` with ε > 0
+            or a refine budget): drive the SAME certified stages the exact
+            cascade uses, but only over the candidates the ε-stability of
+            the top-k still requires (:func:`anytime_frontier`), and stop
+            the moment the frontier empties — or the refine budget runs
+            out (an honest partial answer: ``converged=False``, never
+            degraded).  Every interval update is identical to the exact
+            cascade's, so deadline/fault degradation needs no
+            anytime-specific handling — the shared except clauses return
+            the best certified state exactly as they do for exact mode."""
+            nonlocal stage_reached, anytime_refines, anytime_converged
+            nonlocal stage2_calls
+            with _obs.span(
+                "cascade.anytime", epsilon=epsilon,
+                budget=-1 if budget is None else budget, k=k_eff,
+            ) as _spany:
+                _faults.fire(_POINT_ANYTIME)
+                cap_refines = resolver.resolve_anytime_refine_cap(
+                    n, k_eff, budget
+                )
+                front, _, _ = anytime_frontier(lb, ub, resolved, k_eff, epsilon)
+                stage0_front = int(front.sum())
+
+                # -- stage 1: masked ProHD certificates, frontier rows only
+                if front.any():
+                    checkpoint()
+                    _faults.fire(_POINT_STAGE1)
+                    m = projections.default_num_directions(store.dim)
+                    for bucket in store.packed_buckets().values():
+                        rows = np.nonzero(front[bucket.set_ids])[0]
+                        if rows.size == 0:
+                            continue
+                        checkpoint()
+                        take = _pow2_take(rows)
+                        cert = _with_backend(lambda be: _stage1_batch(
+                            q,
+                            jnp.take(bucket.points, take, axis=0),
+                            jnp.take(bucket.valid, take, axis=0),
+                            alpha=cfg.alpha, m=m, directed=directed, backend=be,
+                        ))
+                        lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
+                        sids = bucket.set_ids[rows]
+                        lb1, ub1 = certified_margins(
+                            lo1.astype(np.float64)[: rows.size],
+                            np.asarray(cert.upper, np.float64)[: rows.size],
+                            scale[sids],
+                            store.dim,
+                        )
+                        lb[sids] = np.maximum(lb[sids], lb1)
+                        ub[sids] = np.minimum(ub[sids], ub1)
+                        est[sids] = np.clip(
+                            np.asarray(cert.hd, np.float64)[: rows.size],
+                            lb[sids], ub[sids],
+                        )
+                        stage_reached = "stage1"
+                    front, _, _ = anytime_frontier(lb, ub, resolved, k_eff, epsilon)
+
+                # -- stage 2a: batched masked EXACT, frontier rows only ----
+                if front.any():
+                    checkpoint()
+                    _faults.fire(_POINT_STAGE2A)
+                    slot = store.slot_index()
+                    buckets = store.packed_buckets()
+                    n_q = int(q.shape[0])
+                    groups: dict[int, list[int]] = {}
+                    for sid in np.nonzero(front)[0]:
+                        groups.setdefault(slot[int(sid)][0], []).append(int(sid))
+                    for cap in sorted(groups, key=lambda c: min(lb[s] for s in groups[c])):
+                        # One bucket's tightened intervals shrink the next
+                        # bucket's frontier — the exact 2a loop's
+                        # adaptivity, under the ε-frontier rule.  Every
+                        # frontier member provably has lb ≤ τ (top members
+                        # by ub ≤ τ, outside blockers by lb ≤ τ − ε), so
+                        # the in-kernel lb/cut gate can never skip a lane
+                        # we need.
+                        front2, _, tau = anytime_frontier(
+                            lb, ub, resolved, k_eff, epsilon
+                        )
+                        sids = [s for s in groups[cap] if front2[s]]
+                        if not sids:
+                            continue
+                        checkpoint()
+                        stats["stage2_batched_candidates"] += len(sids)
+                        bucket = buckets[cap]
+                        rows = np.asarray([slot[s][1] for s in sids])
+                        take = _pow2_take(rows)
+                        batch = int(take.shape[0])
+                        gate_lb = np.concatenate(
+                            [lb[sids], np.full((batch - rows.size,), np.inf)]
+                        ).astype(np.float32)
+                        gate_cut = np.full(
+                            (batch,),
+                            tau * (1.0 + 1e-6) if np.isfinite(tau) else np.inf,
+                            np.float32,
+                        )
+
+                        def _call_2a(be):
+                            block_a, block_b = resolver.resolve_block_sizes(
+                                n_q, cap, store.dim, device_kind=device_kind,
+                                backend="fused_pallas" if be == "batched_pallas" else "tiled",
+                            )
+                            return be, _stage2_batch(
+                                q,
+                                jnp.take(bucket.points, take, axis=0),
+                                jnp.take(bucket.valid, take, axis=0),
+                                jnp.asarray(gate_lb),
+                                jnp.asarray(gate_cut),
+                                directed=directed, backend=be,
+                                block_a=block_a, block_b=block_b,
+                            )
+
+                        used_be, raw_vals = _with_backend(_call_2a)
+                        vals = np.asarray(raw_vals, np.float64)[: rows.size]
+                        pad = fp_value_margin(store.dim, scale[sids], vals)
+                        lb[sids] = np.maximum(lb[sids], np.maximum(vals - pad, 0.0))
+                        ub[sids] = np.minimum(ub[sids], vals + pad)
+                        est[sids] = np.clip(vals, lb[sids], ub[sids])
+                        stage2_shapes.add((cap, batch, used_be))
+                        stage2_calls += 1
+                        stage_reached = "stage2a"
+                    front, _, _ = anytime_frontier(lb, ub, resolved, k_eff, epsilon)
+
+                # -- stage 2b: greedy raw refinement, tightest-first -------
+                # Ascending certified lower bound (tie: id) — Chubet-style
+                # greedy order: the candidate most likely to decide the
+                # top-k boundary is refined first.  Deterministic, so a
+                # larger budget's refine sequence extends a smaller one's.
+                if front.any() and cap_refines > 0:
+                    _faults.fire(_POINT_STAGE2B)
+                while front.any() and anytime_refines < cap_refines:
+                    checkpoint()
+                    cand = np.nonzero(front)[0]
+                    sid = int(cand[np.lexsort((cand, lb[cand]))[0]])
+                    refine(sid)
+                    lb[sid] = ub[sid] = est[sid] = float(values[sid])
+                    anytime_refines += 1
+                    stage_reached = "stage2b"
+                    front, _, _ = anytime_frontier(lb, ub, resolved, k_eff, epsilon)
+                anytime_converged = not bool(front.any())
+                _spany.set(
+                    refines=anytime_refines, converged=anytime_converged,
+                    stage0_frontier=stage0_front,
+                    frontier_left=int(front.sum()),
+                )
+
         try:
             # -- stage 1: vmapped bucketed masked ProHD on the survivors --
-            if int(alive.sum()) > k_eff:
+            # (exact mode; the anytime ladder runs its own frontier-
+            # restricted stage 1 inside ``run_anytime``)
+            if not anytime and int(alive.sum()) > k_eff:
                 with _obs.span("cascade.stage1", frontier=int(alive.sum())) as _sp1:
                     checkpoint()
                     _faults.fire(_POINT_STAGE1)
@@ -757,7 +1063,11 @@ def _search_impl(
             # batched pays one masked pass per surviving bucket (cache
             # key: capacity × padded batch × family) plus one raw call per
             # boundary candidate (≈ k).
-            if stage2 == "sequential":
+            if anytime:
+                # The ε/budget escalation ladder replaces stage 1 + stage 2
+                # wholesale (defined above, next to drain_raw).
+                run_anytime()
+            elif stage2 == "sequential":
                 drain_raw()
             else:
                 # -- 2a: one vmapped masked EXACT pass per surviving
@@ -872,13 +1182,43 @@ def _search_impl(
         exact_refines=exact_refines,
         prune_fraction=1.0 - exact_refines / n,
         refine_backend=refine_backend,
+        mode=mode,
     )
+    if mode == "anytime":
+        stats.update(
+            epsilon=epsilon, budget=budget,
+            anytime_refines=anytime_refines,
+            # ε = 0 with no budget runs the exact path: it converged iff it
+            # drained (i.e. was not cut short by a deadline/fault).
+            converged=anytime_converged if anytime else not degraded,
+        )
 
-    if not degraded:
+    if not degraded and anytime:
+        # Anytime membership: the k smallest certified upper bounds
+        # (tie: id).  On a converged frontier this is exactly the set the
+        # ε-guarantee speaks about — no excluded candidate can beat an
+        # included one by more than ε, and every returned interval is
+        # ≤ ε wide or exact.  Values are the raw exact number where
+        # resolved, else the certified point estimate clipped into
+        # [lb, ub] (interval midpoint if no stage produced an estimate);
+        # presentation order is ascending (value, id), the exact path's
+        # ranking rule.
+        order = np.lexsort((np.arange(n), ub))
+        top = order[:k_eff]
+        pt = np.where(np.isnan(est), 0.5 * (lb + ub), np.clip(est, lb, ub))
+        vals64 = np.where(resolved, values.astype(np.float64), pt)
+        top = top[np.lexsort((top, vals64[top]))]
+        out_values = vals64[top].astype(np.float32)
+        out_lower = lb[top].copy()
+        out_upper = ub[top].copy()
+        stage_final = stage_reached
+        recall = certified_recall(lb, ub, top, k_eff)
+    elif not degraded:
         top = _rank(values, np.nonzero(resolved)[0], k_eff)
         out_values = values[top]
         out_lower = out_upper = out_values.astype(np.float64)
         stage_final = "complete"
+        recall = 1.0
     else:
         # Best certified state reached: rank ALL candidates ascending by
         # certified upper bound (tie: id) — refined candidates carry their
@@ -896,6 +1236,10 @@ def _search_impl(
         stage_final = stage_reached
         stats["n_resolved"] = int(resolved.sum())
         stats["deadline_s"] = deadline_s
+        # Honest recall certificate for the degraded prefix: how many of
+        # the returned hits are PROVABLY top-k under the intervals reached.
+        # Vacuous stage-0-of-nothing state certifies 0 of them — correct.
+        recall = certified_recall(lb, ub, top, k_eff)
         if fault is not None:
             # Structured: the full __cause__ chain, outermost first — a
             # wrapped root cause survives into logs and span events (the
@@ -910,12 +1254,13 @@ def _search_impl(
     meta = HDMeta(
         variant=variant, method=method, backend=backend,
         block_a=0, block_b=0, elapsed_s=elapsed,
-        degraded=degraded, stage_reached=stage_final,
+        degraded=degraded, stage_reached=stage_final, mode=mode,
     )
     return SearchResult(
         ids=top.astype(np.int32), values=out_values, stats=stats, meta=meta,
         lower=out_lower, upper=out_upper,
         degraded=degraded, stage_reached=stage_final,
+        certified_recall_at_k=recall,
     )
 
 

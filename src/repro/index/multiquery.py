@@ -67,6 +67,7 @@ from repro.hd.result import HDMeta
 from repro.index import cascade as _cascade
 from repro.index.cascade import (
     ON_FAULT_MODES,
+    SEARCH_MODES,
     SEARCH_VARIANTS,
     SearchResult,
     _Budget,
@@ -76,8 +77,10 @@ from repro.index.cascade import (
     _kth_smallest,
     _pow2_take,
     _rank,
+    anytime_frontier,
     bound_scale,
     certified_margins,
+    certified_recall,
     fp_value_margin,
     interval_bounds,
 )
@@ -147,6 +150,9 @@ def search_batch(
     deadline_s: float | None = None,
     on_fault: str = "degrade",
     validate: bool = True,
+    mode: str = "exact",
+    epsilon: float = 0.0,
+    budget: int | None = None,
 ) -> list[SearchResult]:
     # Observability shim (see cascade.search): one flag check when tracing
     # is off; a root "index.search_batch" span with the stage spans as
@@ -155,12 +161,13 @@ def search_batch(
         variant=variant, backend=backend, masked_backend=masked_backend,
         config=config, measure=measure, deadline_s=deadline_s,
         on_fault=on_fault, validate=validate,
+        mode=mode, epsilon=epsilon, budget=budget,
     )
     if not _obs.enabled():
         return _search_batch_impl(queries, store, k, **kwargs)
     queries = list(queries)  # materialize once: the span consumes len()
     with _obs.span(
-        "index.search_batch", batch=len(queries), variant=variant
+        "index.search_batch", batch=len(queries), variant=variant, mode=mode,
     ) as sp:
         results = _search_batch_impl(queries, store, k, **kwargs)
         if results:
@@ -188,6 +195,9 @@ def _search_batch_impl(
     deadline_s: float | None = None,
     on_fault: str = "degrade",
     validate: bool = True,
+    mode: str = "exact",
+    epsilon: float = 0.0,
+    budget: int | None = None,
 ) -> list[SearchResult]:
     """Top-k nearest stored sets for EVERY query in a batch.
 
@@ -211,6 +221,20 @@ def _search_batch_impl(
     on_fault — "degrade" absorbs mid-cascade runtime faults into degraded
                results for the incomplete queries; "raise" propagates.
                Stage-0 faults always raise (no certified state yet).
+    mode / epsilon / budget — the anytime knob, shared by the WHOLE batch
+               (the engine batches requests by (mode, ε, budget) class so
+               one flush shares one ε).  Semantics per query are exactly
+               ``search(mode=, epsilon=, budget=)``: certified [lb, ub]
+               intervals, greedy tightest-first refinement, termination
+               once each query's top-k is ε-stable, ``budget`` capping
+               each UNIQUE query's raw refines.  With mixed per-query k on
+               duplicate queries the drain drives the UNION of every
+               owner's ε-frontier and each owner's top-k is re-derived at
+               its OWN k from the final certified state — est-ranked
+               prefix slicing of a deeper ranking is NOT ε-sound, so the
+               exact path's prefix-slice shortcut is not used here.
+               ε = 0 with no budget is DEFINED as the exact batch path
+               (bit-for-bit, structural).
 
     Returns one :class:`SearchResult` per query, in input order.  Unless
     ``degraded`` is set, result ``i``'s ids/values are bit-for-bit
@@ -240,6 +264,21 @@ def _search_batch_impl(
         )
     if store.n_sets == 0:
         raise ValueError("cannot search an empty SetStore")
+    if mode not in SEARCH_MODES:
+        raise ValueError(f"unknown search mode {mode!r}; expected one of {SEARCH_MODES}")
+    epsilon = float(epsilon)
+    if not np.isfinite(epsilon) or epsilon < 0.0:
+        raise ValueError(f"epsilon must be a finite float >= 0, got {epsilon}")
+    if budget is not None and int(budget) < 0:
+        raise ValueError(f"budget must be None or an int >= 0, got {budget}")
+    if mode == "exact" and (epsilon != 0.0 or budget is not None):
+        raise ValueError(
+            "epsilon/budget are anytime knobs; pass mode='anytime' to use them"
+        )
+    # Same degenerate-endpoint rule as the single-query cascade: ε = 0 with
+    # no budget IS the exact batch path, structurally.
+    anytime = mode == "anytime" and (epsilon > 0.0 or budget is not None)
+    budget = None if budget is None else int(budget)
     queries = list(queries)
     n_queries = len(queries)
     if n_queries == 0:
@@ -279,7 +318,7 @@ def _search_batch_impl(
         qs_j.append(q)
 
     t0 = time.perf_counter() if measure else 0.0
-    budget = _Budget(deadline_s)
+    deadline = _Budget(deadline_s)
     n = store.n_sets
     k_eff = [min(ki, n) for ki in k_list]
     directed = variant == "directed"
@@ -307,6 +346,14 @@ def _search_batch_impl(
     a_of: dict[int, int] = {ui: ai for ai, ui in enumerate(act)}
     n_act = len(act)
     k_u = [k_u_all[ui] for ui in act]
+    # Anytime only: the DISTINCT owner depths per unique query — the drain
+    # drives the union of the ε-frontier at every one of them, so each
+    # owner's own-k top-k is individually certified at assembly.
+    ks_of: list[list[int]] = [[] for _ in act]
+    if anytime:
+        for qi, ui in enumerate(owner):
+            if ui in a_of and k_eff[qi] > 0 and k_eff[qi] not in ks_of[a_of[ui]]:
+                ks_of[a_of[ui]].append(k_eff[qi])
 
     # Same hoisted refine-backend discipline as search(): one resolver
     # decision per call, threaded concretely through every raw refine.
@@ -350,7 +397,7 @@ def _search_batch_impl(
                     raise
 
     def checkpoint() -> None:
-        if budget.expired():
+        if deadline.expired():
             raise _DeadlineHit()
 
     # Per-active-unique certified interval state — (A, N) analogues of the
@@ -359,6 +406,11 @@ def _search_batch_impl(
     resolved = np.zeros((n_act, n), bool)
     lb = np.zeros((n_act, n), np.float64)
     ub = np.full((n_act, n), np.inf, np.float64)
+    # Anytime point estimates per (query, candidate) — NaN until a stage
+    # produces one; always clipped into the certified interval (see the
+    # single-query cascade's ``est``).
+    est = np.full((n_act, n), np.nan, np.float64)
+    converged = np.zeros((n_act,), bool)
     alive = np.ones((n_act, n), bool)
     scale = np.ones((n_act, n), np.float64)
     stage0_pruned = np.zeros((n_act,), np.int64)
@@ -369,6 +421,17 @@ def _search_batch_impl(
     launches = 0
     s2a_shapes: set[tuple] = set()
     fault: BaseException | None = None
+
+    def _front_union(ai: int) -> np.ndarray:
+        """Union of unique query ``ai``'s ε-frontiers over every distinct
+        owner depth — the set of candidates SOME owner's ε-stability still
+        needs escalated.  Empty union ⇒ every owner's own-k top-k is
+        simultaneously converged."""
+        front = np.zeros((n,), bool)
+        for kk in ks_of[ai]:
+            f, _, _ = anytime_frontier(lb[ai], ub[ai], resolved[ai], kk, epsilon)
+            front |= f
+        return front
 
     if n_act:
         # -- stage 0: ONE (Q × corpus) summary-bound pass ----------------
@@ -424,12 +487,20 @@ def _search_batch_impl(
         # the shared-slab launch everywhere (how CPU tests certify it).
         shared_slab = device_kind == "tpu" or masked_backend is not None
         try:
+            if anytime:
+                # Fires once per anytime batch, before any escalation —
+                # degradation semantics from here down are IDENTICAL to
+                # the exact batch path (best certified state, per query).
+                _faults.fire(_cascade._POINT_ANYTIME)
             # -- stage 2a: per surviving bucket, tighten the batch --------
             with _obs.span("cascade.stage2a", shared_slab=shared_slab) as _sp2a:
                 _faults.fire(_cascade._POINT_STAGE2A)
                 slot = store.slot_index()
                 buckets = store.packed_buckets()
-                frontier = alive & ~resolved
+                if anytime:
+                    frontier = np.stack([_front_union(ai) for ai in range(n_act)])
+                else:
+                    frontier = alive & ~resolved
                 groups: dict[int, list[int]] = {}
                 for sid in np.nonzero(frontier.any(axis=0))[0]:
                     groups.setdefault(slot[int(sid)][0], []).append(int(sid))
@@ -443,11 +514,23 @@ def _search_batch_impl(
                     taus = np.asarray(
                         [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
                     )
-                    alive &= lb <= taus[:, None]
                     cols = np.asarray(groups[cap], np.int64)
-                    mask = alive[:, cols] & ~resolved[:, cols] & (
-                        lb[:, cols] <= taus[:, None]
-                    )
+                    if anytime:
+                        # Re-derive the ε-frontier union between buckets —
+                        # one bucket's tightening shrinks the next's work.
+                        # Every union member has lb ≤ τ at SOME owner depth
+                        # kk ≤ k_u, and τ is monotone in k, so the τ_{k_u}
+                        # gate cut below can never skip a lane the union
+                        # still needs.
+                        fm = np.stack(
+                            [_front_union(ai) for ai in range(n_act)]
+                        )
+                        mask = fm[:, cols]
+                    else:
+                        alive &= lb <= taus[:, None]
+                        mask = alive[:, cols] & ~resolved[:, cols] & (
+                            lb[:, cols] <= taus[:, None]
+                        )
                     keep = mask.any(axis=0)
                     if not keep.any():
                         continue
@@ -502,6 +585,10 @@ def _search_batch_impl(
                         ub[:, sids] = np.where(
                             mask, np.minimum(ub[:, sids], vals + pad), ub[:, sids]
                         )
+                        est[:, sids] = np.where(
+                            mask, np.clip(vals, lb[:, sids], ub[:, sids]),
+                            est[:, sids],
+                        )
                         launches += 1
                         s2a_shapes.add((cap, batch, used_be))
                         s2a_pairs += mask.sum(axis=1)
@@ -553,6 +640,9 @@ def _search_batch_impl(
                                 lb[ai, q_sids], np.maximum(vals - pad, 0.0)
                             )
                             ub[ai, q_sids] = np.minimum(ub[ai, q_sids], vals + pad)
+                            est[ai, q_sids] = np.clip(
+                                vals, lb[ai, q_sids], ub[ai, q_sids]
+                            )
                             launches += 1
                             s2a_shapes.add((cap, batch_q, used_be))
                             s2a_pairs[ai] += q_rows.size
@@ -567,6 +657,46 @@ def _search_batch_impl(
             with _obs.span("cascade.stage2b") as _sp2b:
                 _faults.fire(_cascade._POINT_STAGE2B)
                 for ai in range(n_act):
+                    if anytime:
+                        # Greedy budget-capped drain of the frontier UNION,
+                        # ascending certified lower bound (tie: id) — the
+                        # single-query anytime drain per unique query, one
+                        # span each so the ε / refine-count attributes
+                        # mirror ``cascade.search``'s.
+                        with _obs.span(
+                            "cascade.anytime", epsilon=epsilon,
+                            budget=-1 if budget is None else budget,
+                            k=k_u[ai],
+                        ) as _spany:
+                            cap_r = resolver.resolve_anytime_refine_cap(
+                                n, k_u[ai], budget
+                            )
+                            front = _front_union(ai)
+                            while front.any() and int(refines[ai]) < cap_r:
+                                checkpoint()
+                                cand = np.nonzero(front)[0]
+                                sid = int(
+                                    cand[np.lexsort((cand, lb[ai][cand]))[0]]
+                                )
+                                values[ai, sid] = _exact_value(
+                                    uniq[act[ai]], store.get(sid), variant,
+                                    refine_backend, cfg,
+                                )
+                                resolved[ai, sid] = True
+                                refines[ai] += 1
+                                lb[ai, sid] = ub[ai, sid] = float(values[ai, sid])
+                                est[ai, sid] = float(values[ai, sid])
+                                stage_reached[ai] = "stage2b"
+                                front = _front_union(ai)
+                            converged[ai] = not bool(front.any())
+                            # A budget stop is an honest partial answer,
+                            # NOT degraded — completed stays True.
+                            completed[ai] = True
+                            _spany.set(
+                                refines=int(refines[ai]),
+                                converged=bool(converged[ai]),
+                            )
+                        continue
                     while True:
                         tau = _kth_smallest(ub[ai], k_u[ai])
                         alive[ai] &= lb[ai] <= tau
@@ -611,9 +741,36 @@ def _search_batch_impl(
         "stage2_distinct_shapes": len(s2a_shapes),
         "masked_backend": available[0] if available else None,
         "refine_backend": refine_backend,
+        "mode": mode,
     }
     if backend_fallbacks:
         base_stats["backend_fallbacks"] = list(backend_fallbacks)
+
+    def _anytime_slice(ai: int, ki: int) -> tuple:
+        """Anytime assembly for one unique query at one owner's OWN k:
+        (ids, values, lower, upper, certified_recall).
+
+        est-ranked prefix slicing of a deeper shared ranking is NOT
+        ε-sound (two prefix cuts can disagree by up to 2ε), so each owner
+        re-derives its top-k from the final certified state — the drain
+        drove the UNION of every owner's ε-frontier, so every per-k T is
+        individually converged.  Same rules as the single-query anytime
+        assembly: membership by (ub, id), values = raw exact where
+        resolved else the clipped point estimate, presentation order
+        ascending (value, id)."""
+        order = np.lexsort((np.arange(n), ub[ai]))
+        top = order[:ki]
+        pt = np.where(
+            np.isnan(est[ai]), 0.5 * (lb[ai] + ub[ai]),
+            np.clip(est[ai], lb[ai], ub[ai]),
+        )
+        vals64 = np.where(resolved[ai], values[ai].astype(np.float64), pt)
+        top = top[np.lexsort((top, vals64[top]))]
+        recall = certified_recall(lb[ai], ub[ai], top, ki)
+        return (
+            top.astype(np.int32), vals64[top].astype(np.float32),
+            lb[ai][top].copy(), ub[ai][top].copy(), recall,
+        )
 
     def _unique_result(ui: int) -> tuple:
         """(ids, values, lower, upper, degraded, stage, stats) for unique
@@ -625,6 +782,9 @@ def _search_batch_impl(
                 stage2_batched_candidates=0, exact_refines=0,
                 prune_fraction=1.0,
             )
+            if mode == "anytime":
+                stats.update(epsilon=epsilon, budget=budget,
+                             anytime_refines=0, converged=True)
             empty = np.zeros((0,), np.float32)
             return (
                 np.zeros((0,), np.int32), empty,
@@ -642,6 +802,22 @@ def _search_batch_impl(
             exact_refines=int(refines[ai]),
             prune_fraction=1.0 - int(refines[ai]) / n,
         )
+        if mode == "anytime":
+            stats.update(
+                epsilon=epsilon, budget=budget,
+                anytime_refines=int(refines[ai]),
+                # ε = 0 / no budget runs the exact path: converged iff its
+                # drain completed (was not cut short).
+                converged=bool(converged[ai]) if anytime else bool(completed[ai]),
+            )
+        if completed[ai] and anytime:
+            top, out_values, out_lower, out_upper, _ = _anytime_slice(
+                ai, k_u[ai]
+            )
+            return (
+                top, out_values, out_lower, out_upper,
+                False, stage_reached[ai], stats,
+            )
         if completed[ai]:
             top = _rank(values[ai], np.nonzero(resolved[ai])[0], k_u[ai])
             out_values = values[ai][top]
@@ -669,14 +845,28 @@ def _search_batch_impl(
     per_unique = {ui: _unique_result(ui) for ui in set(owner)}
     results: list[SearchResult] = []
     for qi in range(n_queries):
-        ids, vals, low, up, deg, stage, stats = per_unique[owner[qi]]
+        ui = owner[qi]
+        ids, vals, low, up, deg, stage, stats = per_unique[ui]
         ki = k_eff[qi]
         stats = dict(stats)
         stats["k"] = ki
+        recall = 1.0
+        if ki > 0 and ui in a_of:
+            ai = a_of[ui]
+            if anytime and not deg:
+                # Mixed-k owners: re-derive this owner's top-k at its OWN
+                # depth (prefix slicing the shared est-ranking is not
+                # ε-sound; see _anytime_slice).
+                ids, vals, low, up, recall = _anytime_slice(ai, ki)
+            elif deg:
+                # Honest recall certificate for the degraded prefix —
+                # the (ub, id) order IS prefix-stable, so slicing is fine;
+                # only the certificate is per-depth.
+                recall = certified_recall(lb[ai], ub[ai], ids[:ki], ki)
         meta = HDMeta(
             variant=variant, method="cascade", backend=backend,
             block_a=0, block_b=0, elapsed_s=elapsed,
-            degraded=deg, stage_reached=stage,
+            degraded=deg, stage_reached=stage, mode=mode,
         )
         results.append(
             SearchResult(
@@ -684,6 +874,7 @@ def _search_batch_impl(
                 stats=stats, meta=meta,
                 lower=low[:ki].copy(), upper=up[:ki].copy(),
                 degraded=deg, stage_reached=stage,
+                certified_recall_at_k=recall,
             )
         )
     return results

@@ -87,6 +87,11 @@ class _Pending:
     deadline_abs: float | None  # monotonic-clock expiry, None = unbounded
     future: asyncio.Future
     enqueue_t: float
+    # anytime knob (part of the shape class — one flush shares one ε, so a
+    # batch never mixes exact and anytime members)
+    mode: str = "exact"
+    epsilon: float = 0.0
+    budget: int | None = None
     # observability: the request id + the admission→completion root span
     # (a shared no-op object when tracing is off).  The span is finished
     # exactly once, wherever the future is resolved.
@@ -110,7 +115,7 @@ class QueryEngine:
         # share the service's liveness marker: every delivered result beats
         # it with the query's admission-to-delivery wall time
         self.heartbeat = service.heartbeat
-        self._pending: dict[tuple[int, str], list[_Pending]] = {}
+        self._pending: dict[tuple, list[_Pending]] = {}
         self._loop: asyncio.AbstractEventLoop | None = None
         self._event: asyncio.Event | None = None
         self._flusher: asyncio.Task | None = None
@@ -159,6 +164,9 @@ class QueryEngine:
         variant: str = "hausdorff",
         deadline_s: float | None = None,
         validate: bool = True,
+        mode: str = "exact",
+        epsilon: float = 0.0,
+        budget: int | None = None,
     ):
         """Admit one query; resolves to its :class:`SearchResult`.
 
@@ -166,8 +174,13 @@ class QueryEngine:
         are already in flight.  Malformed input raises ``ValueError`` here,
         at admission — a bad query must bounce to its submitter, never
         poison a batch carrying everyone else's.
+
+        ``mode`` / ``epsilon`` / ``budget`` are the per-request anytime
+        knob (docs/api.md, "Anytime search contract").  The knob is part of
+        the batching shape class, so one flush shares one ε — requests
+        with different knobs never ride the same ``search_batch`` call.
         """
-        from repro.index import SEARCH_VARIANTS
+        from repro.index import SEARCH_MODES, SEARCH_VARIANTS
 
         if self._closed:
             raise RuntimeError("engine closed")
@@ -177,6 +190,21 @@ class QueryEngine:
         if variant not in SEARCH_VARIANTS:
             raise ValueError(
                 f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}"
+            )
+        if mode not in SEARCH_MODES:
+            raise ValueError(
+                f"unknown search mode {mode!r}; expected one of {SEARCH_MODES}"
+            )
+        epsilon = float(epsilon)
+        if not np.isfinite(epsilon) or epsilon < 0.0:
+            raise ValueError(f"epsilon must be a finite float >= 0, got {epsilon}")
+        if budget is not None:
+            budget = int(budget)
+            if budget < 0:
+                raise ValueError(f"budget must be None or an int >= 0, got {budget}")
+        if mode == "exact" and (epsilon != 0.0 or budget is not None):
+            raise ValueError(
+                "epsilon/budget are anytime knobs; pass mode='anytime' to use them"
             )
         q = np.asarray(query, dtype=np.float32)
         dim = self.service.store.dim
@@ -195,7 +223,8 @@ class QueryEngine:
         now = time.monotonic()
         from repro.index.store import bucket_capacity
 
-        cls = (bucket_capacity(q.shape[0], min_bucket=1), variant)
+        cls = (bucket_capacity(q.shape[0], min_bucket=1), variant,
+               mode, epsilon, budget)
         # Root span: admission → completion (finished where the future is
         # resolved, so its duration IS the request latency the batching
         # policy bounds).  A fresh rid correlates everything this request
@@ -203,7 +232,7 @@ class QueryEngine:
         rid = _obs.new_rid() if _obs.enabled() else None
         root = _obs.start_span(
             "engine.search", rid=rid, k=int(k), variant=variant,
-            shape_class=cls[0],
+            shape_class=cls[0], mode=mode,
         )
         root.event("engine.admit", queue_depth=self.pending)
         if _obs.enabled():
@@ -215,6 +244,9 @@ class QueryEngine:
             deadline_abs=None if deadline_s is None else now + float(deadline_s),
             future=self._loop.create_future(),
             enqueue_t=now,
+            mode=mode,
+            epsilon=epsilon,
+            budget=budget,
             rid=rid,
             root=root,
         )
@@ -274,10 +306,10 @@ class QueryEngine:
             backoff_s=self.cfg.retry_backoff_s,
         )
 
-    async def _flush_batch(self, cls: tuple[int, str], batch: list[_Pending]) -> None:
+    async def _flush_batch(self, cls: tuple, batch: list[_Pending]) -> None:
         from repro.index.multiquery import search_batch
 
-        _, variant = cls
+        _, variant, mode, epsilon, budget = cls
         queries = [p.query for p in batch]
         ks = [p.k for p in batch]
         now = time.monotonic()
@@ -302,6 +334,7 @@ class QueryEngine:
                 deadline_s=batch_deadline,
                 on_fault="degrade",
                 validate=False,  # validated at admission
+                mode=mode, epsilon=epsilon, budget=budget,
             )
 
         self.stats["flushes"] += 1
@@ -319,7 +352,7 @@ class QueryEngine:
             parent_id=getattr(p0.root, "span_id", None),
             shape_class=cls[0], variant=variant, batch=len(batch),
             member_rids=[p.rid for p in batch],
-            deadline_s=batch_deadline,
+            deadline_s=batch_deadline, mode=mode,
         )
         if _obs.enabled():
             reg = _registry()
@@ -394,6 +427,7 @@ class QueryEngine:
                 deadline_s=topup_deadline,
                 on_fault="degrade",
                 validate=False,
+                mode=p.mode, epsilon=p.epsilon, budget=p.budget,
             )
 
         self.stats["topups"] += 1

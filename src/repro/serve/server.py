@@ -101,7 +101,7 @@ class ProHDService:
         self.store = store  # repro.index.SetStore; lazily created by add_set
         self._pending: list[tuple[int, jnp.ndarray, jnp.ndarray]] = []
         self._pending_searches: list[
-            tuple[int, jnp.ndarray, int, str, float | None]
+            tuple[int, jnp.ndarray, int, str, float | None, str, float, int | None]
         ] = []
         self._next_rid = 0
         # LRU over compiled pairwise shape classes (move-to-end on hit,
@@ -163,6 +163,9 @@ class ProHDService:
         variant: str = "hausdorff",
         deadline_s: float | None = None,
         validate: bool = True,
+        mode: str = "exact",
+        epsilon: float = 0.0,
+        budget: int | None = None,
     ) -> int:
         """Queue a top-k corpus retrieval against the shared SetStore.
 
@@ -174,8 +177,12 @@ class ProHDService:
         ``cfg.default_deadline_s``); on expiry flush() returns the best
         certified state reached with ``degraded=True`` rather than
         stalling the batch.
+
+        ``mode`` / ``epsilon`` / ``budget`` are the per-request anytime
+        knob (docs/api.md, "Anytime search contract"); the payload then
+        reports ``certified_recall`` alongside the per-hit intervals.
         """
-        from repro.index import SEARCH_VARIANTS
+        from repro.index import SEARCH_MODES, SEARCH_VARIANTS
 
         self._admit()
         if self.store is None or self.store.n_sets == 0:
@@ -185,6 +192,21 @@ class ProHDService:
         if variant not in SEARCH_VARIANTS:
             raise ValueError(
                 f"unknown search variant {variant!r}; expected one of {SEARCH_VARIANTS}"
+            )
+        if mode not in SEARCH_MODES:
+            raise ValueError(
+                f"unknown search mode {mode!r}; expected one of {SEARCH_MODES}"
+            )
+        epsilon = float(epsilon)
+        if not np.isfinite(epsilon) or epsilon < 0.0:
+            raise ValueError(f"epsilon must be a finite float >= 0, got {epsilon}")
+        if budget is not None:
+            budget = int(budget)
+            if budget < 0:
+                raise ValueError(f"budget must be None or an int >= 0, got {budget}")
+        if mode == "exact" and (epsilon != 0.0 or budget is not None):
+            raise ValueError(
+                "epsilon/budget are anytime knobs; pass mode='anytime' to use them"
             )
         query = jnp.asarray(query)
         if query.ndim != 2 or query.shape[1] != self.store.dim:
@@ -201,7 +223,9 @@ class ProHDService:
             deadline_s = self.cfg.default_deadline_s
         rid = self._next_rid
         self._next_rid += 1
-        self._pending_searches.append((rid, query, k, variant, deadline_s))
+        self._pending_searches.append(
+            (rid, query, k, variant, deadline_s, mode, epsilon, budget)
+        )
         return rid
 
     # -- execution -----------------------------------------------------------
@@ -227,7 +251,9 @@ class ProHDService:
 
         Pairwise results: {rid: {hd, lower, upper}}.
         Search results:   {rid: {ids, values, lower, upper, degraded,
-        stage_reached, stats}} — exact top-k unless the request's deadline
+        stage_reached, certified_recall, stats}} — exact top-k unless the
+        request was anytime (``certified_recall`` then reports how many of
+        the hits are provably top-k) or the request's deadline
         expired or a runtime fault was absorbed, in which case
         ``degraded=True`` and [lower, upper] is the certified interval per
         returned candidate.  A search that keeps failing with a typed
@@ -290,17 +316,23 @@ class ProHDService:
                     }
                     self.heartbeat.beat(wall_s=wall_each)
 
-        for rid, query, k, variant, deadline_s in searches:
+        for rid, query, k, variant, deadline_s, mode, epsilon, budget in searches:
             from repro.hd import search as hd_search
 
-            def attempt(_start, query=query, k=k, variant=variant, deadline_s=deadline_s):
+            def attempt(
+                _start, query=query, k=k, variant=variant,
+                deadline_s=deadline_s, mode=mode, epsilon=epsilon,
+                budget=budget,
+            ):
                 _faults.fire(_POINT_FLUSH)
                 return hd_search(
-                    query, self.store, k, variant=variant, deadline_s=deadline_s
+                    query, self.store, k, variant=variant,
+                    deadline_s=deadline_s,
+                    mode=mode, epsilon=epsilon, budget=budget,
                 )
 
             t0 = time.perf_counter()
-            with _obs.span("serve.search", request=rid, k=k) as _sspan:
+            with _obs.span("serve.search", request=rid, k=k, mode=mode) as _sspan:
                 try:
                     res = run_with_recovery(
                         attempt,
@@ -329,6 +361,7 @@ class ProHDService:
                 "upper": res.upper.tolist(),
                 "degraded": res.degraded,
                 "stage_reached": res.stage_reached,
+                "certified_recall": res.certified_recall_at_k,
                 "stats": res.stats,
             }
             self.heartbeat.beat(wall_s=time.perf_counter() - t0)

@@ -1,0 +1,219 @@
+"""Conformance: the certified-recall harness that gates ``mode="anytime"``.
+
+The anytime ladder (``docs/api.md``, "Anytime search contract") trades
+recall for latency but NEVER certification — this module is the
+machine-checked statement of that contract, swept over every registered
+``masked_backend`` so a new kernel inherits the anytime obligations the
+same way it inherits the exact ones (grow
+``repro.core.masked.EXACT_MASKED_BACKENDS`` and this file re-runs):
+
+  * **interval containment** — every hit an anytime search returns carries
+    a certified ``[lower, upper]`` interval that contains that set's TRUE
+    Hausdorff distance (float64 difference-form oracle), up to the same
+    value-aware fp envelope ``fp_value_margin`` the exact cascade is
+    certified against;
+  * **recall honesty** — ``certified_recall_at_k`` never OVERestimates the
+    true recall (fraction of returned hits genuinely inside the true
+    top-k, fp-tolerantly under ties): the certificate may be pessimistic,
+    never flattering;
+  * **ε = 0 degeneracy** — ``mode="anytime"`` with ``epsilon=0`` and no
+    budget is bit-for-bit the exact cascade (ids, values, zero-width
+    intervals, recall 1.0), and even an ACTIVE ε = 0 run (budget covering
+    the corpus) refines to the identical exact top-k;
+  * the same obligations hold through ``search_batch`` with mixed per-query
+    k and duplicate queries.
+
+Deterministic anchors first, hypothesis generalisation at the bottom
+(optional-dependency guarded, same pattern as the sibling conformance
+modules).
+"""
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import masked
+from repro.index import SetStore, cascade, fp_value_margin, search_batch
+
+pytestmark = [pytest.mark.conformance, pytest.mark.anytime]
+
+BACKENDS = sorted(masked.EXACT_MASKED_BACKENDS)
+
+
+def _hd64(q, b, variant="hausdorff"):
+    """Float64 numpy oracle, difference form (no GEMM cancellation)."""
+    d2 = np.sum(
+        (q.astype(np.float64)[:, None, :] - b.astype(np.float64)[None, :, :]) ** 2,
+        axis=-1,
+    )
+    fwd = float(np.sqrt(d2.min(axis=1)).max())
+    if variant == "directed":
+        return fwd
+    return max(fwd, float(np.sqrt(d2.min(axis=0)).max()))
+
+
+def _corpus(seed, **kw):
+    sets, rng = strategies.ragged_corpus(seed, **kw)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    q = strategies.query_near(rng, sets, 4)
+    return sets, store, q
+
+
+def assert_anytime_certified(q, sets, res, k, variant="hausdorff"):
+    """The two anytime obligations on one SearchResult: every hit's
+    interval contains the float64 truth (within the value-aware fp
+    envelope), and the recall certificate never overestimates the true
+    recall.  Shared by the seeded anchors and the hypothesis sweep."""
+    truth = np.array([_hd64(q, s, variant) for s in sets])
+    d = q.shape[1]
+    margins = np.array(
+        [
+            float(fp_value_margin(d, strategies.pair_scale(q, sets[sid]), float(v)))
+            for sid, v in zip(res.ids.tolist(), res.values.tolist())
+        ]
+    )
+    lo = np.asarray(res.lower, np.float64) - margins
+    up = np.asarray(res.upper, np.float64) + margins
+    t = truth[res.ids]
+    assert np.all(lo <= t) and np.all(t <= up), (
+        res.ids, res.lower, res.upper, t,
+    )
+    # honest certificate: a hit truly counts iff its float64 distance ties
+    # or beats the true k-th smallest (fp-tolerantly — exact-duplicate ties
+    # are exactly equal in the oracle, so the envelope only absorbs fp32
+    # storage noise)
+    kth = np.sort(truth)[k - 1]
+    true_recall = float(np.sum(t <= kth + margins)) / k
+    assert res.certified_recall_at_k <= true_recall + 1e-12, (
+        res.certified_recall_at_k, true_recall,
+    )
+    assert 0.0 <= res.certified_recall_at_k <= 1.0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", [3, 11])
+@pytest.mark.parametrize(
+    "eps,budget",
+    [(0.5, None), (3.0, None), (0.0, 2), (1.0, 3)],
+    ids=["eps_small", "eps_wide", "budget_only", "eps_and_budget"],
+)
+def test_anytime_interval_contains_truth(backend, seed, eps, budget):
+    sets, store, q = _corpus(seed, dup_every=4)
+    k = 5
+    res = cascade.search(
+        q, store, k, mode="anytime", epsilon=eps, budget=budget,
+        masked_backend=backend,
+    )
+    assert res.meta.mode == "anytime"
+    assert res.stats["epsilon"] == eps and res.stats["budget"] == budget
+    assert_anytime_certified(q, sets, res, k)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_anytime_directed_variant_certified(backend):
+    sets, store, q = _corpus(7)
+    res = cascade.search(
+        q, store, 4, variant="directed", mode="anytime", epsilon=1.0,
+        masked_backend=backend,
+    )
+    assert_anytime_certified(q, sets, res, 4, variant="directed")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", [0, 9])
+def test_epsilon_zero_bit_for_bit(backend, seed):
+    """ε = 0 degeneracy, both flavours: INACTIVE anytime (no knob at all —
+    structurally the exact code path) and ACTIVE anytime whose budget
+    covers the corpus (the greedy drain must land on the identical exact
+    top-k with zero-width intervals and recall 1.0)."""
+    sets, store, q = _corpus(seed, dup_every=3)
+    k = 6
+    ref = cascade.search(q, store, k, masked_backend=backend)
+    for budget in (None, store.n_sets):
+        res = cascade.search(
+            q, store, k, mode="anytime", epsilon=0.0, budget=budget,
+            masked_backend=backend,
+        )
+        np.testing.assert_array_equal(res.ids, ref.ids, err_msg=f"{backend}/{budget}")
+        np.testing.assert_array_equal(res.values, ref.values)
+        np.testing.assert_array_equal(res.lower, res.upper)
+        assert res.certified_recall_at_k == 1.0
+        assert res.meta.mode == "anytime"
+        assert res.stats["converged"] is True
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batch_anytime_certified_mixed_k(backend):
+    """search_batch under anytime: duplicate queries, mixed per-query k —
+    every per-query result independently satisfies both obligations."""
+    sets, store, q = _corpus(5, dup_every=4)
+    rng = np.random.RandomState(1)
+    q2 = strategies.query_near(rng, sets[::-1], 4)
+    queries = [q, q2, q.copy()]  # exact duplicate exercises the dedup path
+    ks = [3, 5, 4]
+    out = search_batch(
+        queries, store, ks, mode="anytime", epsilon=0.8,
+        masked_backend=backend,
+    )
+    for qi, (res, ki) in enumerate(zip(out, ks)):
+        assert res.meta.mode == "anytime"
+        assert_anytime_certified(queries[qi], sets, res, ki)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batch_epsilon_zero_bit_for_bit(backend):
+    sets, store, q = _corpus(13, dup_every=3)
+    rng = np.random.RandomState(2)
+    q2 = strategies.query_near(rng, sets[::-1], 4)
+    queries = [q, q2]
+    refs = search_batch(queries, store, 5, masked_backend=backend)
+    outs = search_batch(
+        queries, store, 5, mode="anytime", epsilon=0.0, budget=store.n_sets,
+        masked_backend=backend,
+    )
+    for ref, res in zip(refs, outs):
+        np.testing.assert_array_equal(res.ids, ref.ids, err_msg=backend)
+        np.testing.assert_array_equal(res.values, ref.values)
+        assert res.certified_recall_at_k == 1.0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis generalisation (optional dependency, same guard pattern as the
+# sibling conformance modules — deterministic anchors above never need it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - requirements-dev environment only
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+
+    _anytime_cases = st.tuples(
+        st.integers(0, 2**16),            # corpus seed
+        st.integers(1, 8),                # k
+        st.sampled_from([0, 3, 4]),       # dup_every (0 = no forced ties)
+        st.sampled_from([0.0, 0.25, 1.0, 4.0, 1e3]),   # epsilon
+        st.sampled_from([None, 0, 1, 4, 10**6]),       # budget
+    )
+
+    @given(_anytime_cases)
+    @settings(max_examples=12, deadline=None)
+    def test_property_anytime_certified_under_every_backend(case):
+        seed, k, dup_every, eps, budget = case
+        sets, store, q = _corpus(seed, dup_every=dup_every)
+        for be in BACKENDS:
+            res = cascade.search(
+                q, store, k, mode="anytime", epsilon=eps, budget=budget,
+                masked_backend=be,
+            )
+            assert_anytime_certified(q, sets, res, k)
+            if eps == 0.0 and budget in (None, 10**6):
+                ref = cascade.search(q, store, k, masked_backend=be)
+                np.testing.assert_array_equal(res.ids, ref.ids)
+                np.testing.assert_array_equal(res.values, ref.values)
+                assert res.certified_recall_at_k == 1.0

@@ -1,0 +1,344 @@
+"""Property + edge-case suite for ``mode="anytime"`` certified search.
+
+The conformance half (``tests/conformance/test_anytime.py``) pins the
+interval/recall CONTRACT against a float64 oracle across backends; this
+module pins the anytime LADDER's behavioural properties — monotone
+convergence in the budget, the ε = 0 degeneracies, the degenerate-shape
+edges (k = 0, ε beyond the corpus diameter, a single-set corpus), deadline
+expiry mid-ladder, the admission-time validation surface, and the
+serve/engine plumbing that carries the per-request knob end to end.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+import strategies
+from repro.index import SetStore, anytime_frontier, cascade, certified_recall, search_batch
+from repro.serve.engine import EngineConfig, QueryEngine
+from repro.serve.server import ProHDService, ServeConfig
+
+pytestmark = pytest.mark.anytime
+
+K = 5
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    sets, rng = strategies.ragged_corpus(21, n_sets=24, dup_every=4)
+    store = SetStore(dim=4)
+    store.add_many(sets)
+    q = strategies.query_near(rng, sets, 4)
+    exact = cascade.search(q, store, K)
+    return sets, store, q, exact
+
+
+# ---------------------------------------------------------------------------
+# convergence properties
+# ---------------------------------------------------------------------------
+
+
+def test_budget_monotone_convergence(corpus):
+    """Growing the budget is monotone: refines and certified recall never
+    decrease, total interval width never increases, and at budget = n the
+    drain lands bit-for-bit on the exact top-k."""
+    sets, store, q, exact = corpus
+    prev_recall, prev_width, prev_refines = -1.0, np.inf, -1
+    for budget in range(0, store.n_sets + 1):
+        res = cascade.search(q, store, K, mode="anytime", epsilon=0.0, budget=budget)
+        width = float(np.sum(np.asarray(res.upper) - np.asarray(res.lower)))
+        assert res.certified_recall_at_k >= prev_recall
+        assert width <= prev_width + 1e-12
+        assert res.stats["anytime_refines"] >= prev_refines
+        assert res.stats["anytime_refines"] <= budget
+        prev_recall, prev_width = res.certified_recall_at_k, width
+        prev_refines = res.stats["anytime_refines"]
+    np.testing.assert_array_equal(res.ids, exact.ids)
+    np.testing.assert_array_equal(res.values, exact.values)
+    assert res.certified_recall_at_k == 1.0 and res.stats["converged"] is True
+
+
+def test_epsilon_widening_never_breaks_soundness(corpus):
+    """Every ε returns hits within ε of optimal: the k-th returned upper
+    bound never exceeds the true k-th distance by more than ε (the ladder's
+    ε-stability guarantee), and looser ε never costs MORE refines."""
+    sets, store, q, exact = corpus
+    kth_true = float(np.asarray(exact.values, np.float64)[-1])
+    prev_refines = np.inf
+    for eps in (1e-6, 0.1, 0.5, 2.0, 1e4):
+        res = cascade.search(q, store, K, mode="anytime", epsilon=eps)
+        assert res.stats["converged"] is True
+        assert float(res.upper[-1]) <= kth_true + eps + 1e-6
+        assert res.stats["anytime_refines"] <= prev_refines
+        prev_refines = res.stats["anytime_refines"]
+
+
+def test_inactive_anytime_is_structurally_exact(corpus):
+    """mode="anytime" with ε = 0 and no budget is DEFINED as the exact
+    cascade — same bits, full certificate, only the mode label differs."""
+    sets, store, q, exact = corpus
+    res = cascade.search(q, store, K, mode="anytime")
+    np.testing.assert_array_equal(res.ids, exact.ids)
+    np.testing.assert_array_equal(res.values, exact.values)
+    np.testing.assert_array_equal(res.lower, exact.lower)
+    np.testing.assert_array_equal(res.upper, exact.upper)
+    assert res.stage_reached == exact.stage_reached
+    assert res.meta.mode == "anytime" and exact.meta.mode == "exact"
+    assert res.stats["converged"] is True
+    assert "anytime_refines" in res.stats and res.stats["anytime_refines"] == 0
+
+
+def test_budget_exhaustion_is_honest_not_degraded(corpus):
+    sets, store, q, exact = corpus
+    res = cascade.search(q, store, K, mode="anytime", epsilon=0.0, budget=1)
+    assert res.degraded is False
+    assert res.stats["converged"] is False
+    assert res.stats["anytime_refines"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_k_zero_anytime(corpus):
+    sets, store, q, _ = corpus
+    res = cascade.search(q, store, 0, mode="anytime", epsilon=1.0)
+    assert res.ids.size == 0 and res.values.size == 0
+    assert res.certified_recall_at_k == 1.0
+    assert res.stats["converged"] is True and res.stats["anytime_refines"] == 0
+
+
+def test_epsilon_beyond_corpus_diameter_stops_at_stage0(corpus):
+    """An ε wider than any interval the summary pass produces converges
+    before stage 1 — zero kernel work, still certified: the returned
+    intervals are the stage-0 bounds and the recall certificate reflects
+    exactly what they prove (possibly 0.0 — honest, never flattering)."""
+    sets, store, q, _ = corpus
+    res = cascade.search(q, store, K, mode="anytime", epsilon=1e9)
+    assert res.stage_reached == "stage0"
+    assert res.stats["converged"] is True
+    assert res.stats["exact_refines"] == 0 and res.stats["anytime_refines"] == 0
+    truth = {
+        sid: float(v)
+        for sid, v in zip(
+            *(lambda r: (r.ids.tolist(), r.values.tolist()))(
+                cascade.search(q, store, store.n_sets, method="exact")
+            )
+        )
+    }
+    for sid, lo, up in zip(res.ids.tolist(), res.lower, res.upper):
+        assert lo - 1e-6 <= truth[sid] <= up + 1e-6
+
+
+def test_single_set_corpus():
+    store = SetStore(dim=4)
+    store.add(np.ones((3, 4), np.float32))
+    q = np.zeros((2, 4), np.float32)
+    ref = cascade.search(q, store, 1)
+    for eps, budget in [(0.0, None), (0.5, None), (0.0, 1), (1e9, 0)]:
+        res = cascade.search(q, store, 1, mode="anytime", epsilon=eps, budget=budget)
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        assert float(res.lower[0]) <= float(ref.values[0]) <= float(res.upper[0]) + 1e-6
+
+
+def test_deadline_expiry_mid_anytime_degrades_with_certificate(corpus):
+    """A dead-on-arrival deadline inside an anytime search degrades the
+    same way the exact cascade does: best certified state, degraded=True,
+    intervals still containing the truth, recall still honest."""
+    sets, store, q, _ = corpus
+    res = cascade.search(q, store, K, mode="anytime", epsilon=1e-6, deadline_s=0.0)
+    assert res.degraded is True
+    assert res.stats["converged"] is False
+    truth = cascade.search(q, store, store.n_sets, method="exact")
+    tmap = dict(zip(truth.ids.tolist(), truth.values.astype(np.float64).tolist()))
+    for sid, lo, up in zip(res.ids.tolist(), res.lower, res.upper):
+        assert lo - 1e-6 <= tmap[sid] <= up + 1e-6
+    assert 0.0 <= res.certified_recall_at_k <= 1.0
+
+
+def test_frontier_empty_iff_epsilon_stable():
+    """anytime_frontier on hand-built intervals: empty exactly when the
+    top-k is ε-stable (no wide member, no outside contender within ε)."""
+    lb = np.array([0.0, 1.0, 2.0, 3.0], np.float64)
+    ub = np.array([0.5, 1.5, 2.5, 3.5], np.float64)
+    resolved = np.zeros(4, bool)
+    front, top, tau = anytime_frontier(lb, ub, resolved, 2, 10.0)
+    assert not front.any()  # every width < ε, every outsider lb > τ − ε... stable
+    front, _, _ = anytime_frontier(lb, ub, resolved, 2, 0.1)
+    assert front.any()  # widths 0.5 > ε: the top-2 itself blocks
+    resolved[:] = True
+    lb = ub.copy()
+    front, _, _ = anytime_frontier(lb, ub, resolved, 2, 0.0)
+    assert not front.any()  # fully resolved is stable at ε = 0
+
+
+def test_certified_recall_tie_and_degenerate_rules():
+    lb = np.array([1.0, 1.0, 1.0, 5.0])
+    ub = lb.copy()
+    # three exactly-tied resolved candidates, k=2: ties never pessimise
+    assert certified_recall(lb, ub, np.array([0, 1]), 2) == 1.0
+    assert certified_recall(lb, ub, np.array([0]), 0) == 1.0
+    # vacuous intervals certify nothing
+    wide_lb = np.zeros(4)
+    wide_ub = np.full(4, 100.0)
+    assert certified_recall(wide_lb, wide_ub, np.array([0, 1]), 2) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# batch behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_batch_duplicate_queries_dedup_and_agree(corpus):
+    sets, store, q, _ = corpus
+    out = search_batch(
+        [q, q.copy(), q.copy()], store, [K, 2, K], mode="anytime", epsilon=0.5
+    )
+    assert out[0].stats["dedup_hits"] == 2
+    # duplicate owners at the same k get identical bits
+    np.testing.assert_array_equal(out[0].ids, out[2].ids)
+    np.testing.assert_array_equal(out[0].values, out[2].values)
+    assert out[0].certified_recall_at_k == out[2].certified_recall_at_k
+    # the k=2 owner's hits are a top-2 in their own right: both intervals
+    # within ε-consistent range of the k=5 owner's leading pair
+    assert out[1].ids.size == 2
+    for res in out:
+        assert res.meta.mode == "anytime"
+        assert 0.0 <= res.certified_recall_at_k <= 1.0
+
+
+def test_batch_matches_single_query_ladder(corpus):
+    """One-query batch ≡ single-query anytime at the same knob: identical
+    ids and interval containment agreement (the batch path skips stage 1,
+    so intervals may differ in width but never in soundness or ids at
+    convergence with ε = 0 + full budget)."""
+    sets, store, q, _ = corpus
+    single = cascade.search(q, store, K, mode="anytime", epsilon=0.0, budget=store.n_sets)
+    (batched,) = search_batch([q], store, K, mode="anytime", epsilon=0.0, budget=store.n_sets)
+    np.testing.assert_array_equal(batched.ids, single.ids)
+    np.testing.assert_array_equal(batched.values, single.values)
+    assert batched.certified_recall_at_k == single.certified_recall_at_k == 1.0
+
+
+def test_batch_deadline_expiry_degrades_per_query(corpus):
+    sets, store, q, _ = corpus
+    rng = np.random.RandomState(3)
+    q2 = strategies.query_near(rng, sets[::-1], 4)
+    out = search_batch([q, q2], store, K, mode="anytime", epsilon=0.1, deadline_s=0.0)
+    for res in out:
+        assert res.degraded is True
+        assert 0.0 <= res.certified_recall_at_k <= 1.0
+        assert np.all(np.asarray(res.lower) <= np.asarray(res.upper) + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# validation surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(mode="sometimes"),
+        dict(mode="exact", epsilon=0.5),
+        dict(mode="exact", budget=3),
+        dict(mode="anytime", method="exact", epsilon=0.5),
+        dict(mode="anytime", epsilon=-1.0),
+        dict(mode="anytime", epsilon=float("nan")),
+        dict(mode="anytime", budget=-2),
+    ],
+    ids=[
+        "bad_mode", "exact_eps", "exact_budget", "anytime_exact_method",
+        "neg_eps", "nan_eps", "neg_budget",
+    ],
+)
+def test_validation_rejects(corpus, kwargs):
+    sets, store, q, _ = corpus
+    with pytest.raises(ValueError):
+        cascade.search(q, store, K, **kwargs)
+
+
+def test_batch_validation_rejects(corpus):
+    sets, store, q, _ = corpus
+    with pytest.raises(ValueError):
+        search_batch([q], store, K, mode="exact", epsilon=0.5)
+    with pytest.raises(ValueError):
+        search_batch([q], store, K, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# serve/engine plumbing
+# ---------------------------------------------------------------------------
+
+
+def _service(sets, **overrides):
+    svc = ProHDService(ServeConfig(min_store_bucket=8, **overrides))
+    for s in sets:
+        svc.add_set(s)
+    return svc
+
+
+def test_service_carries_anytime_knob_end_to_end(corpus):
+    sets, store, q, exact = corpus
+    svc = _service(sets)
+    r_exact = svc.submit_search(q, K)
+    r_any = svc.submit_search(q, K, mode="anytime", epsilon=0.5)
+    out = svc.flush()
+    for rid in (r_exact, r_any):
+        payload = out[rid]
+        assert "lower" in payload and "upper" in payload
+        assert 0.0 <= payload["certified_recall"] <= 1.0
+    assert out[r_exact]["ids"] == exact.ids.tolist()
+    assert out[r_exact]["certified_recall"] == 1.0
+    # admission-time validation bounces BEFORE the flush
+    with pytest.raises(ValueError):
+        svc.submit_search(q, K, mode="exact", epsilon=0.5)
+    with pytest.raises(ValueError):
+        svc.submit_search(q, K, mode="anytime", epsilon=-3.0)
+
+
+def test_engine_batches_anytime_separately_from_exact(corpus):
+    """Mixed admission: exact and anytime requests in one flush window land
+    in different shape classes (one flush shares one ε) and each resolves
+    to its own mode's result."""
+    sets, store, q, exact = corpus
+
+    async def run():
+        svc = _service(sets)
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.01))
+        try:
+            return await asyncio.gather(
+                eng.search(q, K),
+                eng.search(q, K, mode="anytime", epsilon=0.5),
+                eng.search(q, K, mode="anytime", epsilon=0.5, budget=3),
+            )
+        finally:
+            await eng.close()
+
+    r_exact, r_any, r_budget = asyncio.run(run())
+    np.testing.assert_array_equal(r_exact.ids, exact.ids)
+    assert r_exact.meta.mode == "exact"
+    assert r_any.meta.mode == "anytime"
+    assert r_any.stats["epsilon"] == 0.5
+    assert r_budget.stats["budget"] == 3
+    for r in (r_any, r_budget):
+        assert 0.0 <= r.certified_recall_at_k <= 1.0
+        assert np.all(np.asarray(r.lower) <= np.asarray(r.upper) + 1e-12)
+
+
+def test_engine_rejects_bad_knob_at_admission(corpus):
+    sets, store, q, _ = corpus
+
+    async def run():
+        svc = _service(sets)
+        eng = QueryEngine(svc, EngineConfig(max_wait_s=0.0))
+        try:
+            with pytest.raises(ValueError):
+                await eng.search(q, K, mode="exact", budget=2)
+            with pytest.raises(ValueError):
+                await eng.search(q, K, mode="anytime", epsilon=float("inf"))
+        finally:
+            await eng.close()
+
+    asyncio.run(run())

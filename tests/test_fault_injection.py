@@ -136,6 +136,33 @@ def test_invariant_at_every_point(point, action, corpus, tmp_path):
         )
         return
 
+    if point == "cascade.anytime":
+        # the anytime ladder only runs for mode="anytime" with an active
+        # knob; its NON-degraded results are ε-certified intervals, not
+        # bit-for-bit exact ids, so the invariant here is the interval one:
+        # every returned hit's certified interval contains its true
+        # distance, and the reported recall certificate never overestimates
+        # the true recall.
+        svc = _service(sets, max_retries=1)
+        rid = svc.submit_search(
+            q, K, mode="anytime", epsilon=1e-3,
+            deadline_s=0.01 if action == "slow" else None,
+        )
+        try:
+            with inject(fault):
+                out = svc.flush()
+        except ReliabilityError:
+            return
+        result = out[rid]
+        if "error" in result:
+            _assert_sound(result, truth, exact_top)  # typed-error branch
+            return
+        for sid, lo, up in zip(result["ids"], result["lower"], result["upper"]):
+            assert lo <= truth[sid] <= up
+        true_hits = len(set(result["ids"]) & set(exact_top.ids.tolist()))
+        assert result["certified_recall"] <= true_hits / K + 1e-12
+        return
+
     # every other point is reachable through the service front door; a
     # tight deadline makes "slow" observable as degradation instead of a
     # stalled test
@@ -265,7 +292,13 @@ def _drive_through(point, fault, sets, q, tmp_path):
             pass
         return
     svc = _service(sets, max_retries=1)
-    svc.submit_search(q, K)
+    if point == "cascade.anytime":
+        # the anytime point only fires for an ACTIVE anytime request
+        # (ε > 0 or a budget) — fires exactly once per search, at ladder
+        # entry
+        svc.submit_search(q, K, mode="anytime", epsilon=1e-3)
+    else:
+        svc.submit_search(q, K)
     try:
         with inject(fault):
             svc.flush()

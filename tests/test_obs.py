@@ -457,13 +457,27 @@ class TestServicePayload:
         for s in sets:
             svc.add_set(s)
         rid = svc.submit_search(q, K)
-        out = svc.flush()[rid]
+        rid_any = svc.submit_search(q, K, mode="anytime", epsilon=0.25)
+        results = svc.flush()
+        out = results[rid]
         for key in ("ids", "values", "lower", "upper", "degraded",
-                    "stage_reached", "stats"):
+                    "stage_reached", "stats", "certified_recall"):
             assert key in out, f"payload missing {key!r}"
         assert out["degraded"] is False
-        # non-degraded: zero-width certified interval equal to the values
+        # non-degraded exact: zero-width certified interval equal to the
+        # values, full recall certificate
         assert out["lower"] == out["values"] == out["upper"]
+        assert out["certified_recall"] == 1.0
         ref = search(q, store, K, method="exact")
         assert out["ids"] == ref.ids.tolist()
         np.testing.assert_allclose(out["values"], ref.values)
+        # the anytime payload carries the SAME certificate surface: per-hit
+        # intervals bracketing the values plus the recall certificate
+        out_any = results[rid_any]
+        for key in ("ids", "values", "lower", "upper", "degraded",
+                    "stage_reached", "stats", "certified_recall"):
+            assert key in out_any, f"anytime payload missing {key!r}"
+        assert out_any["stats"]["mode"] == "anytime"
+        assert 0.0 <= out_any["certified_recall"] <= 1.0
+        for lo, v, up in zip(out_any["lower"], out_any["values"], out_any["upper"]):
+            assert lo <= v + 1e-6 and v - 1e-6 <= up
