@@ -72,7 +72,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery,obs,anytime",
+        help="comma list: fig1,table2,fig2,fig3,fig4,fig5,phases,backends,fused,dispatch,index,index_stage2,bucket_kernel,reliability,multiquery,obs,anytime,sharded",
     )
     ap.add_argument(
         "--quick", action="store_true", help="fig1 + phases + fused only"
@@ -109,6 +109,7 @@ def main() -> None:
         "multiquery": tables.bench_multiquery,
         "obs": tables.bench_obs,
         "anytime": tables.bench_anytime,
+        "sharded": tables.bench_sharded,
     }
     if args.quick:
         selected = ["fig1", "phases", "fused"]

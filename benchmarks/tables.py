@@ -1108,3 +1108,140 @@ def bench_anytime(n_sets: int = 5000, d: int = 16, k: int = 10) -> list[str]:
         f"identical id set: {same_ids}"
     )
     return rows
+
+
+def bench_sharded(n_sets: int = 5000, d: int = 16, k: int = 10) -> list[str]:
+    """PR 10 tentpole: shard_map corpus-parallel cascade + mutable store.
+
+    The same 5k-set clustered corpus as ``bench_index``, searched three
+    ways — in-process single-device, ``shards=1`` (the full shard_map
+    route on a one-device mesh, isolating the sharding machinery's
+    overhead), and ``shards=<all devices>``.  Per-shard stage-0/stage-1
+    timings come from the obs trace of one sharded search: the
+    ``cascade.stage0`` / ``cascade.stage1`` / ``cascade.shard_merge``
+    span durations, each row carrying its ``shards`` attr.  Every
+    sharded result is asserted bit-for-bit equal to the in-process one
+    (``identical=...`` in the derived fields) — the identity
+    ``scripts/check.sh`` gates on.
+
+    Mutation rows: delete 30% of the corpus, compact, and search again
+    (single-device and max-shards) — ``survivor_identical`` asserts the
+    post-compaction top-k still matches brute force over the survivors.
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
+    a multi-device sweep on CPU; on one device the max-shards rows
+    coincide with ``shards=1``.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.data.pointclouds import clustered_sets
+    from repro.hd import search
+    from repro.index import SetStore
+    from repro.obs import trace
+
+    key = jax.random.fold_in(KEY, 10_10)
+    sets, _labels = clustered_sets(key, n_sets, d, sizes=(64, 128, 256))
+    store = SetStore(dim=d)
+    store.add_many(sets)
+    store.summaries()
+    store.packed_buckets()
+
+    qrng = np.random.RandomState(11)
+    q = np.asarray(sets[0]).mean(axis=0) + qrng.randn(128, d).astype(np.float32) * 0.5
+
+    p_max = jax.device_count()
+    ref = search(q, store, k)  # compile + in-process reference
+
+    def _identical(res):
+        return bool(
+            np.array_equal(res.ids, ref.ids)
+            and np.array_equal(res.values, ref.values)
+        )
+
+    rows: list[str] = []
+    t_base, _ = timed(lambda: search(q, store, k), iters=3)
+    rows.append(
+        csv_row(
+            "sharded/baseline", t_base * 1e6,
+            f"n_sets={n_sets};d={d};k={k};devices={p_max}",
+        )
+    )
+    per_shard: dict[int, dict[str, float]] = {}
+    idents: dict[int, bool] = {}
+    for p in sorted({1, p_max}):
+        res_p = search(q, store, k, shards=p)  # compile the p-shard route
+        idents[p] = _identical(res_p)
+        t_p, _ = timed(lambda p=p: search(q, store, k, shards=p), iters=3)
+        rows.append(
+            csv_row(
+                f"sharded/shards{p}", t_p * 1e6,
+                f"shards={p};identical={idents[p]};"
+                f"vs_baseline={t_base / t_p:.3f}x",
+            )
+        )
+        # per-shard stage timings: one traced search, span durations
+        with trace.capture() as get_events:
+            search(q, store, k, shards=p)
+            events = get_events()
+        stages = {
+            e["name"]: e for e in events
+            if e["type"] == "span"
+            and e["name"] in ("cascade.stage0", "cascade.stage1", "cascade.shard_merge")
+        }
+        per_shard[p] = {n: float(e["dur_s"]) for n, e in stages.items()}
+        for name, e in sorted(stages.items()):
+            rows.append(
+                csv_row(
+                    f"sharded/{name.split('.', 1)[1]}/shards{p}",
+                    float(e["dur_s"]) * 1e6,
+                    f"shards={e['attrs'].get('shards', p)};"
+                    f"per_shard_us={float(e['dur_s']) * 1e6 / p:.1f}",
+                )
+            )
+
+    # ---- mutation: delete 30%, compact, search the survivors ----------
+    victims = list(range(0, n_sets, 10)) + list(range(1, n_sets, 5))
+    for sid in victims:
+        store.delete(sid)
+    t0 = _time.perf_counter()
+    removed = store.compact()
+    t_compact = _time.perf_counter() - t0
+    mut_ref = search(q, store, k, method="exact")  # brute force, survivors
+    mut_res = search(q, store, k)
+    t_mut, _ = timed(lambda: search(q, store, k), iters=3)
+    surv_ok = bool(
+        np.array_equal(mut_res.ids, mut_ref.ids)
+        and np.array_equal(mut_res.values, mut_ref.values)
+    )
+    mut_shard = search(q, store, k, shards=p_max)
+    shard_ok = bool(
+        np.array_equal(mut_shard.ids, mut_ref.ids)
+        and np.array_equal(mut_shard.values, mut_ref.values)
+    )
+    rows += [
+        csv_row(
+            "sharded/compact", t_compact * 1e6,
+            f"deleted={n_sets - store.n_live};n_live={store.n_live};"
+            f"slots_removed={sum(removed.values())};"
+            f"buckets_rewritten={len(removed)}",
+        ),
+        csv_row(
+            "sharded/mutated", t_mut * 1e6,
+            f"n_live={store.n_live};survivor_identical={surv_ok};"
+            f"sharded_survivor_identical={shard_ok};shards={p_max}",
+        ),
+    ]
+    s0 = per_shard[p_max]
+    REPORT.append(
+        f"sharded ({n_sets} sets, d={d}, k={k}, {p_max} device(s)): baseline "
+        f"{t_base*1e3:.1f}ms, shards={p_max} stage0 "
+        f"{s0.get('cascade.stage0', 0)*1e3:.2f}ms / stage1 "
+        f"{s0.get('cascade.stage1', 0)*1e3:.2f}ms / merge "
+        f"{s0.get('cascade.shard_merge', 0)*1e3:.2f}ms; sharded top-k "
+        f"bit-for-bit: {all(idents.values())}; "
+        f"after delete-30%+compact ({store.n_live} live) survivor top-k == "
+        f"brute force: {surv_ok}, sharded: {shard_ok}"
+    )
+    return rows

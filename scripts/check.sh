@@ -334,3 +334,129 @@ assert a["same_id_set"] == "True", (
     "separated-cluster bench")
 PY
 fi
+
+# ---------------------------------------------------------------------------
+# PR 10 gates — mutable, sharded SetStore.
+# (a) mutation test slice: tombstone delete/update semantics, generational
+#     compaction, the stale-cache regression, snapshot v1/v2 migration, the
+#     all-corrupt quarantine contract, and the unified deadline clock.  The
+#     marker is new in this PR — an empty slice (pytest exit 5) fails loudly.
+echo "== mutation test slice =="
+python -m pytest -q -m mutation tests/test_mutation.py
+
+# (b) sharded test slice (single-device shards=1 identity + validation; the
+#     8-device subprocess identity test is marked slow and runs as gate (c)
+#     in consolidated form below).
+echo "== sharded test slice =="
+python -m pytest -q -m "sharded and not slow" tests/test_sharded.py
+
+# (c) sharded-identity gate: under 8 forced host devices, sharded search
+#     AND search_batch must return bit-for-bit the single-device top-k on
+#     a 5k-set clustered corpus — including after delete + compact.
+echo "== sharded-identity gate (8 forced host devices, 5k sets) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'PY'
+import jax
+import numpy as np
+
+from repro.data.pointclouds import clustered_sets
+from repro.hd import search, search_batch
+from repro.index import SetStore
+
+assert jax.device_count() == 8, jax.device_count()
+key = jax.random.PRNGKey(20250717)
+sets, _ = clustered_sets(key, 5000, 16, sizes=(64, 128, 256))
+store = SetStore(dim=16)
+store.add_many(sets)
+rng = np.random.RandomState(10)
+qs = [np.asarray(sets[i]).mean(axis=0) + rng.randn(96, 16).astype(np.float32) * 0.5
+      for i in (0, 1, 2)]
+
+for i, q in enumerate(qs):
+    a = search(q, store, 10)
+    b = search(q, store, 10, shards=8)
+    assert np.array_equal(a.ids, b.ids), f"query {i}: sharded ids differ"
+    assert np.array_equal(a.values, b.values), f"query {i}: sharded values differ"
+for i, (x, y) in enumerate(zip(search_batch(qs, store, 10),
+                               search_batch(qs, store, 10, shards=8))):
+    assert np.array_equal(x.ids, y.ids), f"batch query {i}: sharded ids differ"
+    assert np.array_equal(x.values, y.values), f"batch query {i}: values differ"
+
+# mutate: the identity must survive tombstones + compaction
+for sid in range(0, 5000, 4):
+    store.delete(sid)
+store.compact()
+a = search(qs[1], store, 10)
+b = search(qs[1], store, 10, shards=8)
+assert np.array_equal(a.ids, b.ids) and np.array_equal(a.values, b.values), (
+    "post-compaction sharded top-k differs from single-device")
+print(f"sharded identity: 3 queries + batch + mutated corpus bit-for-bit "
+      f"across 8 shards ({store.n_live} live after compaction)")
+PY
+
+# (d) mutation gate: delete 30% of the corpus, compact, and the cascade's
+#     top-k must equal brute force over the SURVIVORS bit-for-bit.
+echo "== mutation gate (delete 30% + compact == brute force over survivors) =="
+python - <<'PY'
+import jax
+import numpy as np
+
+from repro.data.pointclouds import clustered_sets
+from repro.hd import search
+from repro.index import SetStore
+
+key = jax.random.PRNGKey(20250717)
+sets, _ = clustered_sets(key, 2000, 16, sizes=(64, 128, 256))
+store = SetStore(dim=16)
+store.add_many(sets)
+rng = np.random.RandomState(11)
+victims = sorted(set(rng.choice(2000, size=600, replace=False).tolist()))
+for sid in victims:
+    store.delete(sid)
+removed = store.compact()
+assert store.n_live == 1400, store.n_live
+q = np.asarray(sets[victims[0]]).mean(axis=0) + rng.randn(96, 16).astype(np.float32) * 0.5
+res = search(q, store, 10)
+ref = search(q, store, 10, method="exact")  # brute force skips tombstones
+assert np.array_equal(res.ids, ref.ids), "mutated cascade ids differ from brute force"
+assert np.array_equal(res.values, ref.values), "mutated cascade values differ"
+assert not any(sid in victims for sid in res.ids.tolist()), (
+    "a deleted set leaked into the top-k")
+print(f"mutation gate: deleted 600/2000, compacted "
+      f"{sum(removed.values())} slots in {len(removed)} buckets, "
+      f"top-10 == brute force over the 1400 survivors")
+PY
+
+# (e) Sharded benchmark under 8 forced host devices: per-shard stage-0/1
+#     span timings + mutation rows -> BENCH_PR10.json; every sharded row
+#     must report bit-for-bit identity.
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  echo "== sharded benchmark (8 devices; JSON -> BENCH_PR10.json) =="
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.run --only sharded --json BENCH_PR10.json
+  python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_PR10.json"))["rows"]}
+d = {n: dict(kv.split("=", 1) for kv in r["derived"].split(";"))
+     for n, r in rows.items()}
+shard_rows = {n: v for n, v in d.items()
+              if n.startswith("sharded/shards") and "identical" in v}
+assert shard_rows, "no sharded/shardsN rows in BENCH_PR10.json"
+for name, dv in sorted(shard_rows.items()):
+    print(f"{name}: identical={dv['identical']}, "
+          f"vs_baseline={dv['vs_baseline']}")
+    assert dv["identical"] == "True", f"{name} top-k differs from single-device"
+mut = d["sharded/mutated"]
+print(f"sharded/mutated: survivor_identical={mut['survivor_identical']}, "
+      f"sharded_survivor_identical={mut['sharded_survivor_identical']} "
+      f"(n_live={mut['n_live']})")
+assert mut["survivor_identical"] == "True", (
+    "post-compaction top-k differs from brute force over survivors")
+assert mut["sharded_survivor_identical"] == "True", (
+    "post-compaction SHARDED top-k differs from brute force over survivors")
+stage_rows = [n for n in rows if n.startswith(("sharded/stage0/", "sharded/stage1/"))]
+assert stage_rows, "no per-shard stage-0/1 timing rows in BENCH_PR10.json"
+for n in sorted(stage_rows):
+    print(f"{n}: {rows[n]['us_per_call']:.0f}us ({rows[n]['derived']})")
+PY
+fi

@@ -44,6 +44,7 @@ def search(
     mode: str = "exact",
     epsilon: float = 0.0,
     budget: int | None = None,
+    shards: int | None = None,
 ):
     """Top-k nearest stored sets to ``query``; see repro.index.cascade.search.
 
@@ -70,6 +71,12 @@ def search(
     certified [lb, ub] intervals — the result reports
     ``certified_recall_at_k`` and the ladder rung in ``stage_reached``;
     ε = 0 with no budget degenerates bit-for-bit to the exact cascade.
+
+    Sharding knob (docs/api.md, "Mutability & sharding contract"):
+    ``shards=p`` partitions stage 0 and stage 1 across ``p`` devices via
+    ``shard_map``; a cross-shard certified merge re-applies the prune
+    rule globally, so the top-k stays bit-for-bit the single-device
+    result.  ``shards=1`` exercises the full sharded route on one device.
     """
     from repro.index import cascade
 
@@ -78,7 +85,7 @@ def search(
         variant=variant, method=method, backend=backend, stage2=stage2,
         masked_backend=masked_backend, config=config, measure=measure,
         deadline_s=deadline_s, on_fault=on_fault, validate=validate,
-        mode=mode, epsilon=epsilon, budget=budget,
+        mode=mode, epsilon=epsilon, budget=budget, shards=shards,
     )
 
 
@@ -98,6 +105,7 @@ def search_batch(
     mode: str = "exact",
     epsilon: float = 0.0,
     budget: int | None = None,
+    shards: int | None = None,
 ):
     """Top-k per query for a BATCH of queries against one store; see
     repro.index.multiquery.search_batch.
@@ -109,7 +117,9 @@ def search_batch(
     ``search()`` — and hence to brute force.  ``k`` may be one int or a
     per-query sequence; ``deadline_s`` budgets the whole call with
     per-query degraded semantics.  ``mode`` / ``epsilon`` / ``budget``
-    are the anytime knob, shared by the whole batch (see ``search``).
+    are the anytime knob, shared by the whole batch (see ``search``);
+    ``shards`` partitions the (Q × corpus) stage-0 pass across devices
+    with the same bit-for-bit identity guarantee as ``search``.
     """
     from repro.index import multiquery
 
@@ -118,5 +128,5 @@ def search_batch(
         variant=variant, backend=backend, masked_backend=masked_backend,
         config=config, measure=measure, deadline_s=deadline_s,
         on_fault=on_fault, validate=validate,
-        mode=mode, epsilon=epsilon, budget=budget,
+        mode=mode, epsilon=epsilon, budget=budget, shards=shards,
     )

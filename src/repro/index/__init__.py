@@ -35,7 +35,9 @@ from repro.index.cascade import (
     search,
 )
 from repro.index.multiquery import search_batch
+from repro.index.sharded import ShardContext, make_shard_context
 from repro.index.store import (
+    SNAPSHOT_FORMAT,
     PackedBucket,
     SetStore,
     SetSummary,
@@ -53,9 +55,12 @@ __all__ = [
     "direction_bank",
     "latest_snapshot",
     "summarize_set",
+    "SNAPSHOT_FORMAT",
     "search",
     "search_batch",
     "SearchResult",
+    "ShardContext",
+    "make_shard_context",
     "SEARCH_VARIANTS",
     "SEARCH_METHODS",
     "SEARCH_MODES",

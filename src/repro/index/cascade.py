@@ -151,15 +151,24 @@ _POINT_ANYTIME = _faults.declare_point(
 _DEGRADABLE = (RuntimeError, FloatingPointError)
 
 
+# THE cascade wall clock.  The deadline budget, ``stats["elapsed_s"]`` and
+# the obs latency spans must all be comparable on one axis (historically
+# the budget ran on time.monotonic while elapsed ran on time.perf_counter,
+# so ``elapsed ≤ deadline_s + margin`` was not a well-formed statement) —
+# every wall-time read in this module and in ``multiquery`` goes through
+# this hook.  Module-level so tests can monkeypatch a fake clock.
+_now = time.monotonic
+
+
 class _Budget:
     """Monotonic wall-clock deadline; None = unbounded."""
 
     def __init__(self, deadline_s: float | None):
-        self.t0 = time.monotonic()
+        self.t0 = _now()
         self.deadline = None if deadline_s is None else self.t0 + float(deadline_s)
 
     def expired(self) -> bool:
-        return self.deadline is not None and time.monotonic() >= self.deadline
+        return self.deadline is not None and _now() >= self.deadline
 
 
 class _DeadlineHit(Exception):
@@ -458,7 +467,12 @@ def anytime_frontier(lb, ub, resolved, k: int, epsilon: float):
     in_top = np.zeros((n,), bool)
     in_top[top] = True
     unresolved = ~np.asarray(resolved, bool)
-    width_blockers = in_top & unresolved & ((ub - lb) > epsilon)
+    # Tombstoned candidates carry lb = ub = +inf whose width is inf − inf
+    # = nan; they can never be in the top (k ≤ n_live) nor block it
+    # (lb = +inf exceeds every finite τ − ε), so the nan is always masked
+    # out — silence only the IEEE invalid-op warning it would emit.
+    with np.errstate(invalid="ignore"):
+        width_blockers = in_top & unresolved & ((ub - lb) > epsilon)
     member_blockers = ~in_top & unresolved & (lb <= tau - epsilon)
     return width_blockers | member_blockers, top, tau
 
@@ -515,6 +529,7 @@ def search(
     mode: str = "exact",
     epsilon: float = 0.0,
     budget: int | None = None,
+    shards: int | None = None,
 ) -> SearchResult:
     # Observability shim: when tracing is off this is ONE flag check on top
     # of the implementation; when on, the whole request runs under a root
@@ -524,13 +539,13 @@ def search(
         variant=variant, method=method, backend=backend, stage2=stage2,
         masked_backend=masked_backend, config=config, measure=measure,
         deadline_s=deadline_s, on_fault=on_fault, validate=validate,
-        mode=mode, epsilon=epsilon, budget=budget,
+        mode=mode, epsilon=epsilon, budget=budget, shards=shards,
     )
     if not _obs.enabled():
         return _search_impl(query, store, k, **kwargs)
     with _obs.span(
         "index.search", k=k, variant=variant, method=method, stage2=stage2,
-        mode=mode,
+        mode=mode, shards=shards,
     ) as sp:
         res = _search_impl(query, store, k, **kwargs)
         sp.set(
@@ -562,6 +577,7 @@ def _search_impl(
     mode: str = "exact",
     epsilon: float = 0.0,
     budget: int | None = None,
+    shards: int | None = None,
 ) -> SearchResult:
     """Top-k nearest stored sets to ``query`` under a set distance.
 
@@ -637,6 +653,22 @@ def _search_impl(
                refine sequence extends a smaller one's: intervals only
                tighten and certified recall never decreases as the budget
                grows (property-gated).
+    shards   — corpus-parallel stage 0/1 over the first ``shards`` visible
+               devices (``repro.index.sharded``): summaries split
+               row-wise, bucket frontier lanes round-robin by slot, then
+               a cross-shard certified top-k merge re-applies the global
+               prune rule before the unchanged stage-2 raw refinement —
+               the sharded top-k is bit-for-bit the single-device result
+               (gated in scripts/check.sh under 8 forced host devices).
+               None (default) runs in-process; 1 exercises the sharded
+               path on a one-device mesh.  Exact cascade only for now
+               (``mode="anytime"`` and ``method="exact"`` reject it).
+
+    Tombstoned (deleted/updated-away) sets are certified out, never
+    ranked: their intervals are pinned to [+inf, +inf] after stage 0, the
+    packed-slab gates return the +inf sentinel for their slots, and
+    ``k_eff = min(k, store.n_live)`` — a search over a store with no live
+    sets raises ValueError like the empty store.
 
     Returns a :class:`SearchResult`; unless ``degraded`` is set, the top-k
     ids and values are identical to brute force by construction (see
@@ -680,6 +712,26 @@ def _search_impl(
         )
     if store.n_sets == 0:
         raise ValueError("cannot search an empty SetStore")
+    live = store.live_mask()
+    n_live = int(live.sum())
+    if n_live == 0:
+        raise ValueError(
+            "cannot search a SetStore with no live sets (every set was "
+            "deleted); add sets or restore a snapshot first"
+        )
+    if shards is not None:
+        if mode == "anytime":
+            raise ValueError(
+                "shards= is not yet supported with mode='anytime' (see "
+                "ROADMAP: anytime through the sharded path) — drop one of "
+                "the two"
+            )
+        if method == "exact":
+            raise ValueError(
+                "shards= parallelises the cascade's stage 0/1; "
+                "method='exact' (brute force) has no such stages — drop "
+                "one of the two"
+            )
     cfg = config if config is not None else HDConfig()
     q = jnp.asarray(query, jnp.float32)
     if q.ndim != 2 or q.shape[1] != store.dim:
@@ -716,13 +768,21 @@ def _search_impl(
             meta=meta,
         )
 
-    t0 = time.perf_counter() if measure else 0.0
+    t0 = _now() if measure else 0.0
     budget = None if budget is None else int(budget)
     deadline = _Budget(deadline_s)
     n = store.n_sets
-    k_eff = min(k, n)
+    # Tombstoned sets are certified non-candidates: rank depth follows the
+    # LIVE count, and their intervals are pinned to +inf after stage 0.
+    k_eff = min(k, n_live)
+    has_dead = n_live < n
+    dead = ~live if has_dead else None
     directed = variant == "directed"
     device_kind = resolver.default_device_kind()
+    shard_ctx = None
+    if shards is not None:
+        from repro.index import sharded as _sharded  # lazy: avoids cycle
+        shard_ctx = _sharded.make_shard_context(shards)
     mb = masked_backend or resolver.resolve_masked_backend(
         int(q.shape[0]), 0, store.dim, device_kind=device_kind
     )
@@ -789,7 +849,9 @@ def _search_impl(
     degraded = False
     stage_reached = "stage0"
     fault: BaseException | None = None
-    stats: dict[str, Any] = {"candidates_scanned": n, "k": k_eff}
+    stats: dict[str, Any] = {"candidates_scanned": n, "n_live": n_live, "k": k_eff}
+    if shard_ctx is not None:
+        stats["shards"] = shard_ctx.n_shards
 
     def checkpoint() -> None:
         if deadline.expired():
@@ -806,6 +868,8 @@ def _search_impl(
         try:
             _faults.fire(_POINT_STAGE2B)
             for sid in range(n):
+                if has_dead and not live[sid]:
+                    continue  # brute force over the SURVIVORS only
                 checkpoint()
                 refine(sid)
                 lb[sid] = ub[sid] = float(values[sid])
@@ -827,11 +891,27 @@ def _search_impl(
         with _obs.span("cascade.stage0", n=n) as _sp0:
             _faults.fire(_POINT_STAGE0)
             qsum = store.summarize(q)
-            lb_j, ub_j = _interval_bounds_jit(qsum, store.summaries(), directed=directed)
-            scale = np.asarray(_bound_scale_jit(qsum, store.summaries()), np.float64)
-            lb_j, ub_j = certified_margins(lb_j, ub_j, jnp.asarray(scale), store.dim)
-            lb = np.asarray(lb_j, np.float64)
-            ub = np.asarray(ub_j, np.float64)
+            if shard_ctx is not None:
+                # Corpus rows split across the mesh; per-row bound math is
+                # row-local, so the gathered bits match the in-process
+                # path's row for row.
+                lo64, hi64, scale = _sharded.stage0_bounds(
+                    shard_ctx, qsum, store.summaries(), directed=directed,
+                )
+                lb, ub = certified_margins(lo64, hi64, scale, store.dim)
+                _sp0.set(shards=shard_ctx.n_shards)
+            else:
+                lb_j, ub_j = _interval_bounds_jit(qsum, store.summaries(), directed=directed)
+                scale = np.asarray(_bound_scale_jit(qsum, store.summaries()), np.float64)
+                lb_j, ub_j = certified_margins(lb_j, ub_j, jnp.asarray(scale), store.dim)
+                lb = np.asarray(lb_j, np.float64)
+                ub = np.asarray(ub_j, np.float64)
+            if has_dead:
+                # Tombstoned sets: stale summary rows may still sit in the
+                # stacked summaries — pin their intervals to the certified
+                # +inf sentinel so no stage ranks, gates or refines them.
+                lb[dead] = np.inf
+                ub[dead] = np.inf
 
             tau = _kth_smallest(ub, k_eff)
             alive = lb <= tau
@@ -899,7 +979,10 @@ def _search_impl(
                     _faults.fire(_POINT_STAGE1)
                     m = projections.default_num_directions(store.dim)
                     for bucket in store.packed_buckets().values():
-                        rows = np.nonzero(front[bucket.set_ids])[0]
+                        # & bucket.live: an updated set's OLD (tombstoned)
+                        # slot certifies +inf — gathering it would falsely
+                        # prune the live set (see PackedBucket docstring).
+                        rows = np.nonzero(front[bucket.set_ids] & bucket.live)[0]
                         if rows.size == 0:
                             continue
                         checkpoint()
@@ -1025,17 +1108,28 @@ def _search_impl(
                     _faults.fire(_POINT_STAGE1)
                     m = projections.default_num_directions(store.dim)
                     for bucket in store.packed_buckets().values():
-                        rows = np.nonzero(alive[bucket.set_ids])[0]
+                        # ``& bucket.live``: an UPDATED set is alive but its
+                        # OLD slot is a tombstone whose masked certificate
+                        # is the +inf sentinel — folding that lb in would
+                        # falsely prune the live set (see PackedBucket).
+                        rows = np.nonzero(alive[bucket.set_ids] & bucket.live)[0]
                         if rows.size == 0:
                             continue
                         checkpoint()
-                        take = _pow2_take(rows)
-                        cert = _with_backend(lambda be: _stage1_batch(
-                            q,
-                            jnp.take(bucket.points, take, axis=0),
-                            jnp.take(bucket.valid, take, axis=0),
-                            alpha=cfg.alpha, m=m, directed=directed, backend=be,
-                        ))
+                        if shard_ctx is not None:
+                            cert = _with_backend(lambda be: _sharded.stage1_certs(
+                                shard_ctx, q, bucket, rows,
+                                alpha=cfg.alpha, m=m, directed=directed,
+                                backend=be,
+                            ))
+                        else:
+                            take = _pow2_take(rows)
+                            cert = _with_backend(lambda be: _stage1_batch(
+                                q,
+                                jnp.take(bucket.points, take, axis=0),
+                                jnp.take(bucket.valid, take, axis=0),
+                                alpha=cfg.alpha, m=m, directed=directed, backend=be,
+                            ))
                         lo1 = np.maximum(np.asarray(cert.hd), np.asarray(cert.lower))
                         sids = bucket.set_ids[rows]
                         lb1, ub1 = certified_margins(
@@ -1047,8 +1141,20 @@ def _search_impl(
                         lb[sids] = np.maximum(lb[sids], lb1)
                         ub[sids] = np.minimum(ub[sids], ub1)
                         stage_reached = "stage1"
-                    tau = _kth_smallest(ub, k_eff)
-                    still = alive & (lb <= tau)
+                    if shard_ctx is not None:
+                        # Cross-shard certified top-k merge: the per-shard
+                        # certificates are already folded into the global
+                        # interval state; re-apply the prune rule
+                        # ``lb > k-th smallest certified ub`` over the
+                        # whole corpus before the unchanged stage 2.
+                        with _obs.span(
+                            "cascade.shard_merge", shards=shard_ctx.n_shards,
+                        ) as _spm:
+                            tau, still = _sharded.merge_topk(lb, ub, alive, k_eff)
+                            _spm.set(pruned=int(alive.sum() - still.sum()))
+                    else:
+                        tau = _kth_smallest(ub, k_eff)
+                        still = alive & (lb <= tau)
                     stats["stage1_pruned"] = int(alive.sum() - still.sum())
                     alive = still
                     _sp1.set(pruned=stats["stage1_pruned"])
@@ -1221,12 +1327,17 @@ def _search_impl(
         recall = 1.0
     else:
         # Best certified state reached: rank ALL candidates ascending by
-        # certified upper bound (tie: id) — refined candidates carry their
-        # exact value as a zero-width interval, the rest their tightest
-        # stage bounds.  Every returned interval provably contains its true
-        # distance; the conservative ``values`` entry for an unrefined
-        # candidate is its certified upper bound.
-        order = np.lexsort((np.arange(n), ub))
+        # certified upper bound (tie: dead-last, then id) — refined
+        # candidates carry their exact value as a zero-width interval, the
+        # rest their tightest stage bounds.  The dead-last key matters only
+        # for method="exact" degraded returns, where unresolved LIVE sets
+        # still tie tombstoned ones at ub = +inf and must win the tie.
+        # Every returned interval provably contains its true distance; the
+        # conservative ``values`` entry for an unrefined candidate is its
+        # certified upper bound.
+        order = np.lexsort((
+            np.arange(n), dead if has_dead else np.zeros((n,), bool), ub,
+        ))
         top = order[:k_eff]
         out_values = np.where(
             resolved[top], values[top], ub[top].astype(np.float32)
@@ -1250,7 +1361,7 @@ def _search_impl(
                 stage=stage_reached, chain=stats["fault"],
             )
 
-    elapsed = time.perf_counter() - t0 if measure else None
+    elapsed = _now() - t0 if measure else None
     meta = HDMeta(
         variant=variant, method=method, backend=backend,
         block_a=0, block_b=0, elapsed_s=elapsed,

@@ -53,7 +53,6 @@ keep their exact results — per-query state is independent).
 from __future__ import annotations
 
 import functools
-import time
 from typing import Any, Sequence
 
 import jax
@@ -153,6 +152,7 @@ def search_batch(
     mode: str = "exact",
     epsilon: float = 0.0,
     budget: int | None = None,
+    shards: int | None = None,
 ) -> list[SearchResult]:
     # Observability shim (see cascade.search): one flag check when tracing
     # is off; a root "index.search_batch" span with the stage spans as
@@ -161,13 +161,14 @@ def search_batch(
         variant=variant, backend=backend, masked_backend=masked_backend,
         config=config, measure=measure, deadline_s=deadline_s,
         on_fault=on_fault, validate=validate,
-        mode=mode, epsilon=epsilon, budget=budget,
+        mode=mode, epsilon=epsilon, budget=budget, shards=shards,
     )
     if not _obs.enabled():
         return _search_batch_impl(queries, store, k, **kwargs)
     queries = list(queries)  # materialize once: the span consumes len()
     with _obs.span(
         "index.search_batch", batch=len(queries), variant=variant, mode=mode,
+        shards=shards,
     ) as sp:
         results = _search_batch_impl(queries, store, k, **kwargs)
         if results:
@@ -198,6 +199,7 @@ def _search_batch_impl(
     mode: str = "exact",
     epsilon: float = 0.0,
     budget: int | None = None,
+    shards: int | None = None,
 ) -> list[SearchResult]:
     """Top-k nearest stored sets for EVERY query in a batch.
 
@@ -235,6 +237,20 @@ def _search_batch_impl(
                exact path's prefix-slice shortcut is not used here.
                ε = 0 with no budget is DEFINED as the exact batch path
                (bit-for-bit, structural).
+    shards   — corpus-parallel stage 0 over the first ``shards`` visible
+               devices (``repro.index.sharded``): the ONE (Q × corpus)
+               summary-bound pass splits its corpus axis row-wise across
+               the mesh; the per-(query, set) bound math is row-local, so
+               the gathered bits match the in-process pass and the
+               per-query top-k stays bit-for-bit brute force (gated in
+               scripts/check.sh).  The batch path has no stage 1 to shard
+               (see module docstring: stage 2a subsumes it), and stage 2
+               is the unchanged raw refinement.  Exact mode only for now
+               (``mode="anytime"`` rejects it, mirroring ``search``).
+
+    Tombstoned sets follow the single-query contract: intervals pinned to
+    [+inf, +inf] after stage 0, per-query rank depth ``min(k_i, n_live)``,
+    and a store with no live sets raises ValueError.
 
     Returns one :class:`SearchResult` per query, in input order.  Unless
     ``degraded`` is set, result ``i``'s ids/values are bit-for-bit
@@ -264,6 +280,19 @@ def _search_batch_impl(
         )
     if store.n_sets == 0:
         raise ValueError("cannot search an empty SetStore")
+    live = store.live_mask()
+    n_live = int(live.sum())
+    if n_live == 0:
+        raise ValueError(
+            "cannot search a SetStore with no live sets (every set was "
+            "deleted); add sets or restore a snapshot first"
+        )
+    if shards is not None and mode == "anytime":
+        raise ValueError(
+            "shards= is not yet supported with mode='anytime' (see "
+            "ROADMAP: anytime through the sharded path) — drop one of "
+            "the two"
+        )
     if mode not in SEARCH_MODES:
         raise ValueError(f"unknown search mode {mode!r}; expected one of {SEARCH_MODES}")
     epsilon = float(epsilon)
@@ -317,12 +346,20 @@ def _search_batch_impl(
             )
         qs_j.append(q)
 
-    t0 = time.perf_counter() if measure else 0.0
+    t0 = _cascade._now() if measure else 0.0
     deadline = _Budget(deadline_s)
     n = store.n_sets
-    k_eff = [min(ki, n) for ki in k_list]
+    # Tombstoned sets are certified non-candidates (intervals pinned to
+    # +inf after stage 0): per-query rank depth follows the LIVE count.
+    k_eff = [min(ki, n_live) for ki in k_list]
+    has_dead = n_live < n
+    dead = ~live if has_dead else None
     directed = variant == "directed"
     device_kind = resolver.default_device_kind()
+    shard_ctx = None
+    if shards is not None:
+        from repro.index import sharded as _sharded  # lazy: avoids cycle
+        shard_ctx = _sharded.make_shard_context(shards)
 
     # -- dedup: duplicate queries collapse to one cascade -----------------
     uniq_of: dict[tuple[int, bytes], int] = {}
@@ -441,16 +478,34 @@ def _search_batch_impl(
             q_pad = bucket_capacity(n_act, 1)           # pow2 query-axis pad
             pad_idx = act + [act[0]] * (q_pad - n_act)  # jit-cache discipline
             qsums = _stack_query_summaries([store.summarize(uniq[ui]) for ui in pad_idx])
-            lb_j, ub_j, scale_j = _stage0_multiquery(
-                qsums, store.summaries(), directed=directed
-            )
-            scale = np.asarray(scale_j, np.float64)[:n_act]
-            lb0, ub0 = certified_margins(
-                np.asarray(lb_j, np.float64)[:n_act],
-                np.asarray(ub_j, np.float64)[:n_act],
-                scale, store.dim,
-            )
+            if shard_ctx is not None:
+                # Corpus axis split across the mesh; per-(query, set) bound
+                # math is row-local, so the gathered bits match in-process.
+                lo64, hi64, scale64 = _sharded.stage0_multiquery(
+                    shard_ctx, qsums, store.summaries(), directed=directed,
+                )
+                scale = scale64[:n_act]
+                lb0, ub0 = certified_margins(
+                    lo64[:n_act], hi64[:n_act], scale, store.dim,
+                )
+                _sp0.set(shards=shard_ctx.n_shards)
+            else:
+                lb_j, ub_j, scale_j = _stage0_multiquery(
+                    qsums, store.summaries(), directed=directed
+                )
+                scale = np.asarray(scale_j, np.float64)[:n_act]
+                lb0, ub0 = certified_margins(
+                    np.asarray(lb_j, np.float64)[:n_act],
+                    np.asarray(ub_j, np.float64)[:n_act],
+                    scale, store.dim,
+                )
             lb, ub = lb0, ub0
+            if has_dead:
+                # Stale summary rows may survive at tombstoned ids — pin
+                # their intervals to the certified +inf sentinel for every
+                # query before any τ is derived.
+                lb[:, dead] = np.inf
+                ub[:, dead] = np.inf
             taus = np.asarray(
                 [_kth_smallest(ub[ai], k_u[ai]) for ai in range(n_act)]
             )
@@ -728,10 +783,11 @@ def _search_batch_impl(
             )
 
     # -- assembly: one result per unique, fanned out per original ---------
-    elapsed = time.perf_counter() - t0 if measure else None
+    elapsed = _cascade._now() - t0 if measure else None
     dedup_hit_rate = dedup_hits / n_queries
     base_stats: dict[str, Any] = {
         "candidates_scanned": n,
+        "n_live": n_live,
         "stage2_mode": "batched",
         "batch_queries": n_queries,
         "unique_queries": n_unique,
@@ -743,6 +799,8 @@ def _search_batch_impl(
         "refine_backend": refine_backend,
         "mode": mode,
     }
+    if shard_ctx is not None:
+        base_stats["shards"] = shard_ctx.n_shards
     if backend_fallbacks:
         base_stats["backend_fallbacks"] = list(backend_fallbacks)
 

@@ -20,6 +20,24 @@ queried by set distance.  This module is the storage half of that story:
   summaries alone, in one vectorized shot, without touching a single
   point.
 
+The store is **mutable**: ``delete(sid)`` / ``update(sid, points)`` work by
+per-bucket tombstones.  A tombstoned slot keeps its slab row but carries an
+all-invalid mask and +inf poisoned norms — the exact representation of an
+empty set, which every existing kernel gate already maps to a certified
++inf sentinel — so stages 0/1/2a stay sound with zero kernel changes.
+Set-level liveness is exposed as :meth:`live_mask`, which stage 0 uses to
+mask its vectorized summary pass (a dead set's summary row is stale, never
+trusted).  Set ids are NEVER reused; ``compact()`` rewrites a bucket's
+membership (dropping dead slots) once its tombstone fraction crosses a
+threshold, keeping slab occupancy high without invalidating any id.
+
+Cache invalidation is **generation-based**: one monotone mutation counter
+(``_gen``) advances on every mutation, and every derived structure (packed
+slabs, slot index, stacked summaries) records the generation it was built
+at.  Count-based watermarks are exactly the bug class mutability breaks —
+a delete + same-capacity add leaves every count unchanged while the
+membership (and therefore the packed slab and the correct top-k) changed.
+
 The direction bank is any orthonormal (D, m) matrix: projections onto unit
 vectors 1-Lipschitz-contract distances, which is the only property the
 certificates use.  ``direction_bank`` builds one from a PRNG key (QR of a
@@ -55,11 +73,24 @@ __all__ = [
     "latest_snapshot",
 ]
 
-SNAPSHOT_FORMAT = 1
+# v2 adds mutability state to the manifest: a "tombstones" id list and
+# "n_live".  The payload layout is unchanged (bucket files carry only LIVE
+# slots, exactly what a v1 writer produced for an all-live store), so a v1
+# snapshot restores bit-for-bit on this reader; a v2 snapshot under an old
+# reader fails its format check with a typed StoreCorruption, never
+# silently (migration suite: tests/test_mutation.py).
+SNAPSHOT_FORMAT = 2
+_SUPPORTED_SNAPSHOT_FORMATS = (1, 2)
 
 _POINT_RESTORE = _faults.declare_point(
     "store.restore",
     "start of SetStore.restore — a raise here models a storage outage",
+)
+_POINT_COMPACT = _faults.declare_point(
+    "store.compact",
+    "start of SetStore.compact, before any membership rewrite — a raise "
+    "here models a failure mid-maintenance; the store must stay exactly "
+    "as it was (tombstones intact, nothing rewritten)",
 )
 
 
@@ -76,13 +107,24 @@ class SetSummary(NamedTuple):
 
 
 class PackedBucket(NamedTuple):
-    """One capacity class of the store, stacked for vmapped consumption."""
+    """One capacity class of the store, stacked for vmapped consumption.
+
+    ``live`` marks tombstoned slots (False): their slab rows are packed as
+    empty sets — all-invalid mask, zero points, +inf poisoned norms — so a
+    kernel consuming the slab returns the certified +inf sentinel for
+    them.  A row-gathering consumer (the cascade's stage 1) must still AND
+    ``live`` into its row selection: an UPDATED set appears in both its
+    old (dead) and new (live) slots under the same set id, and the dead
+    row's masked-ProHD LOWER bound is +inf (empty-target convention) —
+    trusting it would falsely prune a live set.
+    """
 
     capacity: int
     set_ids: np.ndarray    # (B,) int32 store-wide set ids, slot order
     points: jnp.ndarray    # (B, capacity, D) fp32, invalid rows zeroed
     valid: jnp.ndarray     # (B, capacity) bool
     sqnorms: jnp.ndarray   # (B, capacity) fp32, +inf on invalid rows
+    live: np.ndarray       # (B,) bool host-side, False on tombstoned slots
 
 
 def bucket_capacity(n: int, min_bucket: int = 8) -> int:
@@ -171,16 +213,23 @@ _summarize_batch = jax.jit(jax.vmap(summarize_set, in_axes=(0, 0, None)))
 
 
 class SetStore:
-    """A growing corpus of point sets with precomputed search summaries.
+    """A growing, mutable corpus of point sets with precomputed summaries.
 
     >>> store = SetStore(dim=16)
     >>> sid = store.add(points)              # (n, 16) array, n >= 1
     >>> store.get(sid)                       # raw (n, 16) points back
+    >>> store.update(sid, new_points)        # re-embed in place (same id)
+    >>> store.delete(sid)                    # tombstone; id never reused
     >>> store.summaries()                    # stacked SetSummary, (N, ...)
+    >>> store.live_mask()                    # (N,) bool — False once deleted
     >>> store.packed_buckets()               # {capacity: PackedBucket}
+    >>> store.compact()                      # drop tombstoned slots
 
     ``add_many`` groups incoming sets by capacity and summarizes each group
     in one vmapped call — the bulk-load path for corpus construction.
+    ``compact_threshold`` is the tombstone fraction at which a bucket
+    touched by delete/update is auto-compacted (1.0 disables auto
+    compaction; explicit ``compact()`` always works).
     """
 
     def __init__(
@@ -191,13 +240,19 @@ class SetStore:
         num_directions: int | None = None,
         key: jax.Array | None = None,
         min_bucket: int = 8,
+        compact_threshold: float = 0.5,
     ):
         if dim < 1:
             raise ValueError(f"dim must be >= 1, got {dim}")
         if min_bucket < 1:
             raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+        if not 0.0 < float(compact_threshold) <= 1.0:
+            raise ValueError(
+                f"compact_threshold must be in (0, 1], got {compact_threshold}"
+            )
         self.dim = int(dim)
         self.min_bucket = int(min_bucket)
+        self.compact_threshold = float(compact_threshold)
         if directions is None:
             directions = direction_bank(dim, num_directions, key=key)
         self._directions = jnp.asarray(directions, jnp.float32)
@@ -206,26 +261,48 @@ class SetStore:
                 f"directions must be (dim={dim}, m), got {self._directions.shape}"
             )
         self._raw: list[np.ndarray] = []
-        # bucket membership only: cap -> set ids in slot order.  The padded
-        # slabs themselves live ONLY in the per-capacity PackedBucket cache
+        # per-set liveness, set-id order (False once deleted; ids not reused)
+        self._live: list[bool] = []
+        self._n_live = 0
+        # bucket membership only: cap -> set ids in slot order, with a
+        # parallel per-SLOT liveness list (an updated set owns a dead old
+        # slot and a live new one under the same id).  The padded slabs
+        # themselves live ONLY in the per-capacity PackedBucket cache
         # (rebuilt from _raw on demand) — no second host-resident padded
         # copy of the corpus.
         self._members: dict[int, list[int]] = {}
-        # staged per-set summary fields, set-id order
+        self._slot_live: dict[int, list[bool]] = {}
+        # staged per-set summary fields, set-id order (stale after delete —
+        # consumers mask with live_mask(); replaced in place by update)
         self._sums: dict[str, list[np.ndarray]] = {
             f: [] for f in SetSummary._fields
         }
-        self._summary_cache: SetSummary | None = None
-        # Packed buckets are cached PER CAPACITY with a member-count
-        # watermark: an add() only invalidates (and a later search only
-        # re-packs / re-uploads) the one bucket it landed in — interleaved
-        # add/search must not re-pack the whole corpus per request.
+        # -- generation-based cache invalidation -------------------------
+        # ONE monotone mutation counter; every derived structure records
+        # the generation it was built at and rebuilds iff its source
+        # structure mutated since.  Per-capacity stamps keep re-packs
+        # incremental: an add/delete/update only invalidates (and a later
+        # search only re-packs / re-uploads) the buckets it touched —
+        # interleaved mutate/search must not re-pack the whole corpus.
+        self._gen = 0
+        self._members_gen: dict[int, int] = {}   # gen membership last changed
+        self._sums_gen = 0                       # gen _sums last changed
         self._bucket_cache: dict[int, PackedBucket] = {}
-        self._bucket_watermark: dict[int, int] = {}
+        self._bucket_gen: dict[int, int] = {}    # gen each slab was packed at
+        self._summary_cache: SetSummary | None = None
+        self._summary_gen = -1
         self._slot_cache: dict[int, tuple[int, int]] = {}
-        self._slot_cache_size = 0
+        self._slot_gen = -1
         # populated by SetStore.restore(); None for a live-built store
         self.restore_report: dict | None = None
+
+    def _mutated(self, caps: Iterable[int], *, sums_changed: bool) -> None:
+        """Advance the mutation generation and stamp the touched buckets."""
+        self._gen += 1
+        for cap in caps:
+            self._members_gen[cap] = self._gen
+        if sums_changed:
+            self._sums_gen = self._gen
 
     # -- introspection ------------------------------------------------------
 
@@ -240,7 +317,14 @@ class SetStore:
 
     @property
     def n_sets(self) -> int:
+        """Total ids ever assigned, INCLUDING tombstoned ones (set ids are
+        never reused, so this is also the summary-stack length)."""
         return len(self._raw)
+
+    @property
+    def n_live(self) -> int:
+        """Number of live (non-deleted) sets."""
+        return self._n_live
 
     def __len__(self) -> int:
         return self.n_sets
@@ -253,11 +337,46 @@ class SetStore:
     def bucket_capacities(self) -> tuple[int, ...]:
         return tuple(sorted(self._members))
 
+    def live_mask(self) -> np.ndarray:
+        """(N,) bool — True where the set id is live, False once deleted.
+
+        THE mask stage 0 applies to its vectorized summary pass: a dead
+        set's summary row is stale (delete keeps it, update replaces it at
+        the id) and must never enter a certificate.
+        """
+        return np.asarray(self._live, bool)
+
+    def is_live(self, sid: int) -> bool:
+        return 0 <= sid < self.n_sets and self._live[sid]
+
+    def tombstone_fraction(self, cap: int) -> float:
+        """Dead-slot fraction of one bucket — the compaction trigger."""
+        slots = self._slot_live.get(cap)
+        if not slots:
+            return 0.0
+        return 1.0 - sum(slots) / len(slots)
+
     # -- ingestion ----------------------------------------------------------
 
     def add(self, points, *, validate: bool = True) -> int:
         """Store one (n, D) set; returns its corpus-wide id."""
         return self.add_many([points], validate=validate)[0]
+
+    def _check_points(self, p, *, validate: bool, what: str) -> np.ndarray:
+        p = np.asarray(p, np.float32)
+        if p.ndim != 2 or p.shape[1] != self.dim:
+            raise ValueError(
+                f"expected (n, {self.dim}) points, got shape {p.shape}"
+            )
+        if p.shape[0] < 1:
+            raise ValueError("cannot store an empty set (HD is undefined)")
+        if validate and not np.isfinite(p).all():
+            raise ValueError(
+                f"{what} contains non-finite coordinates (NaN/Inf); "
+                "certified intervals are undefined over them — clean the "
+                "data or pass validate=False"
+            )
+        return p
 
     def add_many(self, sets: Iterable, *, validate: bool = True) -> list[int]:
         """Bulk-load many sets; summaries are computed per capacity group in
@@ -270,22 +389,10 @@ class SetStore:
         poisoned-norm convention).  ``validate=False`` is the escape hatch
         for bulk loads of pre-validated data.
         """
-        arrs: list[np.ndarray] = []
-        for p in sets:
-            p = np.asarray(p, np.float32)
-            if p.ndim != 2 or p.shape[1] != self.dim:
-                raise ValueError(
-                    f"expected (n, {self.dim}) points, got shape {p.shape}"
-                )
-            if p.shape[0] < 1:
-                raise ValueError("cannot store an empty set (HD is undefined)")
-            if validate and not np.isfinite(p).all():
-                raise ValueError(
-                    f"set {len(arrs)} of this add contains non-finite "
-                    "coordinates (NaN/Inf); certified intervals are undefined "
-                    "over them — clean the data or pass validate=False"
-                )
-            arrs.append(p)
+        arrs: list[np.ndarray] = [
+            self._check_points(p, validate=validate, what=f"set {j} of this add")
+            for j, p in enumerate(sets)
+        ]
         if not arrs:
             return []
 
@@ -315,79 +422,269 @@ class SetStore:
 
         for cap, sid in membership:
             self._members.setdefault(cap, []).append(sid)
+            self._slot_live.setdefault(cap, []).append(True)
         for j, p in enumerate(arrs):
             self._raw.append(p)
+            self._live.append(True)
             for field, value in zip(SetSummary._fields, scratch[j]):
                 self._sums[field].append(value)
+        self._n_live += len(arrs)
 
-        self._summary_cache = None
+        self._mutated(by_cap, sums_changed=True)
         return ids
+
+    # -- mutation -------------------------------------------------------------
+
+    def _live_slot(self, sid: int, what: str) -> tuple[int, int]:
+        if not (0 <= sid < self.n_sets):
+            raise KeyError(f"cannot {what} unknown set id {sid}")
+        if not self._live[sid]:
+            raise KeyError(f"cannot {what} set {sid}: already deleted")
+        return self.slot_index()[sid]
+
+    def _tombstone_slot(self, cap: int, row: int) -> None:
+        """Kill one slot; patch a FRESH cached slab in place (valid→False,
+        norms→+inf, live→False) instead of forcing a full host re-pack of
+        the bucket on the next search.  Called BEFORE ``_mutated`` bumps
+        the generation; the caller re-stamps the patched cache as fresh.
+        """
+        self._slot_live[cap][row] = False
+        cached = self._bucket_cache.get(cap)
+        if cached is None or self._bucket_gen.get(cap) != self._members_gen.get(cap):
+            self._bucket_cache.pop(cap, None)   # stale anyway; repack lazily
+            self._bucket_gen.pop(cap, None)
+            return
+        live = cached.live.copy()
+        live[row] = False
+        self._bucket_cache[cap] = cached._replace(
+            points=cached.points.at[row].set(0.0),
+            valid=cached.valid.at[row].set(False),
+            sqnorms=cached.sqnorms.at[row].set(jnp.inf),
+            live=live,
+        )
+
+    def delete(self, sid: int) -> None:
+        """Tombstone set ``sid``: its id is never reused, its slab row stays
+        (all-invalid mask + poisoned norms → certified +inf through every
+        kernel gate), its summary row is masked out of stage 0 via
+        :meth:`live_mask`, and its raw points are freed.  Raises KeyError
+        for unknown or already-deleted ids.  Auto-compacts the touched
+        bucket once its tombstone fraction reaches ``compact_threshold``.
+        """
+        if not _obs.enabled():
+            return self._delete_impl(sid)
+        with _obs.span("store.delete", sid=sid) as sp:
+            cap = self._delete_impl(sid)
+            sp.set(capacity=cap, n_live=self.n_live)
+            return None
+
+    def _delete_impl(self, sid: int) -> int:
+        cap, row = self._live_slot(sid, "delete")
+        self._tombstone_slot(cap, row)
+        self._live[sid] = False
+        self._n_live -= 1
+        self._raw[sid] = np.zeros((0, self.dim), np.float32)
+        self._mutated({cap}, sums_changed=False)
+        if cap in self._bucket_cache:       # patched in place: still fresh
+            self._bucket_gen[cap] = self._members_gen[cap]
+        self._maybe_autocompact(cap)
+        return cap
+
+    def update(self, sid: int, points, *, validate: bool = True) -> None:
+        """Replace set ``sid``'s points in place (same id, new content).
+
+        Implemented as tombstone-old-slot + append-new-slot: the old slab
+        row dies exactly like a delete's, a fresh slot (possibly in a
+        different capacity bucket) carries the new points, and the summary
+        row at ``sid`` is recomputed — so stage 0 sees the new set and the
+        cascade's row-gathers skip the dead slot via ``PackedBucket.live``.
+        """
+        if not _obs.enabled():
+            return self._update_impl(sid, points, validate=validate)
+        with _obs.span("store.update", sid=sid) as sp:
+            old_cap, new_cap = self._update_impl(sid, points, validate=validate)
+            sp.set(old_capacity=old_cap, new_capacity=new_cap)
+            return None
+
+    def _update_impl(self, sid: int, points, *, validate: bool) -> tuple[int, int]:
+        p = self._check_points(p=points, validate=validate, what=f"update of set {sid}")
+        old_cap, old_row = self._live_slot(sid, "update")
+        new_cap = bucket_capacity(p.shape[0], self.min_bucket)
+        # summarize BEFORE mutating: a device failure here must leave the
+        # store exactly as it was (same staging discipline as add_many)
+        pts, val = pack_sets([p], new_cap, self.dim)
+        sums, _ = _summarize_batch(
+            jnp.asarray(pts), jnp.asarray(val), self._directions
+        )
+        sums = jax.tree_util.tree_map(np.asarray, sums)
+
+        self._tombstone_slot(old_cap, old_row)
+        self._members.setdefault(new_cap, []).append(sid)
+        self._slot_live.setdefault(new_cap, []).append(True)
+        self._raw[sid] = p
+        for field, stack in zip(SetSummary._fields, sums):
+            self._sums[field][sid] = stack[0]
+        self._mutated({old_cap, new_cap}, sums_changed=True)
+        if old_cap != new_cap and old_cap in self._bucket_cache:
+            self._bucket_gen[old_cap] = self._members_gen[old_cap]
+        self._maybe_autocompact(old_cap)
+        return old_cap, new_cap
+
+    def _maybe_autocompact(self, cap: int) -> None:
+        if self.tombstone_fraction(cap) >= self.compact_threshold:
+            self.compact(cap)
+
+    def compact(
+        self, capacity: int | None = None, *, threshold: float | None = None
+    ) -> dict[int, int]:
+        """Rewrite buckets to drop tombstoned slots; returns
+        ``{capacity: slots removed}`` for every bucket actually rewritten.
+
+        ``capacity=None`` sweeps every bucket; ``threshold`` (a tombstone
+        fraction in [0, 1]) restricts the rewrite to buckets at or above
+        it — ``None`` rewrites any bucket with at least one tombstone.
+        Set ids are untouched (only slot positions change); an emptied
+        bucket disappears from the store entirely.  Crash-consistent: the
+        ``store.compact`` injection point fires before any membership is
+        touched, so a fault leaves every tombstone intact.
+        """
+        if not _obs.enabled():
+            return self._compact_impl(capacity, threshold)
+        with _obs.span(
+            "store.compact", capacity=-1 if capacity is None else capacity
+        ) as sp:
+            removed = self._compact_impl(capacity, threshold)
+            sp.set(
+                buckets_rewritten=len(removed),
+                slots_removed=sum(removed.values()),
+            )
+            return removed
+
+    def _compact_impl(
+        self, capacity: int | None, threshold: float | None
+    ) -> dict[int, int]:
+        caps = sorted(self._members) if capacity is None else [int(capacity)]
+        targets: list[int] = []
+        for cap in caps:
+            slots = self._slot_live.get(cap)
+            if not slots:
+                continue
+            dead = len(slots) - sum(slots)
+            if dead == 0:
+                continue
+            if threshold is not None and dead / len(slots) < float(threshold):
+                continue
+            targets.append(cap)
+        if not targets:
+            return {}
+        _faults.fire(_POINT_COMPACT)
+        removed: dict[int, int] = {}
+        survivors: set[int] = set()
+        for cap in targets:
+            keep = [
+                sid for sid, ok in zip(self._members[cap], self._slot_live[cap]) if ok
+            ]
+            removed[cap] = len(self._members[cap]) - len(keep)
+            if keep:
+                self._members[cap] = keep
+                self._slot_live[cap] = [True] * len(keep)
+                survivors.add(cap)
+            else:
+                del self._members[cap]
+                del self._slot_live[cap]
+                self._members_gen.pop(cap, None)
+                self._bucket_cache.pop(cap, None)
+                self._bucket_gen.pop(cap, None)
+        self._mutated(survivors, sums_changed=False)
+        return removed
 
     # -- retrieval ----------------------------------------------------------
 
     def get(self, sid: int) -> jnp.ndarray:
         """The raw, UNPADDED (n, D) points of set ``sid`` — byte-identical
         to what was added (this is what exact refinement runs on, so the
-        cascade's results cannot depend on the padding layout)."""
+        cascade's results cannot depend on the padding layout).  Raises
+        KeyError for a deleted id (its points are freed at delete)."""
+        if 0 <= sid < self.n_sets and not self._live[sid]:
+            raise KeyError(f"set {sid} is deleted")
         return jnp.asarray(self._raw[sid])
 
     def counts(self) -> np.ndarray:
-        """(N,) int array of stored set sizes."""
+        """(N,) int array of stored set sizes (0 at tombstoned ids)."""
         return np.array([p.shape[0] for p in self._raw], np.int32)
 
     def summaries(self) -> SetSummary:
         """Stacked per-set summaries: every field gains a leading (N,) axis.
 
-        Rebuilt after adds — O(N · (D + 2m)) small-array stacking, cheap
-        next to the per-bucket point slabs (which rebuild incrementally,
-        see ``packed_buckets``).
+        Covers EVERY id ever assigned — rows at tombstoned ids are stale
+        and must be masked with :meth:`live_mask` (stage 0 does).  Rebuilt
+        when the summary stack mutated (generation stamp) — O(N · (D + 2m))
+        small-array stacking, cheap next to the per-bucket point slabs
+        (which rebuild incrementally, see ``packed_buckets``).
         """
         if self.n_sets == 0:
             raise ValueError("empty store has no summaries")
-        if self._summary_cache is None:
+        if self._summary_cache is None or self._summary_gen != self._sums_gen:
             self._summary_cache = SetSummary(
                 *(jnp.asarray(np.stack(self._sums[f])) for f in SetSummary._fields)
             )
+            self._summary_gen = self._sums_gen
         return self._summary_cache
 
     def packed_buckets(self) -> dict[int, PackedBucket]:
         """{capacity: PackedBucket} with stacked (B, capacity, ...) arrays.
 
-        Only buckets whose membership grew since the last call are
-        re-packed from the raw sets and re-uploaded (count watermark per
-        capacity) — O(bucket) per touched bucket, O(1) for the rest.
+        Only buckets whose membership mutated since the last call are
+        re-packed from the raw sets and re-uploaded (per-capacity
+        generation stamp) — O(bucket) per touched bucket, O(1) for the
+        rest.  A single-slot tombstone patches the cached slab in place
+        without re-packing.  Tombstoned slots pack as empty sets: valid
+        all-False, points zero, sqnorms +inf, ``live[row] = False``.
         """
+        empty = np.zeros((0, self.dim), np.float32)
         for cap in sorted(self._members):
+            if (
+                cap in self._bucket_cache
+                and self._bucket_gen.get(cap) == self._members_gen.get(cap)
+            ):
+                continue
             slots = self._members[cap]
-            if self._bucket_watermark.get(cap) != len(slots):
-                pts, val = pack_sets([self._raw[sid] for sid in slots], cap, self.dim)
-                sqn = np.where(val, np.sum(pts * pts, axis=-1), np.inf)
-                self._bucket_cache[cap] = PackedBucket(
-                    capacity=cap,
-                    set_ids=np.asarray(slots, np.int32),
-                    points=jnp.asarray(pts),
-                    valid=jnp.asarray(val),
-                    sqnorms=jnp.asarray(sqn.astype(np.float32)),
-                )
-                self._bucket_watermark[cap] = len(slots)
+            live = np.asarray(self._slot_live[cap], bool)
+            pts, val = pack_sets(
+                [self._raw[sid] if ok else empty for sid, ok in zip(slots, live)],
+                cap, self.dim,
+            )
+            sqn = np.where(val, np.sum(pts * pts, axis=-1), np.inf)
+            self._bucket_cache[cap] = PackedBucket(
+                capacity=cap,
+                set_ids=np.asarray(slots, np.int32),
+                points=jnp.asarray(pts),
+                valid=jnp.asarray(val),
+                sqnorms=jnp.asarray(sqn.astype(np.float32)),
+                live=live,
+            )
+            self._bucket_gen[cap] = self._members_gen.get(cap)
         return dict(self._bucket_cache)
 
     def slot_index(self) -> dict[int, tuple[int, int]]:
-        """{set id: (bucket capacity, slab row)} for every stored set.
+        """{set id: (bucket capacity, slab row)} for every LIVE stored set.
 
         The row is the set's position in its capacity's
         :class:`PackedBucket` arrays — what a batched consumer (the
         cascade's stage-2 bucket refiner) needs to ``jnp.take`` a frontier
-        straight out of the packed slabs.  Rebuilt only when membership
-        grew (same watermark discipline as ``packed_buckets``).
+        straight out of the packed slabs.  Tombstoned slots are absent:
+        an updated set maps to its new (live) slot only.  Rebuilt when the
+        store mutated (generation stamp — a count would miss delete+add
+        and update, which change the mapping without changing any count).
         """
-        if self._slot_cache_size != self.n_sets:
+        if self._slot_gen != self._gen:
             self._slot_cache = {
                 sid: (cap, row)
                 for cap, slots in self._members.items()
                 for row, sid in enumerate(slots)
+                if self._slot_live[cap][row]
             }
-            self._slot_cache_size = self.n_sets
+            self._slot_gen = self._gen
         return dict(self._slot_cache)
 
     def summarize(self, points, valid=None) -> SetSummary:
@@ -399,14 +696,17 @@ class SetStore:
 
     # -- durability ----------------------------------------------------------
     #
-    # On-disk snapshot format (see docs/api.md "Reliability contract"):
+    # On-disk snapshot format v2 (see docs/api.md "Reliability contract" and
+    # "Mutability & sharding contract"):
     #
     #     <root>/store_<gen>/              ← atomic tmp+rename (checkpoint.py)
-    #         manifest.json                ← dims, membership, per-file sha256
+    #         manifest.json                ← dims, membership, tombstones,
+    #                                        n_live, per-file sha256
     #         directions.npy               ← the (D, m) direction bank
     #         summaries.npz                ← stacked SetSummary, set-id order
+    #                                        (stale rows at tombstoned ids)
     #         bucket_<cap>.npz             ← concatenated raw points + sizes
-    #                                        + set ids for one capacity class
+    #                                        + set ids, LIVE slots only
     #     <root>/LATEST                    ← "gen", written last
     #
     # Every payload file's sha256 is recorded in the manifest; restore()
@@ -415,6 +715,9 @@ class SetStore:
     # corpus.  Raw sets round-trip byte-identical (lossless npz of the
     # float32 arrays) and summaries are restored bit-for-bit, so a restored
     # store's cascade reproduces the original's top-k exactly (gated).
+    # Bucket files carry only live slots — saving IS compaction — while the
+    # manifest's tombstone list preserves the id space, so deleted ids stay
+    # deleted (and unreusable) across a save/restore cycle.
 
     def save(self, root: str | os.PathLike) -> Path:
         """Write a durable snapshot under ``root``; returns its directory.
@@ -440,6 +743,8 @@ class SetStore:
 
         if self.n_sets == 0:
             raise ValueError("refusing to snapshot an empty store")
+        if self.n_live == 0:
+            raise ValueError("refusing to snapshot a store with no live sets")
         root = Path(root)
         latest = latest_snapshot(root)
         gen = 0 if latest is None else latest + 1
@@ -454,7 +759,11 @@ class SetStore:
             np.savez(tmp / "summaries.npz", **sums)
             files["summaries.npz"] = _sha256(tmp / "summaries.npz")
             for cap in sorted(self._members):
-                sids = self._members[cap]
+                sids = [
+                    s for s, ok in zip(self._members[cap], self._slot_live[cap]) if ok
+                ]
+                if not sids:
+                    continue
                 name = f"bucket_{cap}.npz"
                 np.savez(
                     tmp / name,
@@ -470,6 +779,8 @@ class SetStore:
                 "dim": self.dim,
                 "min_bucket": self.min_bucket,
                 "n_sets": self.n_sets,
+                "n_live": self.n_live,
+                "tombstones": [i for i, ok in enumerate(self._live) if not ok],
                 "num_directions": self.num_directions,
                 "files": files,
                 "buckets": buckets,
@@ -493,9 +804,16 @@ class SetStore:
         bucket — unless ``quarantine=True``, which drops the damaged
         bucket's sets, REINDEXES the survivors compactly (insertion
         order preserved) and recomputes their summaries from raw points;
-        the drop is recorded in ``store.restore_report``.  Corruption of
-        the direction bank or the manifest always raises: they are
-        store-wide, nothing can be quarantined around them.
+        the drop is recorded in ``store.restore_report``.  When EVERY
+        bucket is corrupt there is nothing to quarantine around: restore
+        raises a typed ``StoreCorruption("no restorable buckets…")``
+        carrying the would-be report as ``exc.restore_report`` — never an
+        empty store that explodes on first use.  Corruption of the
+        direction bank or the manifest always raises: they are store-wide.
+
+        Reads snapshot formats 1 (pre-mutability) and 2: a v1 snapshot has
+        no tombstones and restores bit-for-bit; an unknown (newer) format
+        is refused typed, never mis-parsed.
 
         Without quarantine, the restored store reproduces the original's
         search results bit for bit (raw bytes and summaries both
@@ -543,12 +861,16 @@ class SetStore:
                 f"unreadable snapshot manifest {snap / 'manifest.json'}: {e}",
                 path=str(snap / "manifest.json"),
             ) from e
-        if manifest.get("format") != SNAPSHOT_FORMAT:
+        if manifest.get("format") not in _SUPPORTED_SNAPSHOT_FORMATS:
             raise StoreCorruption(
-                f"snapshot format {manifest.get('format')!r} != {SNAPSHOT_FORMAT}",
+                f"snapshot format {manifest.get('format')!r} not supported "
+                f"by this reader (supported: {_SUPPORTED_SNAPSHOT_FORMATS})",
                 path=str(snap),
             )
         files: dict[str, str] = manifest["files"]
+        tombstones = sorted(int(t) for t in manifest.get("tombstones", []))
+        tomb = set(tombstones)
+        n_total = int(manifest["n_sets"])
 
         def _verify(name: str, *, bucket: int | None) -> Path:
             path = snap / name
@@ -585,11 +907,28 @@ class SetStore:
                 )
 
         kept_ids = sorted(raw_by_id)
-        if not dropped and kept_ids != list(range(manifest["n_sets"])):
+        if not dropped and sorted(kept_ids + tombstones) != list(range(n_total)):
             raise StoreCorruption(
-                f"snapshot set ids are not dense 0..{manifest['n_sets'] - 1}",
+                f"snapshot set ids ∪ tombstones are not dense 0..{n_total - 1}",
                 path=str(snap),
             )
+        if dropped and not kept_ids:
+            # Quarantine dropped EVERY bucket: an "empty store" is not a
+            # restore, it is a total loss — typed, with the report attached
+            # (there is no store object to carry it).
+            exc = StoreCorruption(
+                "no restorable buckets: every bucket payload failed its "
+                f"content checksum (dropped capacities: {dropped})",
+                path=str(snap),
+            )
+            exc.restore_report = {
+                "snapshot": str(snap),
+                "gen": gen,
+                "dropped_buckets": dropped,
+                "dropped_sets": n_total - len(tomb),
+                "kept_original_ids": [],
+            }
+            raise exc
 
         store = cls(
             dim=int(manifest["dim"]),
@@ -600,28 +939,36 @@ class SetStore:
             # quarantine path: survivors reindexed compactly, summaries
             # recomputed from raw points (the stored summary stack indexes
             # the ORIGINAL ids and can no longer be sliced trustworthily
-            # next to a corrupt sibling payload).
+            # next to a corrupt sibling payload).  Tombstoned ids were
+            # never saved, so the reindexed store is all-live.
             store.add_many([raw_by_id[s] for s in kept_ids], validate=False)
         else:
             sums = np.load(_verify("summaries.npz", bucket=None))
-            store._raw = [raw_by_id[s] for s in kept_ids]
+            placeholder = np.zeros((0, store.dim), np.float32)
+            store._raw = [raw_by_id.get(i, placeholder) for i in range(n_total)]
+            store._live = [i not in tomb for i in range(n_total)]
+            store._n_live = n_total - len(tomb)
             for cap_s, entry in manifest["buckets"].items():
                 blob = np.load(snap / entry["file"])
-                store._members[int(cap_s)] = [int(s) for s in blob["set_ids"]]
+                ids = [int(s) for s in blob["set_ids"]]
+                store._members[int(cap_s)] = ids
+                store._slot_live[int(cap_s)] = [True] * len(ids)
             for f in SetSummary._fields:
                 stack = sums[f]
-                if stack.shape[0] != len(kept_ids):
+                if stack.shape[0] != n_total:
                     raise StoreCorruption(
                         f"summary stack {f!r} covers {stack.shape[0]} sets, "
-                        f"expected {len(kept_ids)}",
+                        f"expected {n_total}",
                         path=str(snap / "summaries.npz"),
                     )
                 store._sums[f] = [stack[i] for i in range(stack.shape[0])]
+            store._mutated(set(store._members), sums_changed=True)
         store.restore_report = {
             "snapshot": str(snap),
             "gen": gen,
             "dropped_buckets": dropped,
-            "dropped_sets": int(manifest["n_sets"]) - len(kept_ids),
+            "dropped_sets": (n_total - len(tomb)) - len(kept_ids),
+            "tombstones": len(tomb) if not dropped else 0,
             "kept_original_ids": kept_ids if dropped else None,
         }
         return store

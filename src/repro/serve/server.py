@@ -155,6 +155,35 @@ class ProHDService:
             )
         return self.store.add(points)
 
+    def delete_set(self, sid: int) -> None:
+        """Delete one corpus set (tombstone; see SetStore.delete).
+
+        Synchronous like ``add_set`` — mutations apply immediately so every
+        search queued AFTER the call sees the new membership; searches
+        already queued in this flush window ran against whatever membership
+        flush() observes, exactly as with interleaved ``add_set`` calls.
+        Auto-compaction may rewrite the bucket under the store's
+        ``compact_threshold``.
+        """
+        if self.store is None:
+            raise ValueError("no corpus; add_set() first")
+        self.store.delete(int(sid))
+
+    def update_set(self, sid: int, points, *, validate: bool = True) -> None:
+        """Replace one corpus set's points in place (same id; see
+        SetStore.update).  Synchronous, like ``add_set``/``delete_set``."""
+        if self.store is None:
+            raise ValueError("no corpus; add_set() first")
+        self.store.update(int(sid), points, validate=validate)
+
+    def compact_store(self, capacity: int | None = None) -> dict[int, int]:
+        """Force bucket compaction now (``SetStore.compact``); returns
+        {capacity: slots_removed}.  Normally unnecessary — deletes and
+        updates auto-compact past the store's tombstone threshold."""
+        if self.store is None:
+            raise ValueError("no corpus; add_set() first")
+        return self.store.compact(capacity)
+
     def submit_search(
         self,
         query,

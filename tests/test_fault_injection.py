@@ -96,6 +96,29 @@ def test_invariant_at_every_point(point, action, corpus, tmp_path):
         np.testing.assert_array_equal(res.values, exact_top.values)
         return
 
+    if point == "store.compact":
+        # the compact point fires before ANY membership rewrite, so a raise
+        # must leave the store exactly as it was (tombstones intact); either
+        # way the surviving corpus still serves brute-force exact results
+        store = SetStore(dim=4)
+        store.add_many(sets)
+        for sid in range(0, store.n_sets, 3):
+            store.delete(sid)
+        ref = search(q, store, K, method="exact")
+        try:
+            with inject(fault):
+                store.compact(threshold=0.0)
+        except ReliabilityError:
+            # typed — and crash-consistent: nothing was rewritten
+            assert store.n_live < store.n_sets
+            assert any(
+                store.tombstone_fraction(c) > 0 for c in store.packed_buckets()
+            )
+        res = search(q, store, K)
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.values, ref.values)
+        return
+
     if point.startswith("engine."):
         # engine points only fire on the QueryEngine's async flush path —
         # route the query through it (new declare_points in
@@ -211,9 +234,14 @@ def test_corrupted_snapshot_never_serves_silently(corpus, tmp_path):
         corrupt_snapshot(snap, seed=seed)
         with pytest.raises(StoreCorruption):
             SetStore.restore(tmp_path)
-        # quarantine path: what survives is still certified-exact
-        restored = SetStore.restore(tmp_path, quarantine=True)
-        if restored.n_sets:
+        # quarantine path: what survives is still certified-exact; a total
+        # loss (every bucket corrupt) is typed too — never an empty store
+        try:
+            restored = SetStore.restore(tmp_path, quarantine=True)
+        except StoreCorruption as exc:
+            assert exc.restore_report["kept_original_ids"] == []
+            continue
+        if restored.n_live:
             res = search(q, restored, min(K, restored.n_sets))
             ref = search(q, restored, min(K, restored.n_sets), method="exact")
             np.testing.assert_array_equal(res.ids, ref.ids)
@@ -266,6 +294,19 @@ def _drive_through(point, fault, sets, q, tmp_path):
         try:
             with inject(fault):
                 SetStore.restore(tmp_path)
+        except ReliabilityError:
+            pass
+        return
+    if point == "store.compact":
+        # the point fires inside _compact_impl, which runs inside the
+        # store.compact span — the firing inherits that span's rid
+        store = SetStore(dim=4)
+        store.add_many(sets)
+        for sid in range(0, store.n_sets, 3):
+            store.delete(sid)
+        try:
+            with inject(fault):
+                store.compact(threshold=0.0)
         except ReliabilityError:
             pass
         return

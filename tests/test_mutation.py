@@ -1,0 +1,409 @@
+"""Mutable-store surface: tombstone delete/update, generational compaction,
+snapshot-format migration, and the cascade invariants they lean on.
+
+Covers the PR-10 bugfix sweep:
+
+- generation-based cache invalidation — the stale-cache regressions here
+  FAIL against the historical count-based watermarks (`packed_buckets()`
+  keyed on member count, `slot_index()` on ``sum(len(members))``,
+  ``summaries()`` on ``n_sets``): a delete + compact + same-capacity add
+  restores every count while changing membership, and an update changes
+  the slot mapping at constant ``n_sets``.
+- delete/update + compaction == brute force over the survivors, for
+  ``search`` (cascade AND method="exact"), ``search_batch`` and the
+  anytime ladder.
+- snapshot v1 → v2 migration (v1 restores bit-for-bit on the v2 reader;
+  v2 with tombstones round-trips; a v2 snapshot under a reader pinned to
+  format 1 fails typed).
+- restore(quarantine=True) with EVERY bucket corrupt raises the typed
+  ``StoreCorruption("no restorable buckets…")`` from restore itself.
+- the cascade deadline budget and ``stats["elapsed_s"]`` share ONE clock
+  (``cascade._now``), so ``elapsed ≤ deadline_s + margin`` holds for
+  degraded results.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.hd import set_distance
+from repro.index import SetStore, search, search_batch
+from repro.index import cascade as cascade_mod
+from repro.index import store as store_mod
+from repro.reliability.errors import StoreCorruption
+
+pytestmark = pytest.mark.mutation
+
+DIM = 6
+
+
+def _mk_sets(n, rng, lo=3, hi=40):
+    return [
+        rng.normal(size=(int(rng.integers(lo, hi)), DIM)).astype(np.float32)
+        for _ in range(n)
+    ]
+
+
+def _mk_store(sets, **kw):
+    store = SetStore(dim=DIM, **kw)
+    store.add_many(sets)
+    return store
+
+
+def _brute(query, store, k):
+    """Reference top-k over the LIVE sets only: ascending (value, id)."""
+    vals = {
+        sid: np.float32(
+            set_distance(query, store.get(sid), method="exact").value
+        )
+        for sid in range(store.n_sets)
+        if store.is_live(sid)
+    }
+    order = sorted(vals, key=lambda s: (vals[s], s))[:k]
+    return (
+        np.asarray(order, np.int32),
+        np.asarray([vals[s] for s in order], np.float32),
+    )
+
+
+def _assert_matches_brute(query, store, k, **kw):
+    ids, vals = _brute(query, store, k)
+    res = search(query, store, k, **kw)
+    np.testing.assert_array_equal(res.ids, ids)
+    np.testing.assert_array_equal(res.values, vals)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# tombstone delete / update / compaction correctness
+# ---------------------------------------------------------------------------
+
+
+class TestMutationCorrectness:
+    def test_delete_update_compact_matches_brute_force(self):
+        rng = np.random.default_rng(0)
+        sets = _mk_sets(80, rng)
+        store = _mk_store(sets, compact_threshold=1.0)
+        q = rng.normal(size=(7, DIM)).astype(np.float32)
+
+        for sid in range(0, 80, 3):
+            store.delete(sid)
+        for sid in (1, 4, 22):
+            store.update(
+                sid, rng.normal(size=(int(rng.integers(3, 40)), DIM)).astype(np.float32)
+            )
+        removed = store.compact()
+        assert sum(removed.values()) > 0
+
+        for kw in ({}, {"method": "exact"}, {"stage2": "sequential"}):
+            _assert_matches_brute(q, store, 10, **kw)
+
+        ids, vals = _brute(q, store, 10)
+        for r in search_batch([q, q], store, 10):
+            np.testing.assert_array_equal(r.ids, ids)
+            np.testing.assert_array_equal(r.values, vals)
+
+    def test_anytime_on_mutated_store_never_returns_dead(self):
+        rng = np.random.default_rng(1)
+        store = _mk_store(_mk_sets(40, rng), compact_threshold=1.0)
+        q = rng.normal(size=(5, DIM)).astype(np.float32)
+        for sid in range(0, 40, 2):
+            store.delete(sid)
+        res = search(q, store, 8, mode="anytime", epsilon=0.05)
+        assert all(store.is_live(int(s)) for s in res.ids)
+        # ε = 0 anytime IS the exact path — bit-for-bit over survivors
+        _assert_matches_brute(q, store, 8, mode="anytime", epsilon=0.0)
+
+    def test_auto_compaction_fires_at_threshold(self):
+        rng = np.random.default_rng(2)
+        store = SetStore(dim=DIM, compact_threshold=0.5)
+        sids = store.add_many(
+            [rng.normal(size=(5, DIM)).astype(np.float32) for _ in range(4)]
+        )
+        cap = 8
+        assert store.tombstone_fraction(cap) == 0.0
+        store.delete(sids[0])        # 1/4 < 0.5: tombstone stays
+        assert store.tombstone_fraction(cap) == 0.25
+        store.delete(sids[1])        # 2/4 ≥ 0.5: bucket auto-compacts
+        assert store.tombstone_fraction(cap) == 0.0
+        assert store.n_live == 2 and store.n_sets == 4
+
+    def test_update_moves_capacity_class(self):
+        rng = np.random.default_rng(3)
+        store = SetStore(dim=DIM, compact_threshold=1.0)
+        sid = store.add(rng.normal(size=(5, DIM)).astype(np.float32))
+        store.update(sid, rng.normal(size=(30, DIM)).astype(np.float32))
+        assert int(store.counts()[sid]) == 30
+        assert store.slot_index()[sid][0] == 32
+        q = rng.normal(size=(4, DIM)).astype(np.float32)
+        _assert_matches_brute(q, store, 1)
+
+    def test_dead_ids_reject_and_clamp(self):
+        rng = np.random.default_rng(4)
+        store = _mk_store(_mk_sets(6, rng), compact_threshold=1.0)
+        store.delete(2)
+        assert not store.is_live(2)
+        assert int(store.counts()[2]) == 0
+        with pytest.raises(KeyError):
+            store.get(2)
+        with pytest.raises(KeyError):
+            store.delete(2)
+        with pytest.raises(KeyError):
+            store.update(2, np.zeros((3, DIM), np.float32))
+        with pytest.raises(KeyError):
+            store.delete(99)
+        q = rng.normal(size=(3, DIM)).astype(np.float32)
+        res = search(q, store, 50)
+        assert res.ids.size == store.n_live == 5
+        assert res.stats["n_live"] == 5
+
+    def test_all_dead_store_raises_typed(self):
+        store = SetStore(dim=DIM, compact_threshold=1.0)
+        store.add(np.zeros((2, DIM), np.float32))
+        store.delete(0)
+        q = np.zeros((1, DIM), np.float32)
+        with pytest.raises(ValueError, match="no live sets"):
+            search(q, store, 1)
+        with pytest.raises(ValueError, match="no live sets"):
+            search_batch([q], store, 1)
+        with pytest.raises(ValueError, match="no live sets"):
+            store.save(Path("/tmp/never-written"))
+
+
+# ---------------------------------------------------------------------------
+# stale-cache regressions (the count-based-watermark bug class)
+# ---------------------------------------------------------------------------
+
+
+class TestStaleCacheRegression:
+    def test_same_count_membership_change_repacks_bucket(self):
+        """delete + compact + same-capacity add restores every COUNT the
+        old watermarks keyed on (bucket member count, total slot count,
+        n_sets is even larger) while changing membership — under the old
+        count-based invalidation the packed slab still contained the
+        deleted set and not the new one, and top-k was silently wrong."""
+        rng = np.random.default_rng(5)
+        base = _mk_sets(8, rng, lo=5, hi=8)       # all capacity-8
+        store = _mk_store(base, compact_threshold=1.0)
+        cap = 8
+
+        # materialize every cache the old code watermarked by counts
+        before = store.packed_buckets()[cap]
+        store.summaries()
+        store.slot_index()
+        n_members = len(before.set_ids)
+
+        victim = 3
+        store.delete(victim)
+        store.compact(cap)                         # member count back to N-1
+        target = np.full((6, DIM), 7.5, np.float32)  # distinctive new set
+        new_sid = store.add(target)                # count restored exactly
+        bucket = store.packed_buckets()[cap]
+        assert len(bucket.set_ids) == n_members    # the watermark's blind spot
+        assert victim not in list(bucket.set_ids)
+        assert new_sid in list(bucket.set_ids)
+
+        # wrong-top-k half of the regression: a query sitting ON the new
+        # set must retrieve it, not the stale slab's ghost membership
+        res = search(target, store, 1)
+        assert int(res.ids[0]) == new_sid
+        assert float(res.values[0]) == 0.0
+        _assert_matches_brute(target, store, 3)
+
+    def test_update_at_constant_n_sets_refreshes_slot_index_and_summaries(self):
+        """update() changes the slot mapping and the summary rows while
+        ``n_sets`` and the total slot count stay constant — the old
+        ``_slot_cache_size`` / ``_summary_cache`` watermarks both go stale."""
+        rng = np.random.default_rng(6)
+        store = _mk_store(_mk_sets(10, rng, lo=5, hi=8), compact_threshold=1.0)
+        store.slot_index()
+        store.summaries()
+        target = np.full((20, DIM), -4.0, np.float32)
+        store.update(7, target)                    # capacity 8 → 32
+        assert store.n_sets == 10                  # the blind spot
+        assert store.slot_index()[7][0] == 32
+        res = search(target, store, 1)
+        assert int(res.ids[0]) == 7 and float(res.values[0]) == 0.0
+
+    def test_untouched_bucket_identity_preserved(self):
+        """Generation stamps are per-capacity: mutating one bucket must not
+        repack (or even copy) another — the packed-slab identity is the
+        cheap-search invariant the old watermark accidentally provided."""
+        rng = np.random.default_rng(7)
+        small = [rng.normal(size=(5, DIM)).astype(np.float32) for _ in range(3)]
+        big = [rng.normal(size=(20, DIM)).astype(np.float32) for _ in range(3)]
+        store = _mk_store(small + big, compact_threshold=1.0)
+        b0 = store.packed_buckets()
+        store.delete(0)                            # capacity-8 bucket only
+        b1 = store.packed_buckets()
+        assert b1[32].points is b0[32].points      # untouched bucket: same slab
+        assert not bool(b1[8].live[0])             # mutated bucket: tombstoned
+
+
+# ---------------------------------------------------------------------------
+# snapshot v2 + migration
+# ---------------------------------------------------------------------------
+
+
+def _rewrite_as_v1(snap: Path) -> None:
+    """Rewrite a tombstone-free v2 snapshot as the v1 format (v1 manifests
+    carried no tombstones/n_live keys; payload layout is identical for
+    all-live stores; the manifest itself is not checksummed)."""
+    mpath = snap / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    assert manifest["tombstones"] == []
+    manifest["format"] = 1
+    del manifest["tombstones"]
+    del manifest["n_live"]
+    mpath.write_text(json.dumps(manifest, indent=1))
+
+
+class TestSnapshotMigration:
+    def test_v1_restores_bit_for_bit_on_v2_reader(self, tmp_path):
+        rng = np.random.default_rng(8)
+        store = _mk_store(_mk_sets(20, rng))
+        snap = store.save(tmp_path)
+        _rewrite_as_v1(snap)
+        restored = SetStore.restore(tmp_path)
+        assert restored.restore_report["tombstones"] == 0
+        assert restored.n_live == restored.n_sets == 20
+        q = rng.normal(size=(6, DIM)).astype(np.float32)
+        a = search(q, store, 5)
+        b = search(q, restored, 5)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.values, b.values)
+
+    def test_v2_with_tombstones_round_trips(self, tmp_path):
+        rng = np.random.default_rng(9)
+        store = _mk_store(_mk_sets(24, rng), compact_threshold=1.0)
+        for sid in (0, 5, 11):
+            store.delete(sid)
+        store.update(7, rng.normal(size=(9, DIM)).astype(np.float32))
+        restored = SetStore.restore(store.save(tmp_path).parent)
+        assert restored.n_sets == store.n_sets
+        assert restored.n_live == store.n_live
+        np.testing.assert_array_equal(restored.live_mask(), store.live_mask())
+        for sid in (0, 5, 11):
+            assert not restored.is_live(sid)
+        assert restored.restore_report["tombstones"] == 3
+        q = rng.normal(size=(6, DIM)).astype(np.float32)
+        a = search(q, store, 8)
+        b = search(q, restored, 8)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.values, b.values)
+
+    def test_compaction_before_save_equals_after_restore(self, tmp_path):
+        rng = np.random.default_rng(10)
+        sets = _mk_sets(16, rng)
+        q = rng.normal(size=(5, DIM)).astype(np.float32)
+
+        raw = _mk_store(sets, compact_threshold=1.0)
+        compacted = _mk_store(sets, compact_threshold=1.0)
+        for store in (raw, compacted):
+            for sid in (2, 6, 9):
+                store.delete(sid)
+        compacted.compact()  # saving IS compaction: only live slots persist
+
+        r_raw = SetStore.restore(raw.save(tmp_path / "a").parent)
+        r_comp = SetStore.restore(compacted.save(tmp_path / "b").parent)
+        a = search(q, r_raw, 6)
+        b = search(q, r_comp, 6)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.values, b.values)
+
+    def test_v2_refused_by_pinned_v1_reader(self, tmp_path, monkeypatch):
+        rng = np.random.default_rng(11)
+        store = _mk_store(_mk_sets(6, rng))
+        store.save(tmp_path)
+        monkeypatch.setattr(store_mod, "_SUPPORTED_SNAPSHOT_FORMATS", (1,))
+        with pytest.raises(StoreCorruption, match="format 2"):
+            SetStore.restore(tmp_path)
+
+    def test_unknown_future_format_refused(self, tmp_path):
+        rng = np.random.default_rng(12)
+        store = _mk_store(_mk_sets(6, rng))
+        snap = store.save(tmp_path)
+        mpath = snap / "manifest.json"
+        manifest = json.loads(mpath.read_text())
+        manifest["format"] = 99
+        mpath.write_text(json.dumps(manifest, indent=1))
+        with pytest.raises(StoreCorruption, match="format 99"):
+            SetStore.restore(tmp_path)
+
+
+class TestAllBucketsCorrupt:
+    def _corrupt_every_bucket(self, snap: Path) -> int:
+        n = 0
+        for p in snap.glob("bucket_*.npz"):
+            blob = bytearray(p.read_bytes())
+            blob[len(blob) // 2] ^= 0xFF
+            p.write_bytes(bytes(blob))
+            n += 1
+        return n
+
+    def test_quarantine_with_no_survivors_raises_typed(self, tmp_path):
+        rng = np.random.default_rng(13)
+        store = _mk_store(
+            [rng.normal(size=(5, DIM)).astype(np.float32) for _ in range(3)]
+            + [rng.normal(size=(20, DIM)).astype(np.float32) for _ in range(3)]
+        )
+        snap = store.save(tmp_path)
+        assert self._corrupt_every_bucket(snap) == 2
+        with pytest.raises(StoreCorruption, match="no restorable buckets") as ei:
+            SetStore.restore(tmp_path, quarantine=True)
+        report = ei.value.restore_report
+        assert sorted(report["dropped_buckets"]) == [8, 32]
+        assert report["dropped_sets"] == 6
+        assert report["kept_original_ids"] == []
+        # non-quarantine names the first corrupt bucket, as before
+        with pytest.raises(StoreCorruption, match="checksum"):
+            SetStore.restore(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# one clock for deadline budget and elapsed_s
+# ---------------------------------------------------------------------------
+
+
+class TestDeadlineClock:
+    def test_elapsed_and_deadline_share_one_clock(self, monkeypatch):
+        """``_Budget`` and ``stats['elapsed_s']`` both read ``cascade._now``:
+        under a fake clock ticking 10 ms per read, a degraded result's
+        elapsed can overshoot the deadline only by the bounded number of
+        clock reads between the expiring checkpoint and the final stamp —
+        the ``elapsed ≤ deadline_s + margin`` invariant.  Under the
+        historical split clocks (budget on time.monotonic, elapsed on
+        time.perf_counter) the two numbers were not comparable at all and
+        this deterministic bound did not exist."""
+        rng = np.random.default_rng(14)
+        store = _mk_store(_mk_sets(40, rng))
+        q = rng.normal(size=(5, DIM)).astype(np.float32)
+
+        tick = 0.010
+        state = {"t": 100.0}
+
+        def fake_now():
+            state["t"] += tick
+            return state["t"]
+
+        monkeypatch.setattr(cascade_mod, "_now", fake_now)
+        deadline_s = 0.05
+        res = search(q, store, 5, deadline_s=deadline_s, measure=True)
+        assert res.degraded
+        assert res.meta.elapsed_s is not None
+        # every code path between budget expiry and the elapsed stamp reads
+        # the clock a handful of times; 10 ticks of slack is generous and
+        # still far tighter than any cross-clock epoch gap
+        assert res.meta.elapsed_s <= deadline_s + 10 * tick
+
+    def test_real_clock_degraded_elapsed_close_to_deadline(self):
+        rng = np.random.default_rng(15)
+        store = _mk_store(_mk_sets(60, rng))
+        q = rng.normal(size=(5, DIM)).astype(np.float32)
+        deadline_s = 1e-4
+        res = search(q, store, 5, deadline_s=deadline_s, measure=True)
+        if not res.degraded:
+            pytest.skip("machine drained the cascade inside 100 µs")
+        # same-clock invariant, real time: one stage dispatch of slack
+        assert res.meta.elapsed_s <= deadline_s + 2.0

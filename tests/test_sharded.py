@@ -1,0 +1,169 @@
+"""shard_map corpus-parallel cascade: sharded top-k ≡ single-device top-k.
+
+Two layers:
+
+- in-session tests on a ONE-device mesh (``shards=1``): the sharded code
+  path — mesh construction, shard_map stage 0/1, round-robin lane
+  permutation, cross-shard merge — runs end to end without multi-device
+  XLA flags, and its results must be bit-for-bit the in-process cascade's.
+- an 8-device identity sweep in a subprocess (the ``test_distributed.py``
+  pattern: the host-platform device flag must never leak into the main
+  session), covering ``search`` and ``search_batch``, several shard
+  counts, and a mutated (delete/update/compact) corpus.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.index import SetStore, make_shard_context, search, search_batch
+
+pytestmark = pytest.mark.sharded
+
+REPO = Path(__file__).resolve().parent.parent
+DIM = 8
+
+
+def _corpus(n=120, seed=0):
+    rng = np.random.default_rng(seed)
+    store = SetStore(dim=DIM)
+    store.add_many(
+        [
+            rng.normal(size=(int(rng.integers(3, 60)), DIM)).astype(np.float32)
+            for _ in range(n)
+        ]
+    )
+    return store, rng
+
+
+class TestShardedSingleDevice:
+    def test_shards1_bitwise_identity_search(self):
+        store, rng = _corpus()
+        for seed in range(3):
+            q = np.random.default_rng(100 + seed).normal(size=(7, DIM)).astype(np.float32)
+            a = search(q, store, 10)
+            b = search(q, store, 10, shards=1)
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.values, b.values)
+            assert b.stats["shards"] == 1
+
+    def test_shards1_bitwise_identity_search_batch(self):
+        store, rng = _corpus(seed=1)
+        qs = [
+            rng.normal(size=(int(rng.integers(4, 12)), DIM)).astype(np.float32)
+            for _ in range(4)
+        ]
+        for x, y in zip(
+            search_batch(qs, store, 6), search_batch(qs, store, 6, shards=1)
+        ):
+            np.testing.assert_array_equal(x.ids, y.ids)
+            np.testing.assert_array_equal(x.values, y.values)
+
+    def test_shards1_on_mutated_store(self):
+        store, rng = _corpus(seed=2)
+        for sid in range(0, 120, 4):
+            store.delete(sid)
+        store.update(1, rng.normal(size=(25, DIM)).astype(np.float32))
+        store.compact()
+        q = rng.normal(size=(6, DIM)).astype(np.float32)
+        a = search(q, store, 10)
+        b = search(q, store, 10, shards=1)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.values, b.values)
+
+    def test_directed_variant(self):
+        store, rng = _corpus(seed=3, n=50)
+        q = rng.normal(size=(6, DIM)).astype(np.float32)
+        a = search(q, store, 5, variant="directed")
+        b = search(q, store, 5, variant="directed", shards=1)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.values, b.values)
+
+    def test_validation(self):
+        store, rng = _corpus(seed=4, n=20)
+        q = rng.normal(size=(4, DIM)).astype(np.float32)
+        with pytest.raises(ValueError, match="anytime"):
+            search(q, store, 3, shards=1, mode="anytime", epsilon=0.1)
+        with pytest.raises(ValueError, match="exact"):
+            search(q, store, 3, shards=1, method="exact")
+        with pytest.raises(ValueError, match="exceeds"):
+            search(q, store, 3, shards=4096)
+        with pytest.raises(ValueError, match=">= 1"):
+            make_shard_context(0)
+
+    def test_shard_merge_span_emitted(self):
+        from repro.obs import trace
+
+        store, rng = _corpus(seed=5, n=60)
+        q = rng.normal(size=(5, DIM)).astype(np.float32)
+        with trace.capture() as get_events:
+            search(q, store, 5, shards=1)
+            events = get_events()
+        spans = {e["name"]: e for e in events if e["type"] == "span"}
+        assert "cascade.shard_merge" in spans, (
+            "sharded search must emit the cascade.shard_merge span"
+        )
+        merge = spans["cascade.shard_merge"]
+        assert merge["attrs"]["shards"] == 1
+        assert merge["rid"] == spans["index.search"]["rid"]
+        assert spans["cascade.stage0"]["attrs"]["shards"] == 1
+
+
+# ---------------------------------------------------------------------------
+# 8-device identity sweep (subprocess — the flag must not leak in-session)
+# ---------------------------------------------------------------------------
+
+CHECK = r"""
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.index import SetStore, search, search_batch
+
+rng = np.random.default_rng(0)
+store = SetStore(dim=8)
+store.add_many([
+    rng.normal(size=(int(rng.integers(3, 60)), 8)).astype(np.float32)
+    for _ in range(300)
+])
+qs = [rng.normal(size=(int(rng.integers(4, 16)), 8)).astype(np.float32)
+      for _ in range(4)]
+
+for q in qs:
+    a = search(q, store, 10)
+    for p in (2, 3, 8):
+        b = search(q, store, 10, shards=p)
+        assert np.array_equal(a.ids, b.ids), p
+        assert np.array_equal(a.values, b.values), p
+
+for x, y in zip(search_batch(qs, store, 10),
+                search_batch(qs, store, 10, shards=8)):
+    assert np.array_equal(x.ids, y.ids)
+    assert np.array_equal(x.values, y.values)
+
+# mutated corpus: delete 25%, update one, compact — identity must survive
+for sid in range(0, 300, 4):
+    store.delete(sid)
+store.update(1, rng.normal(size=(33, 8)).astype(np.float32))
+store.compact()
+for q in qs[:2]:
+    a = search(q, store, 10)
+    b = search(q, store, 10, shards=8)
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.values, b.values)
+print("SHARDED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_cascade_8dev_identity():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", CHECK], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED-OK" in out.stdout
